@@ -1,0 +1,126 @@
+"""Paper Fig. 4 analogue: PD error & QoI error vs compression ratio for
+GBA / GBATC / SZ on the S3D surrogate, plus the guarantee audit.
+
+The AE is trained ONCE; GBA and GBATC share it (GBATC adds the correction
+network), matching the paper's setup where the tensor-correction network is
+trained after the AE. Error-bound sweeps reuse the fitted networks.
+
+Outputs results/bench/compression.csv with one row per (method, target).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import metrics, qoi, sz  # noqa: E402
+from repro.core.blocking import PAPER_GEOMETRY  # noqa: E402
+from repro.core.pipeline import GBATCPipeline, PipelineConfig  # noqa: E402
+from repro.data import s3d  # noqa: E402
+
+TARGETS = (3e-3, 1e-3, 3e-4, 1e-4)
+
+
+def bench_dataset(quick: bool):
+    if quick:
+        cfg = s3d.S3DConfig(n_species=12, n_time=16, height=80, width=80, seed=1)
+    else:
+        cfg = s3d.S3DConfig(n_species=16, n_time=24, height=120, width=120, seed=1)
+    return s3d.generate(cfg)
+
+
+def sz_point(data, target_nrmse, iters=7):
+    """Per-species bisection on the abs error bound to hit the NRMSE target
+    (nrmse is monotone in eb; `lo` always satisfies the target)."""
+    s = data.shape[0]
+    ranges = data.max(axis=(1, 2, 3)) - data.min(axis=(1, 2, 3))
+    lo = 1e-8 * ranges
+    hi = 0.3 * ranges
+    for _ in range(iters):
+        mid = np.sqrt(lo * hi)
+        recon, _ = sz.compress_species(data, mid)
+        per = np.array([metrics.nrmse(data[i], recon[i]) for i in range(s)])
+        lo = np.where(per <= target_nrmse, mid, lo)
+        hi = np.where(per > target_nrmse, mid, hi)
+    return sz.compress_species(data, lo)
+
+
+def run(quick: bool = False, out_csv: str = "results/bench/compression.csv"):
+    ds = bench_dataset(quick)
+    data = ds["species"]
+    temp = ds["temperature"]
+    mech = qoi.make_mechanism(data.shape[0])
+    qoi_ref = qoi.production_rates_np(mech, data, temp)
+
+    pcfg = PipelineConfig(
+        geometry=PAPER_GEOMETRY,
+        latent=36,
+        conv_channels=(16, 32) if quick else (32, 64),
+        ae_steps=250 if quick else 1200,
+        corr_steps=150 if quick else 500,
+        batch_size=96,
+        use_correction=True,
+    )
+    pipe = GBATCPipeline(pcfg, n_species=data.shape[0])
+    t0 = time.time()
+    stats = pipe.fit(data)
+    fit_s = time.time() - t0
+
+    rows = []
+
+    def qoi_err(recon):
+        q = qoi.production_rates_np(mech, np.clip(recon, 0, None), temp)
+        return metrics.mean_nrmse(qoi_ref, q)
+
+    for target in TARGETS:
+        for method, skip_corr in [("GBATC", False), ("GBA", True)]:
+            rep = pipe.compress(target_nrmse=target, skip_correction=skip_corr)
+            rows.append({
+                "method": method,
+                "target_nrmse": target,
+                "achieved_nrmse": rep.mean_nrmse,
+                "max_species_nrmse": float(rep.per_species_nrmse.max()),
+                "compression_ratio": rep.compression_ratio,
+                "qoi_nrmse": qoi_err(rep.recon),
+                "bound_satisfied": bool(rep.per_species_nrmse.max()
+                                        <= target * (1 + 1e-3)),
+                **{f"bytes_{k}": v for k, v in rep.bytes_breakdown.items()},
+            })
+            print(f"[bench] {method} target={target:.0e} "
+                  f"CR={rep.compression_ratio:.1f} "
+                  f"nrmse={rep.mean_nrmse:.2e} qoi={rows[-1]['qoi_nrmse']:.2e}")
+        recon_sz, total_sz = sz_point(data, target)
+        per = np.array([metrics.nrmse(data[i], recon_sz[i])
+                        for i in range(data.shape[0])])
+        rows.append({
+            "method": "SZ",
+            "target_nrmse": target,
+            "achieved_nrmse": float(per.mean()),
+            "max_species_nrmse": float(per.max()),
+            "compression_ratio": data.nbytes / total_sz,
+            "qoi_nrmse": qoi_err(recon_sz),
+            "bound_satisfied": bool(per.max() <= target * (1 + 1e-3)),
+        })
+        print(f"[bench] SZ    target={target:.0e} "
+              f"CR={rows[-1]['compression_ratio']:.1f} "
+              f"nrmse={rows[-1]['achieved_nrmse']:.2e} "
+              f"qoi={rows[-1]['qoi_nrmse']:.2e}")
+
+    os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    keys = sorted({k for r in rows for k in r})
+    with open(out_csv, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+    print(f"[bench] fit {fit_s:.0f}s (final AE loss {stats['final_ae_loss']:.2e})"
+          f" -> {out_csv}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,84 @@
+"""Paper Figs. 5-8 analogue: species-level fidelity at a fixed compression
+ratio — SSIM / PSNR of PD and QoI fields for a major and a minor species,
+plus mean/std temporal tracking error.
+
+Outputs results/bench/qoi.csv.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import metrics, qoi  # noqa: E402
+from repro.core.pipeline import GBATCPipeline, PipelineConfig  # noqa: E402
+from repro.data import s3d  # noqa: E402
+from benchmarks.bench_compression import sz_point  # noqa: E402
+
+
+def run(quick: bool = False, out_csv: str = "results/bench/qoi.csv"):
+    cfg = s3d.S3DConfig(n_species=12, n_time=16, height=80, width=80, seed=2)
+    ds = s3d.generate(cfg)
+    data, temp = ds["species"], ds["temperature"]
+    mech = qoi.make_mechanism(data.shape[0])
+    qoi_ref = qoi.production_rates_np(mech, data, temp)
+
+    # majors are low indices (products/reactants); minors high (radicals)
+    major, minor = 2, data.shape[0] - 1
+    target = 1e-3
+
+    pcfg = PipelineConfig(conv_channels=(16, 32),
+                          ae_steps=200 if quick else 800,
+                          corr_steps=120 if quick else 400)
+    pipe = GBATCPipeline(pcfg, n_species=data.shape[0])
+    pipe.fit(data)
+
+    recons = {
+        "GBATC": pipe.compress(target_nrmse=target).recon,
+        "GBA": pipe.compress(target_nrmse=target, skip_correction=True).recon,
+        "SZ": sz_point(data, target)[0],
+    }
+
+    rows = []
+    mid_t = data.shape[1] // 2
+    for method, rec in recons.items():
+        q = qoi.production_rates_np(mech, np.clip(rec, 0, None), temp)
+        for label, sidx in [("major", major), ("minor", minor)]:
+            rows.append({
+                "method": method,
+                "species": label,
+                "pd_ssim": metrics.ssim2d(data[sidx, mid_t], rec[sidx, mid_t]),
+                "pd_psnr": metrics.psnr(data[sidx], rec[sidx]),
+                "pd_nrmse": metrics.nrmse(data[sidx], rec[sidx]),
+                "qoi_ssim": metrics.ssim2d(qoi_ref[sidx, mid_t], q[sidx, mid_t]),
+                "qoi_psnr": metrics.psnr(qoi_ref[sidx], q[sidx]),
+                "qoi_nrmse": metrics.nrmse(qoi_ref[sidx], q[sidx]),
+                # Fig 7/8: mean/std temporal tracking (relative L2 over time)
+                "mean_track_err": float(np.linalg.norm(
+                    data[sidx].mean((1, 2)) - rec[sidx].mean((1, 2)))
+                    / (np.linalg.norm(data[sidx].mean((1, 2))) + 1e-30)),
+                "std_track_err": float(np.linalg.norm(
+                    data[sidx].std((1, 2)) - rec[sidx].std((1, 2)))
+                    / (np.linalg.norm(data[sidx].std((1, 2))) + 1e-30)),
+            })
+            print(f"[qoi] {method:6s} {label}: "
+                  f"pd_ssim={rows[-1]['pd_ssim']:.4f} "
+                  f"qoi_nrmse={rows[-1]['qoi_nrmse']:.2e} "
+                  f"std_track={rows[-1]['std_track_err']:.2e}")
+
+    os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    keys = list(rows[0].keys())
+    with open(out_csv, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    print(f"[qoi] -> {out_csv}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

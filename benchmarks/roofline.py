@@ -1,0 +1,160 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs(per device)        / peak_FLOP/s
+  memory term     = HLO_bytes(per device)        / HBM_bw
+  collective term = collective_bytes(per device) / (links * link_bw)
+
+Hardware constants (TPU v5e-class, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI (3 usable link-pairs per chip on a 2D torus
+-> we charge the *sum* of collective payload against one link, a
+conservative single-bottleneck-link model).
+
+MODEL_FLOPS = 6*N*D (dense train) / 6*N_active*D (MoE) / 2*N*D (inference
+fwd), compared against HLO_FLOPs to expose remat/padding waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SHAPES, get_config  # noqa: E402
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / flop counts
+# ---------------------------------------------------------------------------
+def param_counts(cfg) -> tuple[float, float]:
+    """(total_params, active_params) — matmul params only (no embed gather)."""
+    hd = cfg.head_dim
+    d = cfg.d_model
+    attn = d * (cfg.n_heads * hd) * 2 + d * (cfg.n_kv_heads * hd) * 2
+    if cfg.family == "ssm":
+        # rwkv6: 5 square projections + lora + channel mix
+        tm = 5 * d * d + d * (5 * cfg.rwkv_lora_mix) * 2 + d * cfg.rwkv_lora_decay * 2
+        cm = 2 * d * cfg.d_ff + d * d
+        per_layer, active_per_layer = tm + cm, tm + cm
+    elif cfg.family == "hybrid":
+        w = cfg.rglru_width or d
+        rec = 2 * d * w + 2 * w * w + w * d
+        mlp = 3 * d * cfg.d_ff
+        # per 3-block period: 2 rec + 1 attn + 3 mlp
+        per_period = 2 * rec + attn + 3 * mlp
+        n_periods = cfg.n_layers // 3
+        tail = cfg.n_layers - 3 * n_periods
+        total = per_period * n_periods + tail * (rec + mlp)
+        per_layer = total / cfg.n_layers
+        active_per_layer = per_layer
+    elif cfg.n_experts:
+        ffn_total = 3 * d * cfg.d_ff * cfg.n_experts
+        ffn_active = 3 * d * cfg.d_ff * cfg.moe_top_k
+        per_layer = attn + ffn_total
+        active_per_layer = attn + ffn_active
+    else:
+        ffn = 3 * d * cfg.d_ff
+        per_layer = attn + ffn
+        active_per_layer = per_layer
+    if cfg.is_encdec:
+        enc = (attn + 2 * d * cfg.d_ff) * cfg.n_encoder_layers
+        dec = (2 * attn + 2 * d * cfg.d_ff) * cfg.n_layers
+        total = enc + dec
+        active = total
+    else:
+        total = per_layer * cfg.n_layers
+        active = active_per_layer * cfg.n_layers
+    head = d * cfg.vocab
+    return total + head, active + head
+
+
+def model_flops(cfg, shape) -> float:
+    """Whole-cell analytic flops (all devices)."""
+    total, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 8.0 * active * tokens  # fwd+bwd+remat-fwd (full remat policy)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: one token per seq
+
+
+# ---------------------------------------------------------------------------
+def analyze(path_glob="results/dryrun/*.json"):
+    rows = []
+    for path in sorted(glob.glob(path_glob)):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag"):
+            continue  # perf-iteration variants reported separately
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        n_dev = r["n_devices"]
+        t_compute = r["flops"] / PEAK_FLOPS
+        t_memory = r["bytes_accessed"] / HBM_BW
+        t_coll = r["collectives"]["total"] / LINK_BW
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        bottleneck = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape)
+        hlo_total = r["flops"] * n_dev
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mesh": r["mesh"],
+            "kind": r["kind"],
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "bottleneck": bottleneck,
+            "model_flops": mf,
+            "hlo_flops_total": hlo_total,
+            "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+            # roofline fraction: useful model flops per step over what the
+            # chips could do in the step's critical-path time
+            "roofline_frac": (
+                mf / n_dev / PEAK_FLOPS / max(max(terms.values()), 1e-30)
+            ),
+            "temp_bytes": r["memory"].get("temp_size_in_bytes", 0),
+            "arg_bytes": r["memory"].get("argument_size_in_bytes", 0),
+            "compile_s": r["compile_s"],
+        })
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['bottleneck']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |\n"
+        )
+    return hdr + body
+
+
+def main():
+    rows = analyze()
+    print(render_markdown(rows))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{len(rows)} cells analyzed -> results/roofline.json")
+
+
+if __name__ == "__main__":
+    main()

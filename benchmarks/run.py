@@ -1,0 +1,125 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract) and
+writes detailed CSVs under results/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run           # quick mode (default)
+  PYTHONPATH=src python -m benchmarks.run --full    # paper-scale surrogate
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _timeit(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def bench_kernels(rows):
+    """Kernel micro-timings (CPU interpret mode — correctness path; TPU
+    timings come from the roofline analysis, not wall clock here)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    f = jax.jit(lambda a: ref.flash_attention_ref(a, a, a))
+    rows.append(("flash_attention_ref_512", _timeit(f, q), "oracle"))
+
+    r = jax.random.normal(key, (1, 128, 2, 64), jnp.float32)
+    w = jax.nn.sigmoid(r)
+    u = jnp.zeros((2, 64))
+    f = jax.jit(lambda a, b: ref.rwkv6_scan_ref(a, a, a, b, u)[0])
+    rows.append(("rwkv6_scan_ref_T128", _timeit(f, r, w), "oracle"))
+
+    x = jax.random.normal(key, (4096, 80), jnp.float32)
+    basis = jnp.linalg.qr(jax.random.normal(key, (80, 80)))[0]
+    f = jax.jit(ref.gbatc_project_ref)
+    rows.append(("gbatc_project_4096x80", _timeit(f, x, basis), "oracle"))
+
+
+def bench_gae(rows):
+    """Table: guarantee post-process throughput + bytes at tau sweep."""
+    from repro.core import gae
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4096, 80)).astype(np.float32)
+    xr = x + 0.05 * rng.normal(size=x.shape).astype(np.float32)
+    for tau in (0.5, 0.2):
+        us = _timeit(gae.guarantee, x, xr, tau, repeat=2)
+        _, art = gae.guarantee(x, xr, tau)
+        rows.append((f"gae_guarantee_tau{tau}", us,
+                     f"bytes={art.total_bytes()}"))
+
+
+def bench_sz(rows):
+    from repro.core import sz
+    from repro.data import s3d
+
+    ds = s3d.generate(s3d.S3DConfig(n_species=1, n_time=16, height=80,
+                                    width=80, seed=0))
+    field = ds["species"][0]
+    for eb_rel in (1e-3, 1e-4):
+        eb = eb_rel * float(field.max() - field.min())
+        us = _timeit(sz.compress, field, eb, repeat=2)
+        art = sz.compress(field, eb)
+        rows.append((f"sz_compress_eb{eb_rel:g}", us,
+                     f"CR={field.nbytes / art.payload_bytes():.1f}"))
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    rows: list[tuple] = []
+
+    bench_kernels(rows)
+    bench_gae(rows)
+    bench_sz(rows)
+
+    # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)
+    from benchmarks import bench_compression, bench_gradcomp, bench_qoi
+
+    t0 = time.time()
+    comp = bench_compression.run(quick=not full)
+    rows.append(("bench_compression_total", (time.time() - t0) * 1e6,
+                 f"rows={len(comp)}"))
+    t0 = time.time()
+    qrows = bench_qoi.run(quick=not full)
+    rows.append(("bench_qoi_total", (time.time() - t0) * 1e6,
+                 f"rows={len(qrows)}"))
+    t0 = time.time()
+    grows = bench_gradcomp.run(quick=not full)
+    rows.append(("bench_gradcomp_total", (time.time() - t0) * 1e6,
+                 f"rows={len(grows)}"))
+
+    # roofline summary if dry-run artifacts exist
+    try:
+        from benchmarks import roofline
+
+        rrows = roofline.analyze()
+        if rrows:
+            worst = min(rrows, key=lambda r: r["roofline_frac"])
+            rows.append(("roofline_cells", float(len(rrows)),
+                         f"worst={worst['arch']}/{worst['shape']}"
+                         f"@{worst['roofline_frac']:.3f}"))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("roofline_cells", 0.0, f"unavailable:{e!r}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

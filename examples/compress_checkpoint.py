@@ -1,0 +1,47 @@
+"""Checkpoint compression example: the paper's guarantee machinery applied
+to model weights — int8 block quantization + PCA-residual correction with a
+hard per-block l2 bound, Huffman-coded streams.
+
+  PYTHONPATH=src python examples/compress_checkpoint.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.registry import build_model, make_batch
+from repro.train.checkpoint import compress_state_bytes, flatten_tree
+
+
+def main():
+    cfg = get_config("llama3_2_1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    flat = flatten_tree(params)
+    raw = sum(v.nbytes for v in flat.values())
+    print(f"model: {len(flat)} tensors, {raw / 1e6:.1f} MB fp32")
+
+    print("note: random-init weights are incompressible gaussians — trained "
+          "checkpoints (structured weights) compress substantially better; "
+          "tight bounds on random data force dense PCA coefficient storage.")
+    for tau_rel in (3e-2, 1e-2, 3e-3):
+        rec, nbytes, report = compress_state_bytes(flat, tau_rel=tau_rel)
+        # quality impact: loss delta on a fixed batch
+        batch = make_batch(cfg, batch=4, seq=32, kind="train", seed=1)
+        from repro.train.checkpoint import unflatten_to
+
+        loss0 = float(jax.jit(model.loss)(params, batch))
+        loss1 = float(jax.jit(model.loss)(
+            unflatten_to(params, rec), batch))
+        print(f"tau_rel={tau_rel:.0e}: ratio {report['ratio']:.2f}x "
+              f"({nbytes / 1e6:.1f} MB), loss {loss0:.4f} -> {loss1:.4f} "
+              f"(delta {abs(loss1 - loss0):.2e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro: GBATC (guaranteed block autoencoder with tensor correlations) as a
+production-grade JAX training/inference framework.
+
+Layers:
+  repro.core      — the paper's contribution (GBA / GBATC / GAE / SZ baseline)
+  repro.nn        — minimal functional module system (params as pytrees)
+  repro.data      — synthetic S3D surrogate + token pipelines
+  repro.models    — the 10 assigned LM architectures
+  repro.parallel  — sharding rules, gradient compression
+  repro.train     — optimizer, train loop, checkpointing, fault tolerance
+  repro.serve     — prefill/decode serving with (quantized) KV caches
+  repro.kernels   — Pallas TPU kernels (+ pure-jnp oracles)
+  repro.launch    — production mesh, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config, list_configs  # noqa: F401

@@ -1,0 +1,8 @@
+# The paper's primary contribution: GBA / GBATC / GAE compression with
+# guaranteed error bounds, plus the SZ3-style baseline it is compared to.
+from repro.core.blocking import BlockGeometry, PAPER_GEOMETRY  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    GBATCPipeline,
+    PipelineConfig,
+    CompressionReport,
+)

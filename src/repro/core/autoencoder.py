@@ -1,0 +1,142 @@
+"""3D convolutional block autoencoder (paper Fig. 1).
+
+Input instances are (NB, S, bt, ph, pw) spatiotemporal blocks; species are the
+conv channel axis. Encoder: Conv3D stack (LeakyReLU) -> single FC to a 36-dim
+latent (the paper found extra FC layers do not help). Decoder mirrors with a
+FC + Conv3DTranspose stack back to S channels.
+
+The module is pure-JAX (see repro.nn); `fit` provides a jit'd Adam training
+loop used by the reproduction pipeline and the examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import layers as L
+from repro.nn.module import init_tree
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class AEConfig:
+    n_species: int
+    block: tuple[int, int, int]  # (bt, ph, pw)
+    latent: int = 36
+    conv_channels: tuple[int, ...] = (64, 128)
+    negative_slope: float = 0.2
+    dtype: Any = jnp.float32
+
+
+class BlockAutoencoder:
+    def __init__(self, cfg: AEConfig):
+        self.cfg = cfg
+        s = cfg.n_species
+        bt, ph, pw = cfg.block
+        chans = (s,) + cfg.conv_channels
+        self.enc_convs = [
+            L.conv3d(chans[i], chans[i + 1], (3, 3, 3), dtype=cfg.dtype)
+            for i in range(len(cfg.conv_channels))
+        ]
+        flat = cfg.conv_channels[-1] * bt * ph * pw
+        self.flat = flat
+        self.enc_fc = L.dense(flat, cfg.latent, dtype=cfg.dtype)
+        self.dec_fc = L.dense(cfg.latent, flat, dtype=cfg.dtype)
+        rev = tuple(reversed(chans))
+        self.dec_convs = [
+            L.conv3d_transpose(rev[i], rev[i + 1], (3, 3, 3), dtype=cfg.dtype)
+            for i in range(len(cfg.conv_channels))
+        ]
+
+    # ---- definition tree ------------------------------------------------
+    @property
+    def defs(self):
+        d = {"enc_fc": self.enc_fc.defs, "dec_fc": self.dec_fc.defs}
+        for i, c in enumerate(self.enc_convs):
+            d[f"enc_conv{i}"] = c.defs
+        for i, c in enumerate(self.dec_convs):
+            d[f"dec_conv{i}"] = c.defs
+        return d
+
+    def init(self, key):
+        return init_tree(self.defs, key)
+
+    # ---- forward ---------------------------------------------------------
+    def _to_ndhwc(self, x):
+        # (NB, S, bt, ph, pw) -> (NB, bt, ph, pw, S)
+        return jnp.transpose(x, (0, 2, 3, 4, 1))
+
+    def _from_ndhwc(self, x):
+        return jnp.transpose(x, (0, 4, 1, 2, 3))
+
+    def encode(self, params, x):
+        h = self._to_ndhwc(x)
+        for i, conv in enumerate(self.enc_convs):
+            h = L.leaky_relu(
+                conv.apply(params[f"enc_conv{i}"], h), self.cfg.negative_slope
+            )
+        h = h.reshape(h.shape[0], -1)
+        return self.enc_fc.apply(params["enc_fc"], h)
+
+    def decode(self, params, z):
+        bt, ph, pw = self.cfg.block
+        c_last = self.cfg.conv_channels[-1]
+        h = L.leaky_relu(self.dec_fc.apply(params["dec_fc"], z), self.cfg.negative_slope)
+        h = h.reshape(-1, bt, ph, pw, c_last)
+        for i, conv in enumerate(self.dec_convs):
+            h = conv.apply(params[f"dec_conv{i}"], h)
+            if i < len(self.dec_convs) - 1:
+                h = L.leaky_relu(h, self.cfg.negative_slope)
+        return self._from_ndhwc(h)
+
+    def __call__(self, params, x):
+        return self.decode(params, self.encode(params, x))
+
+    def decoder_param_bytes(self, params) -> int:
+        """Bytes of everything stored with the compressed artifact (decoder only)."""
+        dec = {k: v for k, v in params.items() if k.startswith("dec")}
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(dec))
+
+
+def fit(
+    model: BlockAutoencoder,
+    blocks: np.ndarray,
+    *,
+    steps: int = 400,
+    batch_size: int = 64,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 0,
+) -> tuple[Any, list[float]]:
+    """Train the AE with Adam on MSE. Returns (params, loss_history)."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    cfg = opt.AdamWConfig(lr=lr, total_steps=steps, warmup_steps=min(20, steps // 10))
+    state = opt.init_state(params)
+    data = jnp.asarray(blocks)
+    n = data.shape[0]
+
+    def loss_fn(p, batch):
+        rec = model(p, batch)
+        return jnp.mean(jnp.square(rec - batch))
+
+    @jax.jit
+    def step_fn(p, s, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        p, s, _ = opt.update(cfg, grads, s, p)
+        return p, s, loss
+
+    losses: list[float] = []
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, n, size=min(batch_size, n))
+        params, state, loss = step_fn(params, state, data[idx])
+        losses.append(float(loss))
+        if log_every and i % log_every == 0:
+            print(f"[ae] step {i} loss {float(loss):.3e}")
+    return params, losses

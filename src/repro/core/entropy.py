@@ -1,0 +1,172 @@
+"""Entropy coding: canonical Huffman (bit-exact) + zstd backend.
+
+The Huffman path is the paper's coder: quantized integer streams are
+frequency-counted, a canonical Huffman code is built, and the stream is
+bit-packed with a self-describing header (symbol table + code lengths).
+Encoding is vectorized in numpy (loop over code-bit position, not symbols);
+decoding uses a k-bit lookup table.
+
+``zstd_bytes`` exposes the zstandard backend used as the final lossless
+stage of the SZ baseline (matching SZ3's use of zstd).
+"""
+
+from __future__ import annotations
+
+import heapq
+import io
+import struct
+
+import numpy as np
+import zstandard
+
+_MAGIC = b"HUF1"
+_MAX_CODE_LEN = 32
+
+
+def _code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Huffman code lengths via heap merge. freqs: (K,) positive counts."""
+    k = len(freqs)
+    if k == 1:
+        return np.array([1], dtype=np.int64)
+    heap = [(int(f), i) for i, f in enumerate(freqs)]
+    heapq.heapify(heap)
+    parent = np.full(2 * k - 1, -1, dtype=np.int64)
+    next_id = k
+    while len(heap) > 1:
+        fa, a = heapq.heappop(heap)
+        fb, b = heapq.heappop(heap)
+        parent[a] = next_id
+        parent[b] = next_id
+        heapq.heappush(heap, (fa + fb, next_id))
+        next_id += 1
+    depth = np.zeros(2 * k - 1, dtype=np.int64)
+    for node in range(next_id - 2, -1, -1):
+        depth[node] = depth[parent[node]] + 1
+    lengths = depth[:k]
+    if lengths.max() > _MAX_CODE_LEN:
+        raise ValueError("Huffman code exceeds 32 bits; alphabet too skewed")
+    return lengths
+
+
+def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
+    """Canonical code values: symbols sorted by (length, symbol index)."""
+    order = np.lexsort((np.arange(len(lengths)), lengths))
+    codes = np.zeros(len(lengths), dtype=np.uint64)
+    code = 0
+    prev_len = int(lengths[order[0]])
+    for idx in order:
+        ln = int(lengths[idx])
+        code <<= ln - prev_len
+        codes[idx] = code
+        code += 1
+        prev_len = ln
+    return codes
+
+
+def huffman_encode(values: np.ndarray) -> bytes:
+    """Encode an int array. Self-describing: header + packed bits."""
+    values = np.asarray(values).ravel()
+    if values.size == 0:
+        return _MAGIC + struct.pack("<QI", 0, 0)
+    symbols, inverse = np.unique(values, return_inverse=True)
+    freqs = np.bincount(inverse)
+    lengths = _code_lengths(freqs)
+    codes = _canonical_codes(lengths)
+
+    sym_lengths = lengths[inverse]
+    sym_codes = codes[inverse]
+    offsets = np.concatenate(([0], np.cumsum(sym_lengths)[:-1]))
+    total_bits = int(sym_lengths.sum())
+
+    bits = np.zeros(total_bits, dtype=np.uint8)
+    max_len = int(lengths.max())
+    for j in range(max_len):
+        mask = sym_lengths > j
+        pos = offsets[mask] + j
+        shift = (sym_lengths[mask] - 1 - j).astype(np.uint64)
+        bits[pos] = ((sym_codes[mask] >> shift) & np.uint64(1)).astype(np.uint8)
+    payload = np.packbits(bits).tobytes()
+
+    header = io.BytesIO()
+    header.write(_MAGIC)
+    header.write(struct.pack("<QI", values.size, len(symbols)))
+    header.write(symbols.astype("<i8").tobytes())
+    header.write(lengths.astype("<u1").tobytes())
+    return header.getvalue() + payload
+
+
+def huffman_decode(blob: bytes) -> np.ndarray:
+    if blob[:4] != _MAGIC:
+        raise ValueError("bad magic")
+    n, k = struct.unpack_from("<QI", blob, 4)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    off = 4 + 12
+    symbols = np.frombuffer(blob, dtype="<i8", count=k, offset=off).copy()
+    off += 8 * k
+    lengths = np.frombuffer(blob, dtype="<u1", count=k, offset=off).astype(np.int64)
+    off += k
+    codes = _canonical_codes(lengths)
+
+    bit_arr = np.unpackbits(np.frombuffer(blob, dtype=np.uint8, offset=off))
+    # k-bit table decode
+    table_bits = min(int(lengths.max()), 16)
+    table_sym = np.full(1 << table_bits, -1, dtype=np.int64)
+    table_len = np.zeros(1 << table_bits, dtype=np.int64)
+    long_codes: dict[tuple[int, int], int] = {}
+    for i in range(k):
+        ln, cd = int(lengths[i]), int(codes[i])
+        if ln <= table_bits:
+            base = cd << (table_bits - ln)
+            table_sym[base : base + (1 << (table_bits - ln))] = i
+            table_len[base : base + (1 << (table_bits - ln))] = ln
+        else:
+            long_codes[(ln, cd)] = i
+
+    out = np.empty(n, dtype=np.int64)
+    # pad bit array so windowed reads never go OOB
+    bit_arr = np.concatenate([bit_arr, np.zeros(_MAX_CODE_LEN + table_bits, np.uint8)])
+    weights = (1 << np.arange(table_bits - 1, -1, -1)).astype(np.int64)
+    pos = 0
+    max_len = int(lengths.max())
+    for i in range(n):
+        window = int(bit_arr[pos : pos + table_bits] @ weights)
+        sym_idx = table_sym[window]
+        if sym_idx >= 0:
+            out[i] = symbols[sym_idx]
+            pos += int(table_len[window])
+        else:
+            # rare long code: extend bit by bit
+            code = window
+            ln = table_bits
+            while True:
+                ln += 1
+                code = (code << 1) | int(bit_arr[pos + ln - 1])
+                if (ln, code) in long_codes:
+                    out[i] = symbols[long_codes[(ln, code)]]
+                    pos += ln
+                    break
+                if ln > max_len:
+                    raise ValueError("corrupt Huffman stream")
+    return out
+
+
+def huffman_size_bytes(values: np.ndarray) -> int:
+    """Exact coded size without materializing the payload bit array."""
+    values = np.asarray(values).ravel()
+    if values.size == 0:
+        return 4 + 12
+    symbols, inverse = np.unique(values, return_inverse=True)
+    freqs = np.bincount(inverse)
+    lengths = _code_lengths(freqs)
+    total_bits = int((freqs * lengths).sum())
+    header = 4 + 12 + 9 * len(symbols)
+    return header + (total_bits + 7) // 8
+
+
+def zstd_bytes(data: bytes, level: int = 19) -> bytes:
+    return zstandard.ZstdCompressor(level=level).compress(data)
+
+
+def zstd_unbytes(blob: bytes) -> bytes:
+    return zstandard.ZstdDecompressor().decompress(blob)

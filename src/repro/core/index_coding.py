@@ -1,0 +1,47 @@
+"""Basis-index encoding (paper Fig. 2).
+
+Per block, the set of selected PCA basis indices is a binary membership
+sequence over basis positions. Because leading (large-eigenvalue) vectors are
+selected far more often, the sequence typically ends in a run of zeros: we
+store only the shortest prefix containing all ones, preceded by a 16-bit
+length field. Blocks with no selected coefficients cost just the length field.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def encode_indices(index_sets: list[np.ndarray]) -> bytes:
+    """Pack per-block index sets into the Fig. 2 bitstream."""
+    lengths = np.array(
+        [0 if ids.size == 0 else int(ids.max()) + 1 for ids in index_sets],
+        dtype=np.uint16,
+    )
+    total_bits = int(lengths.sum())
+    bits = np.zeros(total_bits, dtype=np.uint8)
+    cursor = 0
+    for ids, ln in zip(index_sets, lengths):
+        if ln:
+            bits[cursor + np.asarray(ids, dtype=np.int64)] = 1
+            cursor += int(ln)
+    header = np.asarray(len(index_sets), dtype="<u4").tobytes()
+    return header + lengths.astype("<u2").tobytes() + np.packbits(bits).tobytes()
+
+
+def decode_indices(blob: bytes) -> list[np.ndarray]:
+    n = int(np.frombuffer(blob, dtype="<u4", count=1)[0])
+    lengths = np.frombuffer(blob, dtype="<u2", count=n, offset=4).astype(np.int64)
+    bit_payload = np.frombuffer(blob, dtype=np.uint8, offset=4 + 2 * n)
+    bits = np.unpackbits(bit_payload)
+    out: list[np.ndarray] = []
+    cursor = 0
+    for ln in lengths:
+        out.append(np.nonzero(bits[cursor : cursor + ln])[0].astype(np.int64))
+        cursor += int(ln)
+    return out
+
+
+def encoded_size_bytes(index_sets: list[np.ndarray]) -> int:
+    total_bits = sum(0 if ids.size == 0 else int(ids.max()) + 1 for ids in index_sets)
+    return 4 + 2 * len(index_sets) + (total_bits + 7) // 8

@@ -1,0 +1,31 @@
+"""Residual PCA (paper §II-A).
+
+The guarantee post-process runs PCA on the residual matrix R (NB x D, blocks
+as instances). D is small (paper: 80) while NB is large, so we form the D x D
+Gram matrix in float64 and eigendecompose — O(NB*D^2) flops, numerically
+comfortable, and exactly orthonormal basis vectors (required for the
+cumulative-energy argument that makes Algorithm 1 vectorizable).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def pca_basis(residual: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Return (U, eigvals) with columns of U sorted by descending eigenvalue.
+
+    residual: (NB, D). The paper does not center the residual before PCA
+    (Algorithm 1 projects raw residuals), so neither do we — U must span the
+    residuals themselves for ``x^R + U c`` to reconstruct exactly.
+    """
+    r = residual.astype(np.float64)
+    gram = r.T @ r
+    eigvals, eigvecs = np.linalg.eigh(gram)
+    order = np.argsort(eigvals)[::-1]
+    return eigvecs[:, order], np.maximum(eigvals[order], 0.0)
+
+
+def project(residual: np.ndarray, basis: np.ndarray) -> np.ndarray:
+    """c = U^T r for each block row: (NB, D) @ (D, D) -> (NB, D)."""
+    return residual.astype(np.float64) @ basis

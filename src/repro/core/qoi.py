@@ -1,0 +1,124 @@
+"""Quantity-of-interest surrogate: Arrhenius net production rates.
+
+The paper's QoI is the per-species net production rate computed by Cantera
+from the reconstructed mass fractions — an O(N) nonlinear map through
+forward/reverse Arrhenius rate constants. Cantera is unavailable offline, so
+we implement the same mathematical structure directly in JAX:
+
+  k_f,r = A_r * T^b_r * exp(-Ea_r / (R T))
+  k_r,r = k_f,r / Keq_r,  Keq_r = exp(dS_r/R - dH_r/(R T))
+  rate_r = k_f,r * prod_i [X_i]^nu'_ir  -  k_r,r * prod_j [X_j]^nu''_jr
+  wdot_s = sum_r (nu''_sr - nu'_sr) * rate_r,   [X_i] = rho Y_i / W_i
+
+with a randomly generated (but fixed-seed) elementary mechanism over the S
+species. This preserves exactly the error-amplification behaviour the paper
+studies: minor-species PD errors blow up through the exponentials and
+high-order concentration products.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+R_GAS = 8.314462618  # J/(mol K)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mechanism:
+    nu_fwd: np.ndarray  # (S, NR) reactant stoichiometry
+    nu_rev: np.ndarray  # (S, NR) product stoichiometry
+    log_a: np.ndarray  # (NR,)
+    beta: np.ndarray  # (NR,)
+    ea: np.ndarray  # (NR,) J/mol
+    ds: np.ndarray  # (NR,) J/(mol K)
+    dh: np.ndarray  # (NR,) J/mol
+    mol_weight: np.ndarray  # (S,) kg/mol
+    density: float = 1.0  # kg/m^3 (constant-volume surrogate)
+
+
+def make_mechanism(n_species: int, n_reactions: int | None = None, seed: int = 7) -> Mechanism:
+    rng = np.random.default_rng(seed)
+    nr = n_reactions or 4 * n_species
+    nu_f = np.zeros((n_species, nr))
+    nu_r = np.zeros((n_species, nr))
+    for r in range(nr):
+        reactants = rng.choice(n_species, size=rng.integers(1, 3), replace=False)
+        products = rng.choice(
+            [s for s in range(n_species) if s not in reactants],
+            size=rng.integers(1, 3),
+            replace=False,
+        )
+        nu_f[reactants, r] = rng.integers(1, 3, size=len(reactants))
+        nu_r[products, r] = rng.integers(1, 3, size=len(products))
+    return Mechanism(
+        nu_fwd=nu_f,
+        nu_rev=nu_r,
+        log_a=rng.uniform(2.0, 10.0, nr),  # log10 pre-exponential
+        beta=rng.uniform(-0.5, 1.5, nr),
+        ea=rng.uniform(2.0e4, 1.6e5, nr),
+        ds=rng.uniform(-40.0, 40.0, nr),
+        dh=rng.uniform(-2.0e5, 2.0e5, nr),
+        mol_weight=rng.uniform(0.002, 0.12, n_species),
+    )
+
+
+def production_rates(mech: Mechanism, y: jax.Array, temperature: jax.Array) -> jax.Array:
+    """wdot for each species. y: (..., S) mass fractions; T: (...)."""
+    conc = mech.density * y / jnp.asarray(mech.mol_weight)  # (..., S)
+    log_conc = jnp.log(jnp.clip(conc, 1e-30))  # fp32-safe floor
+    t = temperature[..., None]  # (..., 1) broadcast over reactions
+    log_kf = (
+        jnp.asarray(mech.log_a) * jnp.log(10.0)
+        + jnp.asarray(mech.beta) * jnp.log(t)
+        - jnp.asarray(mech.ea) / (R_GAS * t)
+    )
+    log_keq = jnp.asarray(mech.ds) / R_GAS - jnp.asarray(mech.dh) / (R_GAS * t)
+    log_kr = log_kf - log_keq
+    # product over species of [X]^nu  ->  exp(nu^T log[X]); clamped (see
+    # _rates_jit)
+    fwd = jnp.exp(jnp.clip(log_kf + log_conc @ jnp.asarray(mech.nu_fwd),
+                           -700.0, 700.0))
+    rev = jnp.exp(jnp.clip(log_kr + log_conc @ jnp.asarray(mech.nu_rev),
+                           -700.0, 700.0))
+    rate = fwd - rev  # (..., NR)
+    return rate @ jnp.asarray((mech.nu_rev - mech.nu_fwd).T)  # (..., S)
+
+
+@jax.jit
+def _rates_jit(nu_f, nu_r, log_a, beta, ea, ds, dh, inv_w, rho, y, t):
+    conc = rho * y * inv_w
+    log_conc = jnp.log(jnp.clip(conc, 1e-30))  # fp32-safe floor
+    tt = t[..., None]
+    log_kf = log_a * jnp.log(10.0) + beta * jnp.log(tt) - ea / (R_GAS * tt)
+    log_kr = log_kf - (ds / R_GAS - dh / (R_GAS * tt))
+    # clamp exponents: physically k*prod[X] stays finite; random mechanisms
+    # can otherwise overflow fp64 (exp(>709)) and poison the NRMSE metric
+    fwd = jnp.exp(jnp.clip(log_kf + log_conc @ nu_f, -700.0, 700.0))
+    rev = jnp.exp(jnp.clip(log_kr + log_conc @ nu_r, -700.0, 700.0))
+    return (fwd - rev) @ (nu_r - nu_f).T
+
+
+def production_rates_np(mech: Mechanism, y: np.ndarray, temperature: np.ndarray) -> np.ndarray:
+    """Batched host entry point: y (S, T, H, W), temperature (T, H, W)."""
+    s = y.shape[0]
+    yy = np.moveaxis(y, 0, -1).reshape(-1, s).astype(np.float64)
+    tt = temperature.reshape(-1).astype(np.float64)
+    out = _rates_jit(
+        jnp.asarray(mech.nu_fwd),
+        jnp.asarray(mech.nu_rev),
+        jnp.asarray(mech.log_a),
+        jnp.asarray(mech.beta),
+        jnp.asarray(mech.ea),
+        jnp.asarray(mech.ds),
+        jnp.asarray(mech.dh),
+        jnp.asarray(1.0 / mech.mol_weight),
+        mech.density,
+        jnp.asarray(yy),
+        jnp.asarray(tt),
+    )
+    out = np.asarray(out)
+    return np.moveaxis(out.reshape(temperature.shape + (s,)), -1, 0)

@@ -1,0 +1,33 @@
+"""Uniform mid-tread quantization (paper §II-A).
+
+Values are binned with bin size ``d`` and represented by the bin center:
+``q = round(x / d)``; ``x_hat = q * d``; worst-case error d/2 per scalar.
+The integer streams feed the entropy coder.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def quantize(x: np.ndarray, bin_size: float) -> np.ndarray:
+    if bin_size <= 0:
+        raise ValueError("bin_size must be positive")
+    return np.rint(x / bin_size).astype(np.int64)
+
+
+def dequantize(q: np.ndarray, bin_size: float) -> np.ndarray:
+    # float64 so the bin/2 bound is exact; callers cast on storage.
+    return q.astype(np.float64) * bin_size
+
+
+def quantize_roundtrip(x: np.ndarray, bin_size: float) -> tuple[np.ndarray, np.ndarray]:
+    q = quantize(x, bin_size)
+    return q, dequantize(q, bin_size)
+
+
+def per_channel_scale(x: np.ndarray, axis: int, n_bits: int = 8) -> np.ndarray:
+    """Symmetric per-channel scale for int quantization (KV/grad compression)."""
+    amax = np.max(np.abs(x), axis=axis, keepdims=True)
+    qmax = float(2 ** (n_bits - 1) - 1)
+    return np.maximum(amax, 1e-30) / qmax

@@ -1,0 +1,69 @@
+"""Pallas fused block quantize->dequantize (TPU target; interpret-validated).
+
+The GBATC pipeline quantizes latents/coefficients (host entropy coding
+follows); the serving path quantizes KV blocks; gradient compression
+quantizes bucket blocks. All three share this bandwidth-bound primitive:
+per-block symmetric scale + round + clamp + dequant in one VMEM pass (a
+single HBM round-trip instead of three).
+
+Grid tiles the leading axis; each program handles a (rows, K) tile and its
+K/block sub-blocks entirely in registers/VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bq_kernel(x_ref, out_ref, scale_ref, *, n_bits, block):
+    x = x_ref[...].astype(jnp.float32)  # (rows, K)
+    rows, k = x.shape
+    xb = x.reshape(rows, k // block, block)
+    qmax = float(2 ** (n_bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True), 1e-30) / qmax
+    q = jnp.clip(jnp.round(xb / scale), -qmax - 1.0, qmax)
+    out_ref[...] = (q * scale).reshape(rows, k).astype(out_ref.dtype)
+    scale_ref[...] = scale[..., 0]
+
+
+def block_quant(
+    x: jax.Array,  # (..., K), K % block == 0
+    *,
+    n_bits: int = 8,
+    block: int = 64,
+    rows_per_tile: int = 256,
+    interpret: bool = False,
+):
+    """Returns (dequantized x, per-block scales (..., K/block))."""
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    assert k % block == 0, (k, block)
+    rows = int(x.size // k)
+    xr = x.reshape(rows, k)
+    rt = min(rows_per_tile, rows)
+    pad = -rows % rt
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    rp = rows + pad
+
+    out, scale = pl.pallas_call(
+        functools.partial(_bq_kernel, n_bits=n_bits, block=block),
+        grid=(rp // rt,),
+        in_specs=[pl.BlockSpec((rt, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rt, k), lambda i: (i, 0)),
+            pl.BlockSpec((rt, k // block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, k), x.dtype),
+            jax.ShapeDtypeStruct((rp, k // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr)
+    out = out[:rows].reshape(orig_shape)
+    scale = scale[:rows].reshape(orig_shape[:-1] + (k // block,))
+    return out, scale

@@ -1,0 +1,65 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (kernel body executes in Python for
+validation) and False on TPU (compiled). Models select the kernel path via
+``ArchConfig.use_kernels``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.block_quant import block_quant
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gbatc_project import gbatc_correct, gbatc_project
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention_op(q, k, v, *, causal=True, window=0, block_q=128,
+                       block_k=128):
+    return flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan_op(r, k, v, w, u, s0=None, *, chunk=32):
+    return rwkv6_scan(r, k, v, w, u, s0, chunk=chunk,
+                      interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w"))
+def rglru_scan_op(a, b, h0=None, *, chunk=64, block_w=128):
+    return rglru_scan(a, b, h0, chunk=chunk, block_w=block_w,
+                      interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "block",
+                                             "rows_per_tile"))
+def block_quant_op(x, *, n_bits=8, block=64, rows_per_tile=256):
+    return block_quant(x, n_bits=n_bits, block=block,
+                       rows_per_tile=rows_per_tile,
+                       interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_tile",))
+def gbatc_project_op(residual, basis, *, rows_per_tile=512):
+    return gbatc_project(residual, basis, rows_per_tile=rows_per_tile,
+                         interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_tile",))
+def gbatc_correct_op(x_rec, coeffs, mask, basis, *, rows_per_tile=512):
+    return gbatc_correct(x_rec, coeffs, mask, basis,
+                         rows_per_tile=rows_per_tile,
+                         interpret=_default_interpret())

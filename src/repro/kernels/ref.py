@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``<name>`` kernel in this package must match ``ref.<name>_ref`` across
+the shape/dtype sweeps in tests/test_kernels.py (interpret mode on CPU,
+compiled mode on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, H, Tq, D); k, v: (B, H, Tk, D) (heads already expanded).
+    Returns (B, H, Tq, D)."""
+    b, h, tq, d = q.shape
+    tk = k.shape[2]
+    scale = 1.0 / np.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """WKV6 recurrence. r,k,v,w: (B, T, H, N); u: (H, N).
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+    Returns (out (B,T,H,N), S_T (B,H,N,N))."""
+    b, t, h, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w))
+    s, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3), s
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.
+    a, b: (B, T, W); h0: (B, W). Returns (h (B,T,W), h_T (B,W))."""
+    bb, t, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bb, w), jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    xs = (a.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32))
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return hs.transpose(1, 0, 2), hT
+
+
+def block_quant_ref(x, n_bits=8, block=64):
+    """Per-block symmetric quantize -> dequantize along the last axis.
+    x: (..., K) with K % block == 0. Returns (dequantized, scales)."""
+    *lead, kdim = x.shape
+    xb = x.reshape(*lead, kdim // block, block).astype(jnp.float32)
+    qmax = float(2 ** (n_bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True), 1e-30) / qmax
+    q = jnp.clip(jnp.round(xb / scale), -qmax - 1, qmax)
+    out = (q * scale).reshape(x.shape).astype(x.dtype)
+    return out, scale[..., 0]
+
+
+def gbatc_project_ref(residual, basis):
+    """PCA projection c = R @ U. residual: (NB, D); basis: (D, D)."""
+    return residual.astype(jnp.float32) @ basis.astype(jnp.float32)
+
+
+def gbatc_correct_ref(x_rec, coeffs, mask, basis):
+    """x^G = x^R + (c * mask) @ U^T."""
+    return x_rec.astype(jnp.float32) + (
+        coeffs.astype(jnp.float32) * mask.astype(jnp.float32)
+    ) @ basis.astype(jnp.float32).T

@@ -1,0 +1,247 @@
+"""Shared model machinery: rotary embeddings (standard / partial / M-RoPE),
+memory-efficient chunked attention (online softmax, GQA, causal + sliding
+window), and small helpers.
+
+Attention never materializes the full (T x T) score matrix: queries are
+processed in chunks under ``jax.lax.scan`` with running (max, sum, acc)
+statistics — the XLA-level equivalent of FlashAttention. The Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU hot path; this module is the
+portable path used by CPU smoke tests and the multi-pod dry-run (Pallas does
+not lower on the CPU backend), selected via ``use_kernels`` in the model
+configs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float, rope_frac: float = 1.0) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension (d_rot = d*frac)."""
+    d_rot = int(d_head * rope_frac)
+    d_rot -= d_rot % 2
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (B, T, H, D)
+    positions: jax.Array,  # (B, T) int32
+    theta: float,
+    rope_frac: float = 1.0,
+) -> jax.Array:
+    inv = rope_freqs(x.shape[-1], theta, rope_frac)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, T, D_rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    d_rot = 2 * inv.shape[0]
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if x_pass.shape[-1] else out
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, T, H, D)
+    positions: jax.Array,  # (3, B, T) — temporal / height / width streams
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head dim's rotary halves are split into
+    3 sections, each rotated by its own position stream (t/h/w). For pure
+    text, all three streams are equal and M-RoPE reduces to RoPE."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    # section s covers inv-freq slots [off_s, off_s + sections[s])
+    sec = np.asarray(sections)
+    assert sec.sum() == d // 2, (sections, d)
+    sec_id = jnp.asarray(np.repeat(np.arange(3), sec))  # (d/2,)
+    ang_all = positions[..., None].astype(jnp.float32) * inv  # (3, B, T, d/2)
+    idx = jnp.broadcast_to(
+        sec_id[None, None, None, :], (1,) + ang_all.shape[1:]
+    )
+    ang = jnp.take_along_axis(ang_all, idx, axis=0)[0]  # (B, T, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / (10000 ** (dim / d))
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, T, Hkv, D) -> (B, T, Hkv*n_rep, D)."""
+    if n_rep == 1:
+        return x
+    b, t, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, t, h, n_rep, d)).reshape(
+        b, t, h * n_rep, d
+    )
+
+
+def _direct_attention(q, k, v, *, causal, window, q_offset):
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _chunked_attention(q, k, v, *, causal, window, q_offset, q_chunk, k_chunk):
+    """Online-softmax attention: scan over k-chunks inside a scan over
+    q-chunks. Peak live memory O(q_chunk * k_chunk) per head."""
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    n_q = -(-tq // q_chunk)
+    pad_q = n_q * q_chunk - tq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    n_k = -(-tk // k_chunk)
+    pad_k = n_k * k_chunk - tk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qs = q.reshape(b, n_q, q_chunk, h, d).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,d)
+    ks = k.reshape(b, n_k, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, n_k, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+
+    def q_body(_, qi_qc):
+        qi, qc = qi_qc
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_body(carry, ki_kc_vc):
+            ki, kc, vc = ki_kc_vc
+            m, l, acc = carry
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc).astype(jnp.float32) * scale
+            mask = k_pos[None, :] < tk  # k padding
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, q_chunk), jnp.float32),
+            jnp.zeros((b, h, q_chunk, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, init, (jnp.arange(n_k), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(n_q), qs))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, n_q * q_chunk, h, d)
+    return out[:, :tq]
+
+
+def attention(
+    q: jax.Array,  # (B, Tq, H, D)
+    k: jax.Array,  # (B, Tk, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """GQA attention; memory-efficient path for long sequences."""
+    n_rep = q.shape[2] // k.shape[2]
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    tq, tk = q.shape[1], k.shape[1]
+    if tq * tk <= 4096 * 4096 and tq <= 4096:
+        return _direct_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+    return _chunked_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, q_chunk=q_chunk, k_chunk=k_chunk)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, L, Hkv, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # scalar int — number of valid cache positions
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token decode against a (possibly longer-than-valid) KV cache."""
+    n_rep = q.shape[2] // k_cache.shape[2]
+    k = repeat_kv(k_cache, n_rep)
+    v = repeat_kv(v_cache, n_rep)
+    d = q.shape[-1]
+    scale = 1.0 / np.sqrt(d)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos < cache_len
+    if window > 0:
+        mask &= kpos > cache_len - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint that no-ops outside a mesh context — the
+    hillclimb lever for pinning activation layouts (EXPERIMENTS.md §Perf)."""
+    try:
+        from jax.sharding import PartitionSpec
+
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+    except Exception:  # noqa: BLE001 — no mesh (smoke tests) -> identity
+        return x
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE. logits (B, T, V) possibly vocab-sharded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,88 @@
+"""Architecture registry: config -> model instance + dry-run input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given cell — weak-type-correct, shardable, and never
+allocating device memory (the multi-pod dry-run contract). ``make_batch``
+materializes small real batches for CPU smoke tests/examples.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+from repro.models.rglru import RecurrentGemma
+from repro.models.rwkv6 import RWKV6
+from repro.models.transformer import DecoderLM
+from repro.models.whisper import Whisper
+
+ARCH_REGISTRY = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "ssm": RWKV6,
+    "hybrid": RecurrentGemma,
+    "audio": Whisper,
+}
+
+
+def build_model(cfg: ArchConfig):
+    return ARCH_REGISTRY[cfg.family](cfg)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec | str) -> dict[str, Any]:
+    """Dry-run inputs for (arch, shape) — see DESIGN.md for cell semantics.
+
+    train  : {tokens, labels [, frames/patches]}
+    prefill: {tokens [, frames/patches]}
+    decode : {tokens (B,1)} — KV/state cache specs come from
+             ``model.cache_specs`` (see launch/dryrun.py).
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, t = shape.global_batch, shape.seq_len
+    itok = jnp.int32
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = _sds((b, t), itok)
+        specs["labels"] = _sds((b, t), itok)
+    elif shape.kind == "prefill":
+        specs["tokens"] = _sds((b, t), itok)
+    else:  # decode
+        specs["tokens"] = _sds((b, 1), itok)
+    if cfg.is_encdec and shape.kind != "decode":
+        specs["frames"] = _sds((b, cfg.n_audio_ctx, cfg.d_model), cfg.dtype)
+    if cfg.is_vlm and shape.kind != "decode":
+        specs["patches"] = _sds((b, cfg.n_patches, cfg.d_patch), jnp.float32)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, *, batch: int, seq: int, kind: str = "train",
+               seed: int = 0) -> dict[str, Any]:
+    """Small concrete batch for smoke tests — mirrors input_specs."""
+    rng = np.random.default_rng(seed)
+    out: dict[str, Any] = {}
+    if kind == "decode":
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+        if kind == "train":
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+    if cfg.is_encdec and kind != "decode":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_audio_ctx, cfg.d_model)), cfg.dtype)
+    if cfg.is_vlm and kind != "decode":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_patches, cfg.d_patch)), jnp.float32)
+    return out

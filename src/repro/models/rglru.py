@@ -1,0 +1,393 @@
+"""RecurrentGemma / Griffin [arXiv:2402.19427] hybrid model.
+
+26 residual blocks, pattern (recurrent, recurrent, attention) — attention
+every 3rd block (local sliding-window MQA, window 2048). Recurrent block:
+two input branches (GeLU gate | conv1d(4) -> RG-LRU), elementwise product,
+output projection. RG-LRU:
+
+  r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)          # input gate
+  a_t = exp(-c * softplus(L) * r_t)     # data-dependent decay, c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence is evaluated with ``jax.lax.associative_scan``
+(log-depth parallel prefix) in sequence mode — this is what keeps the
+long_500k cell sub-quadratic and scan-parallel — and as a single fused step
+in decode mode. The MLP is GeGLU.
+
+Layer stacking: scan over 8 stacked (rec, rec, attn) periods + an unrolled
+(rec, rec) tail = 26 blocks.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.transformer import (
+    _apply_norm,
+    _attn_defs,
+    _attn_forward,
+    _norm_defs,
+    _project_qkv,
+    _rope_qk,
+    _stack_defs,
+)
+from repro.nn.module import Param, init_tree, pspec_tree, spec_tree
+
+_C = 8.0  # Griffin's fixed decay sharpness
+
+
+def _lru_init(key, shape, dtype):
+    # Lambda initialized so a = sigma(L)^c spreads over (0.9, 0.999)
+    u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+    a = u ** (1.0 / _C)
+    return jnp.log(a / (1.0 - a)).astype(dtype)
+
+
+def _rec_defs(cfg: ArchConfig):
+    d, w, dt = cfg.d_model, cfg.rglru_width or cfg.d_model, cfg.dtype
+    cw = cfg.conv1d_width
+    return {
+        "w_gate": Param((d, w), dt, "fan_in", ("embed", "mlp")),
+        "w_in": Param((d, w), dt, "fan_in", ("embed", "mlp")),
+        "conv_w": Param((cw, w), dt, "fan_in", (None, "mlp")),
+        "conv_b": Param((w,), dt, "zeros", ("mlp",)),
+        "lru_lambda": Param((w,), jnp.float32, _lru_init, ("mlp",)),
+        "wa": Param((w, w), dt, "fan_in", ("mlp", None)),
+        "ba": Param((w,), jnp.float32, "zeros", ("mlp",)),
+        "wx": Param((w, w), dt, "fan_in", ("mlp", None)),
+        "bx": Param((w,), jnp.float32, "zeros", ("mlp",)),
+        "w_out": Param((w, d), dt, "fan_in", ("mlp", "embed")),
+    }
+
+
+def _mlp_defs(cfg: ArchConfig):
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    return {
+        "wg": Param((d, f), dt, "fan_in", ("embed", "mlp")),
+        "wu": Param((d, f), dt, "fan_in", ("embed", "mlp")),
+        "wd": Param((f, d), dt, "fan_in", ("mlp", "embed")),
+    }
+
+
+def _geglu(p, x):
+    return (jax.nn.gelu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def _rglru_seq(p, x, h0):
+    """x: (B, T, W) gated input; h0: (B, W). Associative scan over time."""
+    r = jax.nn.sigmoid((x @ p["wa"]).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid((x @ p["wx"]).astype(jnp.float32) + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lru_lambda"]) * r  # (B,T,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+
+    # h_t = a_t h_{t-1} + g_t  -> parallel prefix over (a, g)
+    def combine(lhs, rhs):
+        a_l, g_l = lhs
+        a_r, g_r = rhs
+        return a_l * a_r, g_l * a_r + g_r
+
+    a_seq, g_seq = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = g_seq + a_seq * h0[:, None, :]
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def _conv1d_seq(p, x, tail):
+    """Causal depthwise conv, width cw. tail: (B, cw-1, W) left context."""
+    cw = p["conv_w"].shape[0]
+    xx = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(
+        xx[:, i : i + x.shape[1], :] * p["conv_w"][i] for i in range(cw)
+    )
+    return out + p["conv_b"], xx[:, -(cw - 1) :, :]
+
+
+def _rec_block_seq(p, x, state):
+    """state: {h: (B,W), conv: (B,cw-1,W)}."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    u, conv_tail = _conv1d_seq(p, u, state["conv"])
+    h, h_last = _rglru_seq(p, u, state["h"])
+    out = (gate * h) @ p["w_out"]
+    return out, {"h": h_last.astype(jnp.float32), "conv": conv_tail}
+
+
+def _rec_block_step(p, x, state):
+    """Single-token decode step. x: (B, 1, D)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    cw = p["conv_w"].shape[0]
+    xx = jnp.concatenate([state["conv"].astype(x.dtype), u], axis=1)  # (B,cw,W)
+    u = sum(xx[:, i : i + 1, :] * p["conv_w"][i] for i in range(cw)) + p["conv_b"]
+    r = jax.nn.sigmoid((u @ p["wa"]).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid((u @ p["wx"]).astype(jnp.float32) + p["bx"])
+    a = jnp.exp(-_C * jax.nn.softplus(p["lru_lambda"]) * r)
+    h = a[:, 0] * state["h"] + (
+        jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    )[:, 0]
+    out = (gate * h[:, None, :].astype(x.dtype)) @ p["w_out"]
+    return out, {"h": h, "conv": xx[:, 1:, :]}
+
+
+class RecurrentGemma:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.attn_period == 3
+        self.n_periods = cfg.n_layers // 3  # full (rec, rec, attn) periods
+        self.n_tail = cfg.n_layers - 3 * self.n_periods  # trailing rec blocks
+
+    # ---- defs ---------------------------------------------------------
+    def _period_defs(self):
+        cfg = self.cfg
+        return {
+            "ln_r1": _norm_defs(cfg),
+            "rec1": _rec_defs(cfg),
+            "ln_m1": _norm_defs(cfg),
+            "mlp1": _mlp_defs(cfg),
+            "ln_r2": _norm_defs(cfg),
+            "rec2": _rec_defs(cfg),
+            "ln_m2": _norm_defs(cfg),
+            "mlp2": _mlp_defs(cfg),
+            "ln_a": _norm_defs(cfg),
+            "attn": _attn_defs(cfg),
+            "ln_m3": _norm_defs(cfg),
+            "mlp3": _mlp_defs(cfg),
+        }
+
+    def _tail_defs(self):
+        cfg = self.cfg
+        d = {}
+        for i in range(self.n_tail):
+            d[f"ln_r{i}"] = _norm_defs(cfg)
+            d[f"rec{i}"] = _rec_defs(cfg)
+            d[f"ln_m{i}"] = _norm_defs(cfg)
+            d[f"mlp{i}"] = _mlp_defs(cfg)
+        return d
+
+    @property
+    def defs(self):
+        cfg = self.cfg
+        d: dict[str, Any] = {
+            "embed": Param((cfg.vocab, cfg.d_model), cfg.dtype, "normal_0.02",
+                           (None, "embed_shard")),
+            "ln_f": _norm_defs(cfg),
+            "lm_head": Param((cfg.d_model, cfg.vocab), cfg.dtype, "fan_in",
+                             ("embed", "vocab")),
+            "periods": _stack_defs(self._period_defs(), self.n_periods),
+        }
+        if self.n_tail:
+            d["tail"] = self._tail_defs()
+        return d
+
+    def init(self, key):
+        return init_tree(self.defs, key)
+
+    def specs(self):
+        return spec_tree(self.defs)
+
+    def pspecs(self, rules):
+        return pspec_tree(self.defs, rules)
+
+    # ---- state --------------------------------------------------------
+    def _zero_rec_state(self, b):
+        cfg = self.cfg
+        w = cfg.rglru_width or cfg.d_model
+        return {
+            "h": jnp.zeros((b, w), jnp.float32),
+            "conv": jnp.zeros((b, cfg.conv1d_width - 1, w), cfg.dtype),
+        }
+
+    # ---- sequence mode (train / prefill) --------------------------------
+    def _period_seq(self, p, x, positions, st, collect_kv):
+        cfg = self.cfg
+        h, st1 = _rec_block_seq(p["rec1"], _apply_norm(cfg, p["ln_r1"], x), st["r1"])
+        x = x + h
+        x = x + _geglu(p["mlp1"], _apply_norm(cfg, p["ln_m1"], x))
+        h, st2 = _rec_block_seq(p["rec2"], _apply_norm(cfg, p["ln_r2"], x), st["r2"])
+        x = x + h
+        x = x + _geglu(p["mlp2"], _apply_norm(cfg, p["ln_m2"], x))
+        h, kv = _attn_forward(cfg, p["attn"], _apply_norm(cfg, p["ln_a"], x),
+                              positions)
+        x = x + h
+        x = x + _geglu(p["mlp3"], _apply_norm(cfg, p["ln_m3"], x))
+        new_st = {"r1": st1, "r2": st2}
+        return x, new_st, (kv if collect_kv else None)
+
+    def _stack_seq(self, params, x, positions, collect_kv=False):
+        cfg = self.cfg
+        b = x.shape[0]
+        period = self._period_seq
+        if cfg.remat != "none":
+            period = jax.checkpoint(
+                period, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(4,),
+            )
+        st0 = jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (self.n_periods,) + z.shape),
+            {"r1": self._zero_rec_state(b), "r2": self._zero_rec_state(b)},
+        )
+
+        def body(x, inp):
+            p, st = inp
+            x, _, kv = period(p, x, positions, st, collect_kv)
+            return x, kv
+
+        x, kvs = jax.lax.scan(body, x, (params["periods"], st0))
+        for i in range(self.n_tail):
+            tp = params["tail"]
+            h, _ = _rec_block_seq(
+                tp[f"rec{i}"], _apply_norm(cfg, tp[f"ln_r{i}"], x),
+                self._zero_rec_state(b),
+            )
+            x = x + h
+            x = x + _geglu(tp[f"mlp{i}"], _apply_norm(cfg, tp[f"ln_m{i}"], x))
+        return x, kvs
+
+    # ---- public -----------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        x, _ = self._stack_seq(params, x, pos)
+        x = _apply_norm(cfg, params["ln_f"], x)
+        logits = x @ params["lm_head"]
+        return common.cross_entropy(logits, batch["labels"])
+
+    def prefill(self, params, batch, max_len=None):
+        """Prefill keeping only the last `window` KV entries + rec states.
+        (max_len ignored — the KV ring buffer is window-bounded.)"""
+        del max_len
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+        # sequence pass, collecting rec states + windowed KV
+        st0 = {"r1": self._zero_rec_state(b), "r2": self._zero_rec_state(b)}
+        sts, kvs_k, kvs_v, tail_sts = [], [], [], {}
+        xcur = x
+        win = cfg.window
+        for i in range(self.n_periods):
+            p = jax.tree.map(lambda l: l[i], params["periods"])
+            xcur, st, kv = self._period_seq(p, xcur, pos, st0, True)
+            sts.append(st)
+            k, v = kv
+            if t >= win:
+                # ring-buffer alignment: position p lives at slot p % window
+                k_w = jnp.roll(k[:, -win:], t % win, axis=1)
+                v_w = jnp.roll(v[:, -win:], t % win, axis=1)
+            else:
+                k_w = jnp.pad(k, ((0, 0), (0, win - t), (0, 0), (0, 0)))
+                v_w = jnp.pad(v, ((0, 0), (0, win - t), (0, 0), (0, 0)))
+            kvs_k.append(k_w)
+            kvs_v.append(v_w)
+        for i in range(self.n_tail):
+            tp = params["tail"]
+            h, st = _rec_block_seq(
+                tp[f"rec{i}"], _apply_norm(cfg, tp[f"ln_r{i}"], xcur),
+                self._zero_rec_state(b),
+            )
+            xcur = xcur + h
+            xcur = xcur + _geglu(tp[f"mlp{i}"], _apply_norm(cfg, tp[f"ln_m{i}"], xcur))
+            tail_sts[f"t{i}"] = st
+        xcur = _apply_norm(cfg, params["ln_f"], xcur)
+        logits = xcur[:, -1:] @ params["lm_head"]
+        cache = {
+            "periods": jax.tree.map(lambda *z: jnp.stack(z), *sts),
+            "tail": tail_sts,
+            "k": jnp.stack(kvs_k),
+            "v": jnp.stack(kvs_v),
+            "len": jnp.asarray(t, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        clen = cache["len"]
+        pos = jnp.broadcast_to(clen[None], (b, 1)).astype(jnp.int32)
+        # ring-buffer write position within the window cache
+        wpos = jnp.mod(clen, cfg.window)
+
+        def period_step(x, inp):
+            p, st, k_cache, v_cache = inp
+            h, st1 = _rec_block_step(p["rec1"], _apply_norm(cfg, p["ln_r1"], x),
+                                     st["r1"])
+            x = x + h
+            x = x + _geglu(p["mlp1"], _apply_norm(cfg, p["ln_m1"], x))
+            h, st2 = _rec_block_step(p["rec2"], _apply_norm(cfg, p["ln_r2"], x),
+                                     st["r2"])
+            x = x + h
+            x = x + _geglu(p["mlp2"], _apply_norm(cfg, p["ln_m2"], x))
+            # local attention against the ring buffer
+            from repro.models.transformer import _project_qkv, _rope_qk
+
+            q, k, v = _project_qkv(
+                cfg, p["attn"], _apply_norm(cfg, p["ln_a"], x)
+            )
+            q, k = _rope_qk(cfg, q, k, pos)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, wpos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, wpos, axis=1)
+            valid = jnp.minimum(clen + 1, cfg.window)
+            o = common.decode_attention(q, k_cache, v_cache, valid)
+            x = x + o.reshape(b, 1, -1) @ p["attn"]["wo"]
+            x = x + _geglu(p["mlp3"], _apply_norm(cfg, p["ln_m3"], x))
+            return x, ({"r1": st1, "r2": st2}, k_cache, v_cache)
+
+        x, (new_sts, new_k, new_v) = jax.lax.scan(
+            period_step, x,
+            (params["periods"], cache["periods"], cache["k"], cache["v"]),
+        )
+        new_tail = {}
+        for i in range(self.n_tail):
+            tp = params["tail"]
+            h, st = _rec_block_step(
+                tp[f"rec{i}"], _apply_norm(cfg, tp[f"ln_r{i}"], x),
+                cache["tail"][f"t{i}"],
+            )
+            x = x + h
+            x = x + _geglu(tp[f"mlp{i}"], _apply_norm(cfg, tp[f"ln_m{i}"], x))
+            new_tail[f"t{i}"] = st
+        x = _apply_norm(cfg, params["ln_f"], x)
+        logits = x @ params["lm_head"]
+        return logits, {
+            "periods": new_sts, "tail": new_tail,
+            "k": new_k, "v": new_v, "len": clen + 1,
+        }
+
+    def cache_specs(self, batch: int, max_len: int):
+        """KV is window-bounded; recurrent state O(1) — the long_500k story."""
+        cfg = self.cfg
+        w = cfg.rglru_width or cfg.d_model
+        npd = self.n_periods
+        win = min(cfg.window, max_len)
+        rec = {
+            "h": jax.ShapeDtypeStruct((npd, batch, w), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (npd, batch, cfg.conv1d_width - 1, w), cfg.dtype),
+        }
+        tail_rec = {
+            "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (batch, cfg.conv1d_width - 1, w), cfg.dtype),
+        }
+        return {
+            "periods": {"r1": rec, "r2": dict(rec)},
+            "tail": {f"t{i}": dict(tail_rec) for i in range(self.n_tail)},
+            "k": jax.ShapeDtypeStruct(
+                (npd, batch, win, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            "v": jax.ShapeDtypeStruct(
+                (npd, batch, win, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,314 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892] — attention-free LM with data-dependent
+per-channel decay.
+
+Per layer:
+  TimeMix: token-shift with data-dependent lerp (ddlerp, LoRA-parameterized),
+    per-channel decay w_t = exp(-exp(w0 + LoRA_w)), bonus u ("time_faaaa");
+    per head (dim N): o_t = r_t^T (S_{t-1} + (u*k_t) v_t^T),
+                      S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+    GroupNorm over heads, SiLU(g) gate, output projection.
+  ChannelMix: token-shift, k = relu(W_k x)^2, out = sigmoid(W_r x) * (W_v k).
+
+Training path runs the recurrence with ``jax.lax.scan`` over time carrying
+(B, H, N, N) state (the Pallas chunked kernel is the TPU hot path — see
+repro/kernels/rwkv6_scan.py). Decode carries the state explicitly: O(1) per
+token, which is what makes the long_500k cell runnable.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.nn.module import Param, init_tree, pspec_tree, spec_tree
+from repro.models.transformer import _stack_defs
+
+
+def _time_mix_defs(cfg: ArchConfig):
+    d, dt = cfg.d_model, cfg.dtype
+    lm, ld = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    nh = d // cfg.rwkv_head_dim
+    return {
+        "mu_base": Param((d,), jnp.float32, "zeros", (None,)),
+        # ddlerp LoRA: 5 channels (w,k,v,r,g) share A, per-channel B
+        "lora_a": Param((d, 5 * lm), dt, "fan_in", ("embed", None)),
+        "lora_b": Param((5, lm, d), dt, "zeros", (None, None, "embed")),
+        "mu_wkvrg": Param((5, d), jnp.float32, "zeros", (None, None)),
+        "decay_base": Param((d,), jnp.float32, "zeros", (None,)),
+        "decay_a": Param((d, ld), dt, "fan_in", ("embed", None)),
+        "decay_b": Param((ld, d), dt, "zeros", (None, "embed")),
+        "bonus": Param((nh, cfg.rwkv_head_dim), jnp.float32, "zeros", ("heads", None)),
+        "wr": Param((d, d), dt, "fan_in", ("embed", "heads")),
+        "wk": Param((d, d), dt, "fan_in", ("embed", "heads")),
+        "wv": Param((d, d), dt, "fan_in", ("embed", "heads")),
+        "wg": Param((d, d), dt, "fan_in", ("embed", "heads")),
+        "wo": Param((d, d), dt, "fan_in", ("heads", "embed")),
+        "gn_scale": Param((d,), jnp.float32, "ones", (None,)),
+        "gn_bias": Param((d,), jnp.float32, "zeros", (None,)),
+    }
+
+
+def _channel_mix_defs(cfg: ArchConfig):
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    return {
+        "mu_k": Param((d,), jnp.float32, "zeros", (None,)),
+        "mu_r": Param((d,), jnp.float32, "zeros", (None,)),
+        "wk": Param((d, f), dt, "fan_in", ("embed", "mlp")),
+        "wv": Param((f, d), dt, "fan_in", ("mlp", "embed")),
+        "wr": Param((d, d), dt, "fan_in", ("embed", None)),
+    }
+
+
+def _ln_defs(d):
+    return {
+        "scale": Param((d,), jnp.float32, "ones", (None,)),
+        "bias": Param((d,), jnp.float32, "zeros", (None,)),
+    }
+
+
+def _layer_norm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = jnp.square(x32 - mu).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(
+        x.dtype
+    )
+
+
+def _group_norm(scale, bias, x, nh, eps=1e-5):
+    """LayerNorm per head over the flattened (H*N) feature dim."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, nh, d // nh).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = jnp.square(xh - mu).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, t, d) * scale + bias).astype(x.dtype)
+
+
+def _token_shift(x, last):
+    """Shifted sequence: position t sees x_{t-1}; position 0 sees `last`."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    delta = (xs - x).astype(jnp.float32)
+    x_base = x.astype(jnp.float32) + delta * p["mu_base"]
+    lora = jnp.tanh(x_base.astype(x.dtype) @ p["lora_a"])  # (B,T,5*lm)
+    b, t, _ = x.shape
+    lora = lora.reshape(b, t, 5, -1)
+    adj = jnp.einsum("btcl,cld->btcd", lora, p["lora_b"]).astype(jnp.float32)
+    mix = p["mu_wkvrg"][None, None] + adj  # (B,T,5,D)
+    out = x.astype(jnp.float32)[:, :, None, :] + delta[:, :, None, :] * mix
+    return [out[:, :, i, :].astype(x.dtype) for i in range(5)]
+
+
+def wkv6_scan(r, k, v, w, u):
+    """Reference WKV6 recurrence via lax.scan over time.
+
+    r,k,v,w: (B, T, H, N); u: (H, N). Returns (out (B,T,H,N), final state
+    (B,H,N,N)). State S maps k-space -> v-space.
+    """
+    b, t, h, n = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    xs = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    s, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), s
+
+
+class RWKV6:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.d_model % cfg.rwkv_head_dim == 0
+        self.n_heads = cfg.d_model // cfg.rwkv_head_dim
+
+    def _layer_defs(self):
+        cfg = self.cfg
+        return {
+            "ln1": _ln_defs(cfg.d_model),
+            "tm": _time_mix_defs(cfg),
+            "ln2": _ln_defs(cfg.d_model),
+            "cm": _channel_mix_defs(cfg),
+        }
+
+    @property
+    def defs(self):
+        cfg = self.cfg
+        return {
+            "embed": Param((cfg.vocab, cfg.d_model), cfg.dtype, "normal_0.02",
+                           (None, "embed_shard")),
+            "ln_in": _ln_defs(cfg.d_model),
+            "ln_f": _ln_defs(cfg.d_model),
+            "lm_head": Param((cfg.d_model, cfg.vocab), cfg.dtype, "fan_in",
+                             ("embed", "vocab")),
+            "layers": _stack_defs(self._layer_defs(), cfg.n_layers),
+        }
+
+    def init(self, key):
+        return init_tree(self.defs, key)
+
+    def specs(self):
+        return spec_tree(self.defs)
+
+    def pspecs(self, rules):
+        return pspec_tree(self.defs, rules)
+
+    # ---- time mix ---------------------------------------------------------
+    def _time_mix_seq(self, p, x, last_x, state):
+        """Sequence form. x: (B,T,D); last_x: (B,D); state: (B,H,N,N)."""
+        cfg = self.cfg
+        b, t, d = x.shape
+        nh, hn = self.n_heads, cfg.rwkv_head_dim
+        xs = _token_shift(x, last_x)
+        xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+        decay_adj = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+        w = jnp.exp(-jnp.exp(
+            (p["decay_base"] + decay_adj.astype(jnp.float32)).clip(-18.0, 6.0)
+        ))  # (B,T,D) in (0,1)
+        r = (xr @ p["wr"]).reshape(b, t, nh, hn)
+        k = (xk @ p["wk"]).reshape(b, t, nh, hn)
+        v = (xv @ p["wv"]).reshape(b, t, nh, hn)
+        g = jax.nn.silu(xg @ p["wg"])
+        wh = w.reshape(b, t, nh, hn)
+        if state is None:
+            state = jnp.zeros((b, nh, hn, hn), jnp.float32)
+        out, state = self._wkv(r, k, v, wh, p["bonus"].astype(jnp.float32), state)
+        out = _group_norm(p["gn_scale"], p["gn_bias"],
+                          out.reshape(b, t, d).astype(x.dtype), nh)
+        return (out * g) @ p["wo"], x[:, -1, :], state
+
+    def _wkv(self, r, k, v, w, u, s0):
+        b, t, h, n = r.shape
+
+        def step(s, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[..., :, None] * vt[..., None, :]
+            out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+            s = wt[..., :, None] * s + kv
+            return s, out
+
+        xs = tuple(
+            a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w)
+        )
+        s, outs = jax.lax.scan(step, s0, xs)
+        return outs.transpose(1, 0, 2, 3), s
+
+    # ---- channel mix -------------------------------------------------------
+    def _channel_mix(self, p, x, last_x):
+        xs = _token_shift(x, last_x)
+        delta = (xs - x).astype(jnp.float32)
+        xk = (x.astype(jnp.float32) + delta * p["mu_k"]).astype(x.dtype)
+        xr = (x.astype(jnp.float32) + delta * p["mu_r"]).astype(x.dtype)
+        k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+        return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]
+
+    # ---- full model ---------------------------------------------------------
+    def _block_seq(self, p, x, state):
+        """state: dict(tm_x (B,D), cm_x (B,D), s (B,H,N,N))."""
+        h, tm_x, s = self._time_mix_seq(
+            p["tm"], _layer_norm(p["ln1"], x), state["tm_x"], state["s"]
+        )
+        x = x + h
+        h, cm_x = self._channel_mix(p["cm"], _layer_norm(p["ln2"], x), state["cm_x"])
+        x = x + h
+        return x, {"tm_x": tm_x, "cm_x": cm_x, "s": s}
+
+    def _zero_state(self, b):
+        cfg = self.cfg
+        return {
+            "tm_x": jnp.zeros((b, cfg.d_model), cfg.dtype),
+            "cm_x": jnp.zeros((b, cfg.d_model), cfg.dtype),
+            "s": jnp.zeros((b, self.n_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                           jnp.float32),
+        }
+
+    def _stack(self, params, x, states=None, collect=False):
+        cfg = self.cfg
+        b = x.shape[0]
+        block = self._block_seq
+        if cfg.remat != "none":
+            block = jax.checkpoint(block,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+        if states is None:
+            states = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (cfg.n_layers,) + z.shape),
+                self._zero_state(b),
+            )
+        if cfg.scan_layers:
+            def body(x, inp):
+                layer_p, st = inp
+                x, st_new = block(layer_p, x, st)
+                return x, st_new
+
+            x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                layer_p = jax.tree.map(lambda l: l[i], params["layers"])
+                st = jax.tree.map(lambda s: s[i], states)
+                x, st_new = block(layer_p, x, st)
+                outs.append(st_new)
+            new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new_states
+
+    def loss(self, params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = _layer_norm(params["ln_in"], x)
+        x, _ = self._stack(params, x)
+        x = _layer_norm(params["ln_f"], x)
+        logits = x @ params["lm_head"]
+        return common.cross_entropy(logits, batch["labels"])
+
+    def prefill(self, params, batch, max_len=None):
+        del max_len  # recurrent state is O(1); nothing to size
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = _layer_norm(params["ln_in"], x)
+        x, states = self._stack(params, x)
+        x = _layer_norm(params["ln_f"], x)
+        logits = x[:, -1:] @ params["lm_head"]
+        states["len"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+        return logits, states
+
+    def decode_step(self, params, state, tokens):
+        """tokens (B,1); state from prefill (or cache_specs zeros)."""
+        clen = state["len"]
+        inner = {k: state[k] for k in ("tm_x", "cm_x", "s")}
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = _layer_norm(params["ln_in"], x)
+        x, new_states = self._stack(params, x, states=inner)
+        x = _layer_norm(params["ln_f"], x)
+        logits = x @ params["lm_head"]
+        new_states["len"] = clen + 1
+        return logits, new_states
+
+    def cache_specs(self, batch: int, max_len: int):
+        """Recurrent state is O(1) in sequence length — the whole point."""
+        cfg = self.cfg
+        l = cfg.n_layers
+        return {
+            "tm_x": jax.ShapeDtypeStruct((l, batch, cfg.d_model), cfg.dtype),
+            "cm_x": jax.ShapeDtypeStruct((l, batch, cfg.d_model), cfg.dtype),
+            "s": jax.ShapeDtypeStruct(
+                (l, batch, self.n_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                jnp.float32,
+            ),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,550 @@
+"""Decoder-only transformer LM: dense GQA, MoE, and VLM (M-RoPE) variants.
+
+Design (MaxText-style, pure JAX):
+  * parameters are definition trees (repro.nn.module.Param) carrying logical
+    sharding axes; the parallel layer maps them to the mesh;
+  * layer stacks run under ``jax.lax.scan`` over parameters stacked on a
+    leading "layers" axis (keeps HLO size O(1) in depth — required to compile
+    80-layer models quickly) with configurable remat;
+  * attention uses the chunked online-softmax path for long sequences (the
+    Pallas flash kernel is the TPU hot path, see repro/kernels);
+  * MoE uses sort-based capacity dispatch (gather -> stacked-expert einsum ->
+    scatter-add), which shards experts over the "model" mesh axis (EP) and
+    turns token exchange into XLA all-to-alls.
+
+Embedding table is sharded on d_model (gather stays collective-free and the
+table fits per-device); the LM head is vocab-sharded with a sharded-logits
+cross entropy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.nn import layers as L
+from repro.nn.module import Param, init_tree, pspec_tree, spec_tree
+
+
+# --------------------------------------------------------------------------
+# Param-def helpers
+# --------------------------------------------------------------------------
+def _stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Add a leading stacked-layer dim to every Param in the tree."""
+
+    def stack(p: Param) -> Param:
+        base = p.initializer
+
+        def init(key, shape, dtype):
+            keys = jax.random.split(key, shape[0])
+            return jax.vmap(lambda k: base(k, p.shape, dtype))(keys)
+
+        return Param((n,) + p.shape, p.dtype, init, (axis_name,) + p.axes)
+
+    if isinstance(defs, Param):
+        return stack(defs)
+    return {k: _stack_defs(v, n, axis_name) for k, v in defs.items()}
+
+
+def _norm_defs(cfg: ArchConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    d = {"scale": Param((dim,), jnp.float32, "ones", (None,))}
+    if cfg.norm == "layer":
+        d["bias"] = Param((dim,), jnp.float32, "zeros", (None,))
+    return d
+
+
+def _apply_norm(cfg: ArchConfig, p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention sub-module
+# --------------------------------------------------------------------------
+def _attn_defs(cfg: ArchConfig):
+    dm, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.dtype
+    d = {
+        "wq": Param((dm, nh * hd), dt, "fan_in", ("embed", "heads")),
+        "wk": Param((dm, nkv * hd), dt, "fan_in", ("embed", "kv_heads")),
+        "wv": Param((dm, nkv * hd), dt, "fan_in", ("embed", "kv_heads")),
+        "wo": Param((nh * hd, dm), dt, "fan_in", ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = Param((nh * hd,), dt, "zeros", ("heads",))
+        d["bk"] = Param((nkv * hd,), dt, "zeros", ("kv_heads",))
+        d["bv"] = Param((nkv * hd,), dt, "zeros", ("kv_heads",))
+    return d
+
+
+def _project_qkv(cfg: ArchConfig, p, x):
+    b, t, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _rope_qk(cfg: ArchConfig, q, k, positions):
+    if cfg.rope_theta <= 0:
+        return q, k
+    if cfg.mrope_sections:
+        q = common.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = common.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = common.apply_rope(q, positions, cfg.rope_theta, cfg.rope_frac)
+        k = common.apply_rope(k, positions, cfg.rope_theta, cfg.rope_frac)
+    return q, k
+
+
+def _attn_forward(cfg: ArchConfig, p, x, positions, *, causal=True):
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    o = common.attention(q, k, v, causal=causal, window=cfg.window)
+    return o.reshape(b, t, -1) @ p["wo"], (k, v)
+
+
+def _quant_kv(x):
+    """int8 symmetric per-(token, head) quantization — the paper's
+    quantization stage applied to serving state (entropy stage dropped on
+    the random-access hot path, DESIGN.md §Deviations)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(x32).max(-1, keepdims=True), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _attn_decode_quant(cfg: ArchConfig, p, x, positions, kq, vq, ks, vs,
+                       cache_len):
+    """Single-token decode against an int8 KV cache (dequant fused into the
+    attention reads — HBM traffic is the int8 payload, half of bf16)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    k_new_q, k_new_s = _quant_kv(k)
+    v_new_q, v_new_s = _quant_kv(v)
+    kq = jax.lax.dynamic_update_slice_in_dim(kq, k_new_q, cache_len, axis=1)
+    vq = jax.lax.dynamic_update_slice_in_dim(vq, v_new_q, cache_len, axis=1)
+    ks = jax.lax.dynamic_update_slice_in_dim(ks, k_new_s, cache_len, axis=1)
+    vs = jax.lax.dynamic_update_slice_in_dim(vs, v_new_s, cache_len, axis=1)
+    k_deq = (kq.astype(jnp.float32) * ks).astype(cfg.dtype)
+    v_deq = (vq.astype(jnp.float32) * vs).astype(cfg.dtype)
+    o = common.decode_attention(q, k_deq, v_deq, cache_len + 1,
+                                window=cfg.window)
+    return o.reshape(b, 1, -1) @ p["wo"], (kq, vq, ks, vs)
+
+
+def _attn_decode(cfg: ArchConfig, p, x, positions, k_cache, v_cache, cache_len):
+    """x: (B, 1, D); returns (out, new_k, new_v) with cache updated at
+    position cache_len."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, cache_len, axis=1)
+    o = common.decode_attention(
+        q, k_cache, v_cache, cache_len + 1, window=cfg.window
+    )
+    return o.reshape(b, 1, -1) @ p["wo"], k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# FFN sub-modules
+# --------------------------------------------------------------------------
+def _ffn_defs(cfg: ArchConfig):
+    dm, df, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    return {
+        "wg": Param((dm, df), dt, "fan_in", ("embed", "mlp")),
+        "wu": Param((dm, df), dt, "fan_in", ("embed", "mlp")),
+        "wd": Param((df, dm), dt, "fan_in", ("mlp", "embed")),
+    }
+
+
+def _ffn_forward(p, x):
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def _moe_defs(cfg: ArchConfig):
+    dm, df, e, dt = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.dtype
+    return {
+        "router": Param((dm, e), jnp.float32, "fan_in", ("embed", None)),
+        "wg": Param((e, dm, df), dt, "fan_in", ("expert", "embed", "mlp")),
+        "wu": Param((e, dm, df), dt, "fan_in", ("expert", "embed", "mlp")),
+        "wd": Param((e, df, dm), dt, "fan_in", ("expert", "mlp", "embed")),
+    }
+
+
+def moe_capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    cap = int(np.ceil(n_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _moe_forward(cfg: ArchConfig, p, x):
+    """Sort-based capacity-constrained top-k dispatch.
+
+    Returns (y, aux_loss). Shapes: x (B, T, D) -> assignments (B*T*k,), expert
+    buffers (E, C, D) sharded on E (EP); gather/scatter lower to all-to-alls
+    under pjit.
+    """
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    n = b * t
+    xf = x.reshape(n, d)
+    logits = (xf.astype(jnp.float32)) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (n * k)
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    flat_e = top_i.reshape(-1)  # (N*k,)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_tok[order], flat_w[order]
+
+    cap = moe_capacity(cfg, n)
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(se.size) - starts[se]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)  # overflow -> scratch
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(xf[st])
+    h = buf[: e * cap].reshape(e, cap, d)
+    if cfg.constrain_acts:
+        # §Perf lever: pin expert buffers to EP layout so SPMD doesn't
+        # replicate the dispatch across the model axis
+        h = common.constrain(h, "model", None, None)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["wg"]))
+    u = jnp.einsum("ecd,edf->ecf", h, p["wu"])
+    o = jnp.einsum("ecf,efd->ecd", g * u, p["wd"])  # (E, C, D)
+    if cfg.constrain_acts:
+        o = common.constrain(o, "model", None, None)
+
+    of = o.reshape(e * cap, d)
+    contrib = of[jnp.minimum(slot, e * cap - 1)] * (sw * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((n, d), x.dtype).at[st].add(contrib)
+    return y.reshape(b, t, d), aux
+
+
+# --------------------------------------------------------------------------
+# The model
+# --------------------------------------------------------------------------
+class DecoderLM:
+    """Covers dense (llama/qwen/yi/stablelm), MoE (qwen3-moe/dbrx) and VLM
+    (qwen2-vl) families."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---- definitions ---------------------------------------------------
+    def _layer_defs(self):
+        cfg = self.cfg
+        d = {
+            "ln1": _norm_defs(cfg),
+            "attn": _attn_defs(cfg),
+            "ln2": _norm_defs(cfg),
+        }
+        d["ffn"] = _moe_defs(cfg) if cfg.n_experts else _ffn_defs(cfg)
+        return d
+
+    @property
+    def defs(self):
+        cfg = self.cfg
+        d: dict[str, Any] = {
+            "embed": Param(
+                (cfg.vocab, cfg.d_model), cfg.dtype, "normal_0.02",
+                (None, "embed_shard"),
+            ),
+            "lm_head": Param(
+                (cfg.d_model, cfg.vocab), cfg.dtype, "fan_in", ("embed", "vocab"),
+            ),
+            "ln_f": _norm_defs(cfg),
+            "layers": _stack_defs(self._layer_defs(), cfg.n_layers),
+        }
+        if cfg.is_vlm:
+            d["patch_proj"] = Param(
+                (cfg.d_patch, cfg.d_model), cfg.dtype, "fan_in", (None, "embed"),
+            )
+        return d
+
+    def init(self, key):
+        return init_tree(self.defs, key)
+
+    def specs(self):
+        return spec_tree(self.defs)
+
+    def pspecs(self, rules):
+        return pspec_tree(self.defs, rules)
+
+    # ---- blocks ----------------------------------------------------------
+    def _block(self, p, x, positions):
+        cfg = self.cfg
+        h, _ = _attn_forward(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x), positions)
+        x = x + h
+        normed = _apply_norm(cfg, p["ln2"], x)
+        if cfg.n_experts:
+            f, aux = _moe_forward(cfg, p["ffn"], normed)
+        else:
+            f, aux = _ffn_forward(p["ffn"], normed), jnp.zeros((), jnp.float32)
+        return x + f, aux
+
+    def _remat_block(self):
+        cfg = self.cfg
+        if cfg.remat == "none":
+            return self._block
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        return jax.checkpoint(self._block, policy=policy)
+
+    def _constrain(self, x):
+        if self.cfg.constrain_acts:
+            return common.constrain(x, self.cfg.constrain_acts, None, None)
+        return x
+
+    def _stack(self, params, x, positions):
+        cfg = self.cfg
+        block = self._remat_block()
+        x = self._constrain(x)
+        if cfg.scan_layers:
+            def body(carry, layer_p):
+                x, aux = carry
+                x, a = block(layer_p, x, positions)
+                return (self._constrain(x), aux + a), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       params["layers"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_layers):
+                layer_p = jax.tree.map(lambda l: l[i], params["layers"])
+                x, a = block(layer_p, x, positions)
+                aux = aux + a
+        return x, aux
+
+    # ---- input assembly --------------------------------------------------
+    def _embed_tokens(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def _assemble(self, params, batch):
+        """Returns (x, positions, text_start). For VLM, patch embeddings are
+        prepended and M-RoPE position streams are built (t/h/w)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = self._embed_tokens(params, tokens)
+        if not cfg.is_vlm:
+            pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+            return x, pos, 0
+        patches = batch["patches"]  # (B, Np, d_patch)
+        npatch = patches.shape[1]
+        px = patches.astype(cfg.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([px, x], axis=1)
+        # M-RoPE positions: patches form a sqrt grid at t=0; text advances t.
+        side = max(1, int(np.sqrt(npatch)))
+        grid_h = (np.arange(npatch) // side).astype(np.int32)
+        grid_w = (np.arange(npatch) % side).astype(np.int32)
+        text_pos = np.arange(t, dtype=np.int32) + int(grid_h.max()) + 1
+        pos_t = np.concatenate([np.zeros(npatch, np.int32), text_pos])
+        pos_h = np.concatenate([grid_h, text_pos])
+        pos_w = np.concatenate([grid_w, text_pos])
+        pos = jnp.broadcast_to(
+            jnp.stack([jnp.asarray(pos_t), jnp.asarray(pos_h), jnp.asarray(pos_w)])[
+                :, None, :
+            ],
+            (3, b, npatch + t),
+        )
+        return x, pos, npatch
+
+    # ---- public API --------------------------------------------------------
+    def loss(self, params, batch):
+        """Next-token CE (+ MoE aux). batch: tokens (B,T), labels (B,T)
+        [+ patches for VLM]."""
+        cfg = self.cfg
+        x, pos, text_start = self._assemble(params, batch)
+        x, aux = self._stack(params, x, pos)
+        x = _apply_norm(cfg, params["ln_f"], x)
+        if text_start:
+            x = x[:, text_start:]
+        logits = x @ params["lm_head"]
+        return common.cross_entropy(logits, batch["labels"]) + aux
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Full-sequence forward producing KV caches + last-position logits.
+
+        ``max_len`` sizes the cache (room for decode_step growth); defaults
+        to sequence length + 64."""
+        cfg = self.cfg
+        x, pos, text_start = self._assemble(params, batch)
+        caches_k, caches_v = [], []
+
+        def block_with_cache(p, x):
+            h, (k, v) = _attn_forward(
+                cfg, p["attn"], _apply_norm(cfg, p["ln1"], x), pos
+            )
+            x = x + h
+            normed = _apply_norm(cfg, p["ln2"], x)
+            if cfg.n_experts:
+                f, _ = _moe_forward(cfg, p["ffn"], normed)
+            else:
+                f = _ffn_forward(p["ffn"], normed)
+            return x + f, (k, v)
+
+        if cfg.scan_layers:
+            def body(x, layer_p):
+                x, kv = block_with_cache(layer_p, x)
+                return x, kv
+
+            x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        else:
+            ks_l, vs_l = [], []
+            for i in range(cfg.n_layers):
+                layer_p = jax.tree.map(lambda l: l[i], params["layers"])
+                x, (k, v) = block_with_cache(layer_p, x)
+                ks_l.append(k)
+                vs_l.append(v)
+            ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+
+        x = _apply_norm(cfg, params["ln_f"], x)
+        logits = x[:, -1:] @ params["lm_head"]
+        t_total = x.shape[1]
+        max_len = max_len or t_total + 64
+        pad = max_len - t_total
+        if pad > 0:
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {
+            "k": ks,
+            "v": vs,
+            "len": jnp.asarray(t_total, jnp.int32),
+        }
+        if cfg.mrope_sections:
+            # M-RoPE: the *position* stream advances past the max grid index,
+            # not past the raw cache length.
+            cache["pos_next"] = pos[0, 0, -1] + 1
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """One token for every sequence. tokens: (B, 1)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = self._embed_tokens(params, tokens)
+        clen = cache["len"]
+        if cfg.mrope_sections:
+            p_next = cache.get("pos_next", clen)
+            pos = jnp.broadcast_to(p_next[None, None], (3, b, 1)).astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(clen[None], (b, 1)).astype(jnp.int32)
+
+        if cfg.kv_quant:
+            def body_q(x, layer_in):
+                layer_p, kq, vq, ks_, vs_ = layer_in
+                h, new_kv = _attn_decode_quant(
+                    cfg, layer_p["attn"], _apply_norm(cfg, layer_p["ln1"], x),
+                    pos, kq, vq, ks_, vs_, clen,
+                )
+                x = x + h
+                normed = _apply_norm(cfg, layer_p["ln2"], x)
+                if cfg.n_experts:
+                    f, _ = _moe_forward(cfg, layer_p["ffn"], normed)
+                else:
+                    f = _ffn_forward(layer_p["ffn"], normed)
+                return x + f, new_kv
+
+            x, (kq, vq, ks_, vs_) = jax.lax.scan(
+                body_q, x,
+                (params["layers"], cache["k_q"], cache["v_q"],
+                 cache["k_s"], cache["v_s"]))
+            x = _apply_norm(cfg, params["ln_f"], x)
+            logits = x @ params["lm_head"]
+            new_cache = {"k_q": kq, "v_q": vq, "k_s": ks_, "v_s": vs_,
+                         "len": clen + 1}
+            if cfg.mrope_sections:
+                new_cache["pos_next"] = cache.get("pos_next", clen) + 1
+            return logits, new_cache
+
+        def body(x, layer_in):
+            layer_p, k_cache, v_cache = layer_in
+            h, k_new, v_new = _attn_decode(
+                cfg, layer_p["attn"], _apply_norm(cfg, layer_p["ln1"], x),
+                pos, k_cache, v_cache, clen,
+            )
+            x = x + h
+            normed = _apply_norm(cfg, layer_p["ln2"], x)
+            if cfg.n_experts:
+                f, _ = _moe_forward(cfg, layer_p["ffn"], normed)
+            else:
+                f = _ffn_forward(layer_p["ffn"], normed)
+            return x + f, (k_new, v_new)
+
+        if cfg.scan_layers:
+            x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        else:
+            ks_l, vs_l = [], []
+            for i in range(cfg.n_layers):
+                layer_p = jax.tree.map(lambda l: l[i], params["layers"])
+                x, (k, v) = body(x, (layer_p, cache["k"][i], cache["v"][i]))
+                ks_l.append(k)
+                vs_l.append(v)
+            ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+
+        x = _apply_norm(cfg, params["ln_f"], x)
+        logits = x @ params["lm_head"]
+        new_cache = {"k": ks, "v": vs, "len": clen + 1}
+        if cfg.mrope_sections:
+            new_cache["pos_next"] = cache.get("pos_next", clen) + 1
+        return logits, new_cache
+
+    # ---- cache specs (dry-run stand-ins) ---------------------------------
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        kv_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_quant:
+            s_shape = kv_shape[:-1] + (1,)
+            out = {
+                "k_q": jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+                "v_q": jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+                "k_s": jax.ShapeDtypeStruct(s_shape, jnp.float32),
+                "v_s": jax.ShapeDtypeStruct(s_shape, jnp.float32),
+                "len": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        else:
+            out = {
+                "k": jax.ShapeDtypeStruct(kv_shape, cfg.dtype),
+                "v": jax.ShapeDtypeStruct(kv_shape, cfg.dtype),
+                "len": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        if cfg.mrope_sections:
+            out["pos_next"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return out

@@ -1,0 +1,251 @@
+"""Whisper encoder-decoder backbone [arXiv:2212.04356].
+
+The conv frontend is a stub per the assignment: ``input_specs`` provides
+precomputed mel-frame embeddings (B, n_audio_ctx, d_model) — everything after
+the two stride-2 convs. Encoder: bidirectional pre-LN MHA with sinusoidal
+positions. Decoder: causal self-attention + cross-attention to the encoder
+output, learned positions.
+
+train  : CE over decoder tokens given frames.
+prefill: encode frames, run decoder prompt, build self-attn KV cache and the
+         (static) cross-attn KV.
+decode : single-token step against both caches.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.transformer import (
+    _apply_norm,
+    _norm_defs,
+    _stack_defs,
+)
+from repro.nn.module import Param, init_tree, pspec_tree, spec_tree
+
+
+def _mha_defs(cfg: ArchConfig):
+    dm, hd, nh = cfg.d_model, cfg.head_dim, cfg.n_heads
+    dt = cfg.dtype
+    return {
+        "wq": Param((dm, nh * hd), dt, "fan_in", ("embed", "heads")),
+        "wk": Param((dm, nh * hd), dt, "fan_in", ("embed", "heads")),
+        "wv": Param((dm, nh * hd), dt, "fan_in", ("embed", "heads")),
+        "wo": Param((nh * hd, dm), dt, "fan_in", ("heads", "embed")),
+        "bq": Param((nh * hd,), dt, "zeros", ("heads",)),
+        "bv": Param((nh * hd,), dt, "zeros", ("heads",)),
+        "bo": Param((dm,), dt, "zeros", (None,)),
+    }
+
+
+def _mha_project(cfg, p, xq, xkv):
+    b, tq, _ = xq.shape
+    tk = xkv.shape[1]
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = (xq @ p["wq"] + p["bq"]).reshape(b, tq, nh, hd)
+    k = (xkv @ p["wk"]).reshape(b, tk, nh, hd)
+    v = (xkv @ p["wv"] + p["bv"]).reshape(b, tk, nh, hd)
+    return q, k, v
+
+
+def _mha(cfg, p, xq, xkv, causal):
+    b, tq, _ = xq.shape
+    q, k, v = _mha_project(cfg, p, xq, xkv)
+    o = common.attention(q, k, v, causal=causal)
+    return o.reshape(b, tq, -1) @ p["wo"] + p["bo"], (k, v)
+
+
+def _ffn_defs(cfg: ArchConfig):
+    dm, df, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    return {
+        "w1": Param((dm, df), dt, "fan_in", ("embed", "mlp")),
+        "b1": Param((df,), dt, "zeros", ("mlp",)),
+        "w2": Param((df, dm), dt, "fan_in", ("mlp", "embed")),
+        "b2": Param((dm,), dt, "zeros", (None,)),
+    }
+
+
+def _ffn(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+class Whisper:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---- defs -----------------------------------------------------------
+    def _enc_layer_defs(self):
+        cfg = self.cfg
+        return {
+            "ln1": _norm_defs(cfg), "attn": _mha_defs(cfg),
+            "ln2": _norm_defs(cfg), "ffn": _ffn_defs(cfg),
+        }
+
+    def _dec_layer_defs(self):
+        cfg = self.cfg
+        return {
+            "ln1": _norm_defs(cfg), "self_attn": _mha_defs(cfg),
+            "ln2": _norm_defs(cfg), "cross_attn": _mha_defs(cfg),
+            "ln3": _norm_defs(cfg), "ffn": _ffn_defs(cfg),
+        }
+
+    @property
+    def defs(self):
+        cfg = self.cfg
+        return {
+            "embed": Param((cfg.vocab, cfg.d_model), cfg.dtype, "normal_0.02",
+                           (None, "embed_shard")),
+            # sized to cover the decode_32k cell (learned positions)
+            "pos_dec": Param((32768 + 1024, cfg.d_model), cfg.dtype,
+                             "normal_0.02", (None, None)),
+            "enc_layers": _stack_defs(self._enc_layer_defs(), cfg.n_encoder_layers),
+            "dec_layers": _stack_defs(self._dec_layer_defs(), cfg.n_layers),
+            "ln_enc": _norm_defs(cfg),
+            "ln_dec": _norm_defs(cfg),
+        }
+
+    def init(self, key):
+        return init_tree(self.defs, key)
+
+    def specs(self):
+        return spec_tree(self.defs)
+
+    def pspecs(self, rules):
+        return pspec_tree(self.defs, rules)
+
+    # ---- encoder ----------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: (B, n_audio_ctx, d_model) stub embeddings."""
+        cfg = self.cfg
+        t = frames.shape[1]
+        pos = jnp.asarray(common.sinusoidal_positions(t, cfg.d_model), cfg.dtype)
+        x = frames.astype(cfg.dtype) + pos[None]
+
+        def body(x, p):
+            h, _ = _mha(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x),
+                        _apply_norm(cfg, p["ln1"], x), causal=False)
+            x = x + h
+            x = x + _ffn(p["ffn"], _apply_norm(cfg, p["ln2"], x))
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return _apply_norm(cfg, params["ln_enc"], x)
+
+    # ---- decoder ------------------------------------------------------------
+    def _dec_block(self, p, x, enc, pos_offset=0):
+        cfg = self.cfg
+        h, self_kv = _mha(cfg, p["self_attn"], _apply_norm(cfg, p["ln1"], x),
+                          _apply_norm(cfg, p["ln1"], x), causal=True)
+        x = x + h
+        h, cross_kv = _mha(cfg, p["cross_attn"], _apply_norm(cfg, p["ln2"], x),
+                           enc, causal=False)
+        x = x + h
+        x = x + _ffn(p["ffn"], _apply_norm(cfg, p["ln3"], x))
+        return x, (self_kv, cross_kv)
+
+    def _decode_tokens(self, params, tokens, enc):
+        cfg = self.cfg
+        b, t = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + params["pos_dec"][:t][None]
+
+        block = self._dec_block
+        if cfg.remat != "none":
+            block = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(x, p):
+            x, _ = block(p, x, enc)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        x = _apply_norm(cfg, params["ln_dec"], x)
+        # tied output head (whisper ties embed <-> logits)
+        return x @ params["embed"].T
+
+    # ---- public ----------------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: frames (B, n_ctx, d_model), tokens (B,T), labels (B,T)."""
+        enc = self.encode(params, batch["frames"])
+        logits = self._decode_tokens(params, batch["tokens"], enc)
+        return common.cross_entropy(logits, batch["labels"])
+
+    def prefill(self, params, batch, max_len=None):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + params["pos_dec"][:t][None]
+
+        def body(x, p):
+            x, (self_kv, cross_kv) = self._dec_block(p, x, enc)
+            return x, (self_kv, cross_kv)
+
+        x, ((ks, vs), (cks, cvs)) = jax.lax.scan(body, x, params["dec_layers"])
+        x = _apply_norm(cfg, params["ln_dec"], x)
+        logits = x[:, -1:] @ params["embed"].T
+        max_len = max_len or t + 64
+        pad = max_len - t
+        if pad > 0:
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {
+            "k": ks, "v": vs, "ck": cks, "cv": cvs,
+            "len": jnp.asarray(t, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        clen = cache["len"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos_vec = jax.lax.dynamic_slice_in_dim(params["pos_dec"], clen, 1, axis=0)
+        x = x + pos_vec[None]  # (1,1,D) -> broadcast over batch
+
+        def body(x, inp):
+            p, k_c, v_c, ck, cv = inp
+            normed = _apply_norm(cfg, p["ln1"], x)
+            q, k, v = _mha_project(cfg, p["self_attn"], normed, normed)
+            k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k, clen, axis=1)
+            v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v, clen, axis=1)
+            o = common.decode_attention(q, k_c, v_c, clen + 1)
+            x = x + o.reshape(b, 1, -1) @ p["self_attn"]["wo"] + p["self_attn"]["bo"]
+            # cross attention against the precomputed encoder KV
+            normed = _apply_norm(cfg, p["ln2"], x)
+            nh, hd = cfg.n_heads, cfg.head_dim
+            q = (normed @ p["cross_attn"]["wq"] + p["cross_attn"]["bq"]).reshape(
+                b, 1, nh, hd)
+            o = common.decode_attention(q, ck, cv, ck.shape[1])
+            x = x + o.reshape(b, 1, -1) @ p["cross_attn"]["wo"] + p["cross_attn"]["bo"]
+            x = x + _ffn(p["ffn"], _apply_norm(cfg, p["ln3"], x))
+            return x, (k_c, v_c)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"]),
+        )
+        x = _apply_norm(cfg, params["ln_dec"], x)
+        logits = x @ params["embed"].T
+        return logits, {
+            "k": new_k, "v": new_v, "ck": cache["ck"], "cv": cache["cv"],
+            "len": clen + 1,
+        }
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        l, nh, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        return {
+            "k": jax.ShapeDtypeStruct((l, batch, max_len, nh, hd), cfg.dtype),
+            "v": jax.ShapeDtypeStruct((l, batch, max_len, nh, hd), cfg.dtype),
+            "ck": jax.ShapeDtypeStruct((l, batch, cfg.n_audio_ctx, nh, hd), cfg.dtype),
+            "cv": jax.ShapeDtypeStruct((l, batch, cfg.n_audio_ctx, nh, hd), cfg.dtype),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,18 @@
+from repro.nn.module import (  # noqa: F401
+    Param,
+    init_tree,
+    spec_tree,
+    pspec_tree,
+    param_count,
+    param_bytes,
+    logical_to_pspec,
+)
+from repro.nn.layers import (  # noqa: F401
+    dense,
+    embedding,
+    conv3d,
+    conv3d_transpose,
+    layer_norm,
+    rms_norm,
+    leaky_relu,
+)

@@ -1,0 +1,165 @@
+"""Stateless layer builders.
+
+Each builder returns a :class:`Layer` — ``defs`` (Param tree) + ``apply``
+(pure function of (params, inputs)). Composition happens in plain Python;
+parameters stay ordinary pytrees so pjit/shard_map see through everything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.module import Param, fan_in_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    defs: Any
+    apply: Callable
+
+
+def leaky_relu(x, negative_slope: float = 0.2):
+    return jnp.where(x >= 0, x, negative_slope * x)
+
+
+def dense(
+    in_dim: int,
+    out_dim: int,
+    *,
+    use_bias: bool = True,
+    dtype=jnp.float32,
+    axes: tuple[Optional[str], Optional[str]] = (None, None),
+    init: str | Callable = "fan_in",
+) -> Layer:
+    defs = {"w": Param((in_dim, out_dim), dtype, init, axes)}
+    if use_bias:
+        defs["b"] = Param((out_dim,), dtype, "zeros", (axes[1],))
+
+    def apply(params, x):
+        y = x @ params["w"]
+        if use_bias:
+            y = y + params["b"]
+        return y
+
+    return Layer(defs, apply)
+
+
+def embedding(
+    vocab: int,
+    dim: int,
+    *,
+    dtype=jnp.float32,
+    axes: tuple[Optional[str], Optional[str]] = ("vocab", "embed"),
+) -> Layer:
+    defs = {"table": Param((vocab, dim), dtype, "normal_0.02", axes)}
+
+    def apply(params, ids):
+        return jnp.take(params["table"], ids, axis=0)
+
+    return Layer(defs, apply)
+
+
+def layer_norm(dim: int, *, dtype=jnp.float32, eps: float = 1e-5) -> Layer:
+    defs = {
+        "scale": Param((dim,), dtype, "ones", (None,)),
+        "bias": Param((dim,), dtype, "zeros", (None,)),
+    }
+
+    def apply(params, x):
+        x32 = x.astype(jnp.float32)
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+    return Layer(defs, apply)
+
+
+def rms_norm(dim: int, *, dtype=jnp.float32, eps: float = 1e-6) -> Layer:
+    defs = {"scale": Param((dim,), dtype, "ones", (None,))}
+
+    def apply(params, x):
+        x32 = x.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        return (x32 * jax.lax.rsqrt(ms + eps) * params["scale"]).astype(x.dtype)
+
+    return Layer(defs, apply)
+
+
+def _conv_kernel_init(kernel_shape):
+    # fan_in = prod(spatial) * in_channels  (kernel layout: (D,H,W,in,out))
+    fan_in = int(np.prod(kernel_shape[:-1]))
+    std = 1.0 / np.sqrt(fan_in)
+
+    def init(key, shape, dtype):
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+def conv3d(
+    in_ch: int,
+    out_ch: int,
+    kernel: tuple[int, int, int],
+    *,
+    stride: tuple[int, int, int] = (1, 1, 1),
+    padding: str = "SAME",
+    use_bias: bool = True,
+    dtype=jnp.float32,
+) -> Layer:
+    kshape = kernel + (in_ch, out_ch)
+    defs = {"w": Param(kshape, dtype, _conv_kernel_init(kshape), (None,) * 5)}
+    if use_bias:
+        defs["b"] = Param((out_ch,), dtype, "zeros", (None,))
+
+    dn = jax.lax.conv_dimension_numbers(
+        (1, 1, 1, 1, in_ch), kshape, ("NDHWC", "DHWIO", "NDHWC")
+    )
+
+    def apply(params, x):
+        # x: (N, D, H, W, C)
+        y = jax.lax.conv_general_dilated(
+            x, params["w"], window_strides=stride, padding=padding,
+            dimension_numbers=dn,
+        )
+        if use_bias:
+            y = y + params["b"]
+        return y
+
+    return Layer(defs, apply)
+
+
+def conv3d_transpose(
+    in_ch: int,
+    out_ch: int,
+    kernel: tuple[int, int, int],
+    *,
+    stride: tuple[int, int, int] = (1, 1, 1),
+    padding: str = "SAME",
+    use_bias: bool = True,
+    dtype=jnp.float32,
+) -> Layer:
+    kshape = kernel + (in_ch, out_ch)
+    defs = {"w": Param(kshape, dtype, _conv_kernel_init(kshape), (None,) * 5)}
+    if use_bias:
+        defs["b"] = Param((out_ch,), dtype, "zeros", (None,))
+
+    dn = jax.lax.conv_dimension_numbers(
+        (1, 1, 1, 1, in_ch), kshape, ("NDHWC", "DHWIO", "NDHWC")
+    )
+
+    def apply(params, x):
+        y = jax.lax.conv_transpose(
+            x, params["w"], strides=stride, padding=padding,
+            dimension_numbers=dn,
+        )
+        if use_bias:
+            y = y + params["b"]
+        return y
+
+    return Layer(defs, apply)

@@ -1,0 +1,187 @@
+"""Minimal functional parameter system.
+
+Design goals (framework-scale, no flax/optax available):
+
+* A model is described by a nested-dict *definition tree* whose leaves are
+  :class:`Param` — shape, dtype, initializer, and **logical axis names**.
+* ``init_tree(defs, key)`` materializes real arrays (deterministic per path).
+* ``spec_tree(defs)`` produces ``jax.ShapeDtypeStruct`` leaves — this is what
+  the multi-pod dry-run consumes (no device allocation, ever).
+* ``pspec_tree(defs, rules)`` produces ``PartitionSpec`` leaves from the
+  logical axes through a rules table — the single source of truth for
+  DP/TP/SP/EP placement, MaxText-style.
+
+Keeping definition, materialization, and sharding in one structure is what
+lets every (architecture x shape x mesh) cell lower without touching device
+memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+def _normal_init(stddev: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+def _zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def _ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def fan_in_init(axis: int = 0) -> Initializer:
+    """LeCun-normal over the given fan-in axis product (default: all but last)."""
+
+    def init(key, shape, dtype):
+        if len(shape) <= 1:
+            fan_in = max(1, shape[0] if shape else 1)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+        std = 1.0 / np.sqrt(fan_in)
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+INITS: dict[str, Initializer] = {
+    "zeros": _zeros_init,
+    "ones": _ones_init,
+    "fan_in": fan_in_init(),
+    "normal_0.02": _normal_init(0.02),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A parameter leaf: shape + dtype + init + logical axes.
+
+    ``axes`` names one logical axis per dim (or None for replicated dims);
+    the parallel layer maps logical names -> mesh axes via a rules table.
+    """
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    init: str | Initializer = "fan_in"
+    axes: tuple[Optional[str], ...] = ()
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch with shape {self.shape}"
+            )
+
+    @property
+    def initializer(self) -> Initializer:
+        if callable(self.init):
+            return self.init
+        return INITS[self.init]
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def _walk(defs, path=()):  # yields (path, Param)
+    if _is_param(defs):
+        yield path, defs
+        return
+    if isinstance(defs, Mapping):
+        for k in sorted(defs):
+            yield from _walk(defs[k], path + (str(k),))
+        return
+    raise TypeError(f"definition tree leaf of type {type(defs)} at {path}")
+
+
+def _map_params(defs, fn):
+    if _is_param(defs):
+        return fn(defs)
+    return {k: _map_params(v, fn) for k, v in defs.items()}
+
+
+def _path_key(key: jax.Array, path: tuple[str, ...]) -> jax.Array:
+    # Deterministic per-path fold-in; stable across process restarts.
+    digest = hashlib.sha256("/".join(path).encode()).digest()
+    fold = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, fold)
+
+
+def init_tree(defs, key: jax.Array):
+    """Materialize a definition tree into real arrays (deterministic)."""
+
+    def materialize_at(path, p: Param):
+        return p.initializer(_path_key(key, path), p.shape, p.dtype)
+
+    def rec(node, path):
+        if _is_param(node):
+            return materialize_at(path, node)
+        return {k: rec(v, path + (str(k),)) for k, v in node.items()}
+
+    return rec(defs, ())
+
+
+def spec_tree(defs):
+    """ShapeDtypeStruct tree — the dry-run's no-allocation param stand-in."""
+    return _map_params(defs, lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype))
+
+
+def logical_to_pspec(
+    axes: Sequence[Optional[str]], rules: Mapping[str, Any]
+) -> PartitionSpec:
+    """Map logical axis names to mesh axes through ``rules``.
+
+    A rule value may be None (replicate), a mesh-axis name, or a tuple of
+    mesh-axis names (product sharding, e.g. fsdp over ("pod", "data")).
+    Guards against using one mesh axis twice in a single spec (illegal in
+    XLA SPMD) by dropping the second occurrence.
+    """
+    used: set[str] = set()
+    out = []
+    for name in axes:
+        assignment = rules.get(name) if name is not None else None
+        if assignment is None:
+            out.append(None)
+            continue
+        entries = assignment if isinstance(assignment, tuple) else (assignment,)
+        kept = tuple(a for a in entries if a not in used)
+        used.update(kept)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(kept)
+    return PartitionSpec(*out)
+
+
+def pspec_tree(defs, rules: Mapping[str, Any]):
+    """PartitionSpec tree mirroring the definition tree."""
+    return _map_params(defs, lambda p: logical_to_pspec(p.axes, rules))
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(p.shape)) for _, p in _walk(defs))
+
+
+def param_bytes(defs) -> int:
+    return sum(
+        int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize for _, p in _walk(defs)
+    )

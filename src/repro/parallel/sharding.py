@@ -1,0 +1,195 @@
+"""Sharding rules: logical axes -> mesh axes (the DP/TP/SP/EP map).
+
+Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single-pod.
+  * DP: batch over (pod, data) — 32 groups on the production mesh;
+  * TP: heads / d_ff / vocab / experts over "model" (Megatron-style);
+  * EP: MoE expert axis over "model" (token exchange = XLA all-to-all);
+  * ZeRO-1: optimizer moments additionally sharded over the DP axes on the
+    first divisible replicated dim;
+  * KV caches: heads over "model" when divisible, else cache length
+    (context-parallel decode).
+
+GSPMD handles non-divisible shardings by padding, but padding heads wastes
+MXU cycles — rules prefer exactly-divisible axes and fall back to
+replication; see EXPERIMENTS.md §Perf for measured effects.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_axes_for(mesh: Mesh, batch: int) -> tuple[str, ...]:
+    """DP axes whose product divides `batch` (else replicate — e.g. the
+    inherently single-stream long_500k cell with global_batch=1)."""
+    axes = dp_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if batch % max(n, 1) == 0:
+        return axes
+    if "data" in axes and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh) -> dict[str, Any]:
+    tp = tp_size(mesh)
+    hd_total = cfg.n_heads * cfg.head_dim
+    kv_total = cfg.n_kv_heads * cfg.head_dim
+    return {
+        # activations' d_model stays replicated on the weight side
+        "embed": None,
+        # embedding table is sharded on d_model (collective-free gather)
+        "embed_shard": "model" if cfg.d_model % tp == 0 else None,
+        "heads": "model" if hd_total % tp == 0 else None,
+        "kv_heads": "model" if kv_total % tp == 0 else None,
+        "mlp": "model" if cfg.d_ff % tp == 0 or cfg.n_experts else "model",
+        "expert": "model" if (cfg.n_experts and cfg.n_experts % tp == 0) else None,
+        "vocab": "model" if cfg.vocab % tp == 0 else "model",
+        "layers": None,
+    }
+
+
+def param_pspecs(model, cfg: ArchConfig, mesh: Mesh):
+    return model.pspecs(make_rules(cfg, mesh))
+
+
+def param_shardings(model, cfg: ArchConfig, mesh: Mesh):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), param_pspecs(model, cfg, mesh)
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    dp = dp_axes_for(mesh, shape.global_batch)
+    specs: dict[str, P] = {"tokens": P(dp, None)}
+    if shape.kind == "train":
+        specs["labels"] = P(dp, None)
+    if cfg.is_encdec and shape.kind != "decode":
+        specs["frames"] = P(dp, None, None)
+    if cfg.is_vlm and shape.kind != "decode":
+        specs["patches"] = P(dp, None, None)
+    return specs
+
+
+def batch_shardings(cfg, shape, mesh):
+    return {
+        k: NamedSharding(mesh, v) for k, v in batch_pspecs(cfg, shape, mesh).items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# optimizer state (ZeRO-1)
+# ---------------------------------------------------------------------------
+def zero_pspec(spec: jax.ShapeDtypeStruct, pspec: P, mesh: Mesh) -> P:
+    """Shard the first replicated, divisible dim of a moment tensor over the
+    DP axes (ZeRO-1). Scalars and already-fully-sharded leaves pass through."""
+    dims = list(pspec) + [None] * (len(spec.shape) - len(pspec))
+    dp = dp_axes(mesh)
+    dp_n = dp_size(mesh)
+    used = {a for d in dims if d is not None
+            for a in (d if isinstance(d, tuple) else (d,))}
+    if any(a in used for a in dp):
+        return pspec
+    for i, (dim, assignment) in enumerate(zip(spec.shape, dims)):
+        if assignment is None and dim % dp_n == 0 and dim > 0:
+            dims[i] = dp if len(dp) > 1 else dp[0]
+            return P(*dims)
+    return pspec
+
+
+def optimizer_pspecs(model, cfg: ArchConfig, mesh: Mesh, zero: bool = True):
+    """Pspecs tree mirroring opt.init_state(params): {m, v, step}."""
+    pspecs = param_pspecs(model, cfg, mesh)
+    specs = model.specs()
+    if zero:
+        moments = jax.tree.map(
+            lambda s, ps: zero_pspec(s, ps, mesh), specs, pspecs
+        )
+    else:
+        moments = pspecs
+    return {"m": moments, "v": jax.tree.map(lambda x: x, moments), "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent-state caches
+# ---------------------------------------------------------------------------
+def cache_pspecs(model, cfg: ArchConfig, mesh: Mesh, batch: int = 0):
+    """Pspecs tree mirroring model.cache_specs(batch, max_len)."""
+    dp = dp_axes_for(mesh, batch) if batch else dp_axes(mesh)
+    tp = tp_size(mesh)
+
+    def kv_spec():
+        # (L, B, T, Hkv, D): heads if divisible else context-parallel length
+        if cfg.n_kv_heads % tp == 0 or cfg.kv_shard_heads_padded:
+            return P(None, dp, None, "model", None)
+        return P(None, dp, "model", None, None)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.kv_quant:
+            out = {"k_q": kv_spec(), "v_q": kv_spec(),
+                   "k_s": kv_spec(), "v_s": kv_spec(), "len": P()}
+        else:
+            out = {"k": kv_spec(), "v": kv_spec(), "len": P()}
+        if cfg.mrope_sections:
+            out["pos_next"] = P()
+        return out
+    if fam == "audio":
+        # cross-attn KV: n_audio_ctx (1500) divides nothing — replicate over
+        # model (73 MB/device at decode_32k, measured in EXPERIMENTS.md)
+        cross = P(None, dp, None, None, None)
+        return {"k": kv_spec(), "v": kv_spec(), "ck": cross,
+                "cv": cross, "len": P()}
+    if fam == "ssm":
+        return {
+            "tm_x": P(None, dp, "model" if cfg.d_model % tp == 0 else None),
+            "cm_x": P(None, dp, "model" if cfg.d_model % tp == 0 else None),
+            # (L, B, H, N, N): heads over model (64 % 16 == 0)
+            "s": P(None, dp, "model", None, None),
+            "len": P(),
+        }
+    if fam == "hybrid":
+        w_ok = (cfg.rglru_width or cfg.d_model) % tp == 0
+        rec = {
+            "h": P(None, dp, "model" if w_ok else None),
+            "conv": P(None, dp, None, "model" if w_ok else None),
+        }
+        tail_rec = {
+            "h": P(dp, "model" if w_ok else None),
+            "conv": P(dp, None, "model" if w_ok else None),
+        }
+        n_tail = cfg.n_layers - 3 * (cfg.n_layers // 3)
+        return {
+            "periods": {"r1": rec, "r2": dict(rec)},
+            "tail": {f"t{i}": dict(tail_rec) for i in range(n_tail)},
+            # MQA kv=1: shard window length over model
+            "k": P(None, dp, "model", None, None),
+            "v": P(None, dp, "model", None, None),
+            "len": P(),
+        }
+    raise KeyError(fam)
+
+
+def logits_pspec(cfg: ArchConfig, mesh: Mesh) -> P:
+    return P(dp_axes(mesh), None, "model" if cfg.vocab % tp_size(mesh) == 0 else None)

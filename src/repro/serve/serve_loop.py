@@ -1,0 +1,59 @@
+"""Batched serving loop: prefill + greedy decode with continuous batching.
+
+Single-controller logic; the jit'd prefill/decode steps are the same
+functions the dry-run lowers for the decode_* cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    steps: int = 0
+
+
+class Server:
+    def __init__(self, model, params, *, max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=max_len)
+        )
+        self._decode = jax.jit(model.decode_step)
+        self.stats = ServeStats()
+
+    def generate(self, batch: dict[str, Any], n_new: int,
+                 greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """Returns (B, n_new) generated token ids."""
+        logits, cache = self._prefill(self.params, batch)
+        self.stats.prefill_tokens += int(np.prod(batch["tokens"].shape))
+        b = batch["tokens"].shape[0]
+        out = np.zeros((b, n_new), np.int32)
+        key = jax.random.PRNGKey(seed)
+        tok = self._pick(logits, greedy, key)
+        for i in range(n_new):
+            out[:, i] = np.asarray(tok[:, 0])
+            logits, cache = self._decode(self.params, cache, tok)
+            key, sub = jax.random.split(key)
+            tok = self._pick(logits, greedy, sub)
+            self.stats.decode_tokens += b
+            self.stats.steps += 1
+        return out
+
+    @staticmethod
+    def _pick(logits, greedy, key):
+        if greedy:
+            return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        probs = jax.nn.softmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return jax.random.categorical(key, jnp.log(probs))[:, None].astype(
+            jnp.int32)

@@ -1,0 +1,91 @@
+"""Train/serve step factories — the functions the dry-run lowers and the
+examples execute.
+
+``make_train_step`` closes over (model, optimizer config, compression config)
+and returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+including forward, backward, (optional) gradient compression with error
+feedback, and the AdamW update — the *whole* production step, so
+cost_analysis sees everything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import gradient_compression as gc
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.AdamWConfig = dataclasses.field(default_factory=opt.AdamWConfig)
+    compression: Optional[gc.CompressionConfig] = None
+    # microbatch accumulation (1 = none); batch axis must divide
+    grad_accum: int = 1
+
+
+def init_train_state(model, params, train_cfg: TrainConfig) -> dict[str, Any]:
+    state: dict[str, Any] = {"opt": opt.init_state(params)}
+    if train_cfg.compression and train_cfg.compression.enabled:
+        state["residuals"] = gc.init_residuals(params)
+    return state
+
+
+def make_train_step(model, train_cfg: TrainConfig):
+    ocfg = train_cfg.optimizer
+    ccfg = train_cfg.compression
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def one_grad(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, state, batch):
+        if train_cfg.grad_accum > 1:
+            # Unrolled accumulation: bounded live activations (the microbatch
+            # is the remat unit) and exact cost_analysis accounting (a scan
+            # here would be counted once by HloCostAnalysis).
+            n = train_cfg.grad_accum
+            microbatches = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+            )
+            loss = jnp.zeros((), jnp.float32)
+            grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            for i in range(n):
+                mb = jax.tree.map(lambda x: x[i], microbatches)
+                l_i, g_i = one_grad(params, mb)
+                loss = loss + l_i / n
+                grads = jax.tree.map(lambda a, g: a + g / n, grads, g_i)
+        else:
+            loss, grads = one_grad(params, batch)
+
+        new_state = dict(state)
+        if ccfg and ccfg.enabled:
+            grads, new_state["residuals"] = gc.compress_tree(
+                grads, state["residuals"], ccfg)
+        params, new_state["opt"], om = opt.update(ocfg, grads, state["opt"], params)
+        metrics = {"loss": loss, **om}
+        return params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return serve_step

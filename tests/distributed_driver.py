@@ -1,0 +1,162 @@
+"""Subprocess driver for multi-device tests (8 fake CPU devices).
+
+Run as:  python tests/distributed_driver.py <scenario>
+Prints "SCENARIO_OK <name>" on success; any exception exits non-zero.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config, SHAPES, ShapeSpec
+from repro.launch.mesh import make_mesh
+from repro.models.registry import build_model, make_batch
+from repro.parallel import sharding as sh
+from repro.parallel.gradient_compression import (
+    CompressionConfig, quantized_all_reduce)
+from repro.train import optimizer as opt
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_loop import (
+    TrainConfig, init_train_state, make_train_step)
+
+
+def _small_setup(arch="llama3_2_1b", mesh_shape=(4, 2)):
+    cfg = get_config(arch).smoke()
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    p_shard = jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                           sh.param_pspecs(model, cfg, mesh))
+    params = jax.tree.map(jax.device_put, params, p_shard)
+    return cfg, mesh, model, params, p_shard
+
+
+def scenario_sharded_train_step():
+    """Sharded train step on a (4, 2) mesh must match single-device numerics."""
+    cfg, mesh, model, params, p_shard = _small_setup()
+    tcfg = TrainConfig(optimizer=opt.AdamWConfig(lr=1e-3))
+    step = make_train_step(model, tcfg)
+    state = init_train_state(model, params, tcfg)
+    batch = make_batch(cfg, batch=8, seq=16, kind="train")
+    shape = ShapeSpec("t", 16, 8, "train")
+    b_shard = sh.batch_shardings(cfg, shape, mesh)
+    batch_sharded = {k: jax.device_put(v, b_shard[k]) for k, v in batch.items()}
+
+    with mesh:
+        p2, s2, m2 = jax.jit(step)(params, state, batch_sharded)
+    # reference: plain single-device execution
+    params_host = jax.device_get(params)
+    state_host = jax.device_get(state)
+    p1, s1, m1 = jax.jit(step)(params_host, state_host, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4, atol=1e-5)
+    flat1 = jax.tree.leaves(p1)
+    flat2 = jax.tree.leaves(jax.device_get(p2))
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-4)
+    print("SCENARIO_OK sharded_train_step")
+
+
+def scenario_quantized_all_reduce():
+    mesh = make_mesh((8,), ("data",))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)).astype(np.float32))
+    xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+    got = quantized_all_reduce(xs, mesh, axis="data")
+    want = jnp.broadcast_to(x.sum(axis=0, keepdims=True) * 0 + x.sum(axis=0),
+                            x.shape)  # full sum on every row? no:
+    # quantized_all_reduce sums *shards* -> every shard holds the total
+    total = np.asarray(x).sum(axis=0)
+    got_host = jax.device_get(got)
+    for row in got_host.reshape(8, 64):
+        np.testing.assert_allclose(row, total, rtol=0.05, atol=0.05)
+    print("SCENARIO_OK quantized_all_reduce")
+
+
+def scenario_checkpoint_elastic():
+    """Save under a (4,2) mesh, restore under (2,4) and (8,1) — elastic."""
+    cfg, mesh, model, params, _ = _small_setup(mesh_shape=(4, 2))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        mgr.save(3, params, wait=True)
+        for new_shape in [(2, 4), (8, 1), (1, 8)]:
+            mesh2 = make_mesh(new_shape, ("data", "model"))
+            shard2 = jax.tree.map(lambda ps: NamedSharding(mesh2, ps),
+                                  sh.param_pspecs(model, cfg, mesh2))
+            restored, step = mgr.restore(model.specs(), shardings=shard2)
+            assert step == 3
+            for a, b in zip(jax.tree.leaves(jax.device_get(params)),
+                            jax.tree.leaves(jax.device_get(restored))):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("SCENARIO_OK checkpoint_elastic")
+
+
+def scenario_dryrun_small_mesh():
+    """Full dry-run mechanics on an 8-device (4,2) mesh for one arch."""
+    cfg = get_config("llama3_2_1b")
+    mesh = make_mesh((4, 2), ("data", "model"))
+    model = build_model(cfg)
+    from repro.models.registry import input_specs
+    from repro.train.train_loop import make_train_step
+    shape = SHAPES["train_4k"]
+    specs = model.specs()
+    p_shard = jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                           sh.param_pspecs(model, cfg, mesh))
+    b_shard = {k: NamedSharding(mesh, v)
+               for k, v in sh.batch_pspecs(cfg, shape, mesh).items()}
+    tcfg = TrainConfig(optimizer=opt.AdamWConfig(lr=1e-4))
+    step = make_train_step(model, tcfg)
+    from repro.launch.dryrun import train_state_specs, parse_collective_bytes
+    st_specs = train_state_specs(specs)
+    st_shard = {"opt": jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        sh.optimizer_pspecs(model, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P))}
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(p_shard, st_shard, b_shard),
+                          out_shardings=(p_shard, st_shard, None)).lower(
+            specs, st_specs, input_specs(cfg, shape))
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0
+    coll = parse_collective_bytes(compiled.as_text())
+    assert coll["total"] > 0, "sharded train step must communicate"
+    print("SCENARIO_OK dryrun_small_mesh")
+
+
+def scenario_moe_ep_sharded():
+    """MoE forward under EP sharding matches unsharded numerics."""
+    cfg = get_config("qwen3_moe_30b_a3b").smoke().replace(n_experts=8,
+                                                          moe_top_k=2)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg, batch=4, seq=16, kind="train")
+    loss1 = float(jax.jit(model.loss)(params, batch))
+    p_shard = jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                           sh.param_pspecs(model, cfg, mesh))
+    params_s = jax.tree.map(jax.device_put, params, p_shard)
+    with mesh:
+        loss2 = float(jax.jit(model.loss)(params_s, batch))
+    np.testing.assert_allclose(loss1, loss2, rtol=1e-4)
+    print("SCENARIO_OK moe_ep_sharded")
+
+
+SCENARIOS = {
+    "sharded_train_step": scenario_sharded_train_step,
+    "quantized_all_reduce": scenario_quantized_all_reduce,
+    "checkpoint_elastic": scenario_checkpoint_elastic,
+    "dryrun_small_mesh": scenario_dryrun_small_mesh,
+    "moe_ep_sharded": scenario_moe_ep_sharded,
+}
+
+if __name__ == "__main__":
+    SCENARIOS[sys.argv[1]]()

@@ -1,0 +1,159 @@
+"""Unit tests for the compression substrate: blocking, quantization, entropy
+coding, index coding, PCA, and metrics."""
+
+import numpy as np
+import pytest
+
+from repro.core import blocking, entropy, index_coding, metrics, pca
+from repro.core.quantization import dequantize, quantize
+
+
+class TestBlocking:
+    @pytest.mark.parametrize(
+        "shape,geom",
+        [
+            ((6, 8, 20, 12), blocking.BlockGeometry(4, 5, 4)),
+            ((3, 4, 10, 8), blocking.BlockGeometry(2, 5, 2)),
+            ((1, 4, 5, 4), blocking.PAPER_GEOMETRY),
+            ((58, 8, 10, 8), blocking.PAPER_GEOMETRY),
+        ],
+    )
+    def test_round_trip(self, shape, geom):
+        rng = np.random.default_rng(1)
+        data = rng.normal(size=shape).astype(np.float32)
+        b = blocking.to_blocks(data, geom)
+        s, t, h, w = shape
+        nb = (t // geom.bt) * (h // geom.ph) * (w // geom.pw)
+        assert b.shape == (nb, s, geom.bt, geom.ph, geom.pw)
+        assert np.array_equal(blocking.from_blocks(b, shape, geom), data)
+
+    def test_vector_round_trip(self):
+        rng = np.random.default_rng(2)
+        data = rng.normal(size=(5, 8, 10, 8)).astype(np.float32)
+        b = blocking.to_blocks(data, blocking.PAPER_GEOMETRY)
+        v = blocking.blocks_as_vectors(b)
+        assert v.shape == (5, b.shape[0], 80)
+        assert np.array_equal(
+            blocking.vectors_as_blocks(v, blocking.PAPER_GEOMETRY), b
+        )
+
+    def test_indivisible_raises(self):
+        data = np.zeros((2, 7, 20, 12), np.float32)
+        with pytest.raises(ValueError):
+            blocking.to_blocks(data, blocking.PAPER_GEOMETRY)
+
+    def test_block_locality(self):
+        """A block must contain exactly one spatiotemporal patch."""
+        geom = blocking.BlockGeometry(2, 2, 2)
+        data = np.arange(1 * 4 * 4 * 4, dtype=np.float32).reshape(1, 4, 4, 4)
+        b = blocking.to_blocks(data, geom)
+        # first block = t 0:2, h 0:2, w 0:2 of species 0
+        assert np.array_equal(b[0, 0], data[0, 0:2, 0:2, 0:2])
+
+
+class TestQuantization:
+    @pytest.mark.parametrize("bin_size", [1e-4, 0.01, 0.5, 3.0])
+    def test_error_bound(self, bin_size):
+        rng = np.random.default_rng(3)
+        x = rng.normal(scale=10.0, size=10000).astype(np.float64)
+        q, xhat = quantize(x, bin_size), dequantize(quantize(x, bin_size), bin_size)
+        assert np.abs(x - xhat).max() <= bin_size / 2 + 1e-12
+        assert q.dtype == np.int64
+
+    def test_bad_bin(self):
+        with pytest.raises(ValueError):
+            quantize(np.ones(3), 0.0)
+
+
+class TestHuffman:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_round_trip_random(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 20000))
+        vals = (rng.integers(-40, 40, size=n) ** 3) // rng.integers(1, 50)
+        blob = entropy.huffman_encode(vals)
+        assert np.array_equal(entropy.huffman_decode(blob), vals)
+        assert entropy.huffman_size_bytes(vals) == len(blob)
+
+    def test_empty_and_single_symbol(self):
+        for vals in [np.zeros(0, np.int64), np.full(777, -3, np.int64)]:
+            blob = entropy.huffman_encode(vals)
+            assert np.array_equal(entropy.huffman_decode(blob), vals)
+
+    def test_skewed_beats_raw(self):
+        rng = np.random.default_rng(9)
+        vals = np.rint(rng.normal(scale=1.5, size=100000)).astype(np.int64)
+        assert entropy.huffman_size_bytes(vals) < vals.size  # << 8 bytes/sym
+
+    def test_zstd_round_trip(self):
+        data = np.arange(1000, dtype=np.int32).tobytes()
+        assert entropy.zstd_unbytes(entropy.zstd_bytes(data)) == data
+
+
+class TestIndexCoding:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_round_trip(self, seed):
+        rng = np.random.default_rng(seed)
+        sets = []
+        for _ in range(200):
+            m = int(rng.integers(0, 30))
+            sets.append(
+                np.sort(rng.choice(80, size=m, replace=False)).astype(np.int64)
+            )
+        blob = index_coding.encode_indices(sets)
+        out = index_coding.decode_indices(blob)
+        assert len(out) == len(sets)
+        for a, b in zip(sets, out):
+            assert np.array_equal(a, b)
+        assert index_coding.encoded_size_bytes(sets) == len(blob)
+
+    def test_prefix_property(self):
+        """Leading-index selections must cost fewer bits than trailing ones."""
+        lead = [np.arange(5, dtype=np.int64) for _ in range(100)]
+        trail = [np.arange(75, 80, dtype=np.int64) for _ in range(100)]
+        assert index_coding.encoded_size_bytes(lead) < index_coding.encoded_size_bytes(
+            trail
+        )
+
+
+class TestPCA:
+    def test_orthonormal_and_sorted(self):
+        rng = np.random.default_rng(5)
+        r = rng.normal(size=(400, 32)) @ np.diag(np.linspace(3, 0.1, 32))
+        u, ev = pca.pca_basis(r)
+        assert np.allclose(u.T @ u, np.eye(32), atol=1e-10)
+        assert np.all(np.diff(ev) <= 1e-9)
+
+    def test_projection_reconstructs(self):
+        rng = np.random.default_rng(6)
+        r = rng.normal(size=(100, 16))
+        u, _ = pca.pca_basis(r)
+        c = pca.project(r, u)
+        assert np.allclose(c @ u.T, r, atol=1e-10)
+
+
+class TestMetrics:
+    def test_nrmse_zero(self):
+        x = np.random.default_rng(0).normal(size=(4, 5))
+        assert metrics.nrmse(x, x) == 0.0
+
+    def test_nrmse_scale_invariant(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=1000)
+        noise = rng.normal(size=1000) * 0.01
+        a = metrics.nrmse(x, x + noise)
+        b = metrics.nrmse(1e6 * x, 1e6 * (x + noise))
+        assert np.isclose(a, b, rtol=1e-6)
+
+    def test_psnr_monotone(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(64, 64))
+        small = x + 1e-4 * rng.normal(size=x.shape)
+        big = x + 1e-2 * rng.normal(size=x.shape)
+        assert metrics.psnr(x, small) > metrics.psnr(x, big)
+
+    def test_ssim_identity_and_noise(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(48, 48))
+        assert metrics.ssim2d(x, x) == pytest.approx(1.0, abs=1e-9)
+        assert metrics.ssim2d(x, x + rng.normal(size=x.shape)) < 0.9

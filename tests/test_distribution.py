@@ -1,0 +1,220 @@
+"""Distribution-layer tests.
+
+Multi-device scenarios run in a subprocess with 8 fake CPU devices (device
+count is locked at first jax init, so the main pytest process stays at 1).
+Single-device pieces (checkpoint manager, fault tolerance, watchdog,
+gradient-compression numerics, data pipeline determinism) run in-process.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.parallel.gradient_compression import (
+    CompressionConfig, compress_tree, init_residuals)
+from repro.train.checkpoint import CheckpointManager, compress_state_bytes, flatten_tree
+from repro.train.fault_tolerance import StepFailure, Watchdog, run_with_recovery
+
+_DRIVER = os.path.join(os.path.dirname(__file__), "distributed_driver.py")
+
+
+def _run_scenario(name, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, _DRIVER, name], capture_output=True, text=True,
+        timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"{name} failed:\n{out.stdout}\n{out.stderr}"
+    assert f"SCENARIO_OK {name}" in out.stdout
+
+
+@pytest.mark.parametrize("scenario", [
+    "sharded_train_step",
+    "quantized_all_reduce",
+    "checkpoint_elastic",
+    "dryrun_small_mesh",
+    "moe_ep_sharded",
+])
+def test_multi_device_scenario(scenario):
+    _run_scenario(scenario)
+
+
+class TestGradientCompression:
+    def test_error_feedback_accumulates(self):
+        """Sum of compressed grads + final residual == sum of raw grads
+        (EF telescopes)."""
+        rng = np.random.default_rng(0)
+        grads = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+        res = init_residuals(grads)
+        cfg = CompressionConfig(n_bits=4, block=32)
+        total_raw = np.zeros((64, 64), np.float32)
+        total_comp = np.zeros((64, 64), np.float32)
+        for step in range(10):
+            g = {"w": jnp.asarray(
+                rng.normal(size=(64, 64)).astype(np.float32))}
+            total_raw += np.asarray(g["w"])
+            cg, res = compress_tree(g, res, cfg)
+            total_comp += np.asarray(cg["w"])
+        np.testing.assert_allclose(
+            total_comp + np.asarray(res["w"]), total_raw, rtol=1e-5, atol=1e-5)
+
+    def test_per_step_error_bounded(self):
+        rng = np.random.default_rng(1)
+        g = {"w": jnp.asarray(rng.normal(size=(128,)).astype(np.float32))}
+        res = init_residuals(g)
+        cfg = CompressionConfig(n_bits=8, block=64)
+        cg, new_res = compress_tree(g, res, cfg)
+        err = np.abs(np.asarray(cg["w"]) - np.asarray(g["w"]))
+        scale = np.abs(np.asarray(g["w"])).reshape(2, 64).max(1) / 127.0
+        assert (err.reshape(2, 64) <= scale[:, None] * 0.5 + 1e-7).all()
+
+    def test_disabled_passthrough(self):
+        g = {"w": jnp.ones((8,))}
+        res = init_residuals(g)
+        cg, res2 = compress_tree(g, res, CompressionConfig(enabled=False))
+        np.testing.assert_array_equal(np.asarray(cg["w"]), np.ones(8))
+
+
+class TestCheckpointManager:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {
+            "a": {"w": rng.normal(size=(16, 8)).astype(np.float32)},
+            "step": np.asarray(7, np.int32),
+        }
+
+    def test_save_restore_roundtrip(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_write=False)
+            tree = self._tree()
+            mgr.save(5, tree)
+            restored, step = mgr.restore(tree)
+            assert step == 5
+            np.testing.assert_array_equal(restored["a"]["w"], tree["a"]["w"])
+
+    def test_corruption_detected(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_write=False)
+            tree = self._tree()
+            path = mgr.save(1, tree)
+            # corrupt the array file
+            npz = os.path.join(path, "arrays.npz")
+            data = dict(np.load(npz))
+            data["a/w"] = data["a/w"] + 1.0
+            np.savez(npz, **data)
+            with pytest.raises(IOError, match="corruption"):
+                mgr.restore(tree)
+
+    def test_gc_keeps_last_k(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_write=False)
+            for s in range(5):
+                mgr.save(s, self._tree())
+            assert mgr.all_steps() == [3, 4]
+            assert mgr.latest_step() == 4
+
+    def test_async_save(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_write=True)
+            mgr.save(9, self._tree())
+            mgr.wait()
+            assert mgr.latest_step() == 9
+
+    def test_gbatc_compressed_checkpoint(self):
+        """Guaranteed weight compression: ratio > 2x, per-tensor rel error
+        below the bound."""
+        rng = np.random.default_rng(3)
+        flat = {
+            f"layer{i}/w": rng.normal(size=(256, 128)).astype(np.float32)
+            for i in range(3)
+        }
+        rec, nbytes, report = compress_state_bytes(flat, tau_rel=1e-2)
+        assert report["ratio"] > 2.0
+        for k in flat:
+            blocks = flat[k].reshape(-1, 256)
+            rblocks = rec[k].reshape(-1, 256)
+            norms = np.linalg.norm(blocks - rblocks, axis=1)
+            rms = np.sqrt(np.mean(blocks**2))
+            assert norms.max() <= 1e-2 * rms * np.sqrt(256) * (1 + 1e-6)
+
+
+class TestFaultTolerance:
+    def test_watchdog_flags_stragglers(self):
+        wd = Watchdog(threshold=2.0)
+        for i in range(10):
+            wd.observe(i, 1.0)
+        assert not wd.straggler_steps
+        assert wd.observe(10, 5.0)
+        assert wd.straggler_steps == [10]
+
+    def test_recovery_resumes_and_matches(self):
+        """A crash at step 7 must recover from the checkpoint and produce
+        the same final state as an uninterrupted run (determinism)."""
+
+        def make_step(fail_at=None):
+            calls = {"n": 0}
+
+            def step_fn(step, state):
+                if fail_at is not None and step == fail_at and calls["n"] < 1:
+                    calls["n"] += 1
+                    raise StepFailure("injected")
+                return {"x": state["x"] + step}
+
+            return step_fn
+
+        with tempfile.TemporaryDirectory() as d1:
+            ckpt = CheckpointManager(d1, async_write=False)
+            final1, rep1 = run_with_recovery(
+                step_fn=make_step(fail_at=7), init_state={"x": np.zeros(3)},
+                n_steps=12, ckpt=ckpt, save_every=3)
+            assert rep1["restarts"] == 1
+        with tempfile.TemporaryDirectory() as d2:
+            ckpt = CheckpointManager(d2, async_write=False)
+            final2, rep2 = run_with_recovery(
+                step_fn=make_step(fail_at=None), init_state={"x": np.zeros(3)},
+                n_steps=12, ckpt=ckpt, save_every=3)
+            assert rep2["restarts"] == 0
+        np.testing.assert_array_equal(final1["x"], final2["x"])
+
+    def test_too_many_failures_raises(self):
+        def step_fn(step, state):
+            raise StepFailure("always")
+
+        with tempfile.TemporaryDirectory() as d:
+            ckpt = CheckpointManager(d, async_write=False)
+            with pytest.raises(StepFailure):
+                run_with_recovery(step_fn=step_fn, init_state={"x": 0},
+                                  n_steps=3, ckpt=ckpt, max_restarts=2)
+
+
+class TestTokenPipeline:
+    def test_deterministic_per_step(self):
+        cfg = TokenPipelineConfig(vocab=100, batch=8, seq_len=32, seed=1)
+        p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+        b1, b2 = p1.batch_at(17), p2.batch_at(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_shards_partition_batch(self):
+        cfg = TokenPipelineConfig(vocab=100, batch=8, seq_len=16, seed=2,
+                                  n_shards=2, shard=0)
+        b0 = TokenPipeline(cfg).batch_at(3)
+        assert b0["tokens"].shape == (4, 16)
+        b1 = TokenPipeline(
+            TokenPipelineConfig(vocab=100, batch=8, seq_len=16, seed=2,
+                                n_shards=2, shard=1)).batch_at(3)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = TokenPipelineConfig(vocab=50, batch=2, seq_len=10, seed=0)
+        b = TokenPipeline(cfg).batch_at(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

@@ -1,0 +1,91 @@
+"""Tests for Algorithm 1 — the error-bound guarantee is the paper's core claim."""
+
+import numpy as np
+import pytest
+
+from repro.core import gae
+
+
+def _make_case(seed, nb=300, d=80, noise=0.1):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(nb, d)).astype(np.float32)
+    x_rec = x + noise * rng.normal(size=(nb, d)).astype(np.float32)
+    return x, x_rec
+
+
+class TestGuarantee:
+    @pytest.mark.parametrize("tau", [0.1, 0.5, 2.0])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_bound_holds_every_block(self, tau, seed):
+        x, x_rec = _make_case(seed)
+        corrected, art = gae.guarantee(x, x_rec, tau)
+        assert gae.verify_guarantee(x, corrected, tau)
+        r = np.linalg.norm(x.astype(np.float64) - corrected, axis=1)
+        assert r.max() <= tau + 1e-4
+
+    def test_bound_holds_with_heavy_tailed_residuals(self):
+        rng = np.random.default_rng(7)
+        x = rng.standard_t(df=1.5, size=(200, 80)).astype(np.float32)
+        x_rec = np.zeros_like(x)  # terrible reconstruction
+        corrected, art = gae.guarantee(x, x_rec, 0.25)
+        assert gae.verify_guarantee(x, corrected, 0.25)
+
+    def test_decode_replay_matches(self):
+        x, x_rec = _make_case(2)
+        corrected, art = gae.guarantee(x, x_rec, 0.4)
+        replay = gae.apply_correction(x_rec, art)
+        np.testing.assert_allclose(replay, corrected, atol=1e-6)
+
+    def test_loose_bound_stores_nothing(self):
+        x, x_rec = _make_case(3, noise=0.01)
+        corrected, art = gae.guarantee(x, x_rec, 1e6)
+        assert art.coeff_q.size == 0
+        assert art.basis.shape[1] == 0
+        np.testing.assert_array_equal(corrected, x_rec.astype(np.float32))
+
+    def test_tighter_bound_costs_more(self):
+        x, x_rec = _make_case(4)
+        _, loose = gae.guarantee(x, x_rec, 1.0)
+        _, tight = gae.guarantee(x, x_rec, 0.1)
+        assert tight.total_bytes() > loose.total_bytes()
+
+    def test_coefficients_prefer_leading_basis(self):
+        """Energy-sorted selection should concentrate on leading PCA vectors
+        when the residual is low-rank — the premise of the Fig. 2 coding."""
+        rng = np.random.default_rng(5)
+        d, rank = 64, 4
+        factors = rng.normal(size=(rank, d))
+        weights = rng.normal(size=(500, rank))
+        x_rec = np.zeros((500, d), np.float32)
+        x = (weights @ factors).astype(np.float32)
+        _, art = gae.guarantee(x, x_rec, 0.05)
+        used = np.concatenate([s for s in art.index_sets if s.size])
+        # ~all selected indices within the true rank (+ tiny noise margin)
+        assert np.quantile(used, 0.99) <= rank + 1
+
+    def test_custom_coeff_bin_clamped_for_guarantee(self):
+        x, x_rec = _make_case(6)
+        # absurdly coarse bin must be clamped so the bound still holds
+        corrected, art = gae.guarantee(x, x_rec, 0.3, coeff_bin=100.0)
+        assert gae.verify_guarantee(x, corrected, 0.3)
+        assert art.coeff_bin <= 1.8 * 0.3 / np.sqrt(80) + 1e-12
+
+
+class TestGuaranteeProperties:
+    """Property-style sweeps (hypothesis unavailable offline): random shapes,
+    scales, noise levels — the bound must hold unconditionally."""
+
+    @pytest.mark.parametrize("trial", range(10))
+    def test_random_cases(self, trial):
+        rng = np.random.default_rng(100 + trial)
+        nb = int(rng.integers(1, 400))
+        d = int(rng.integers(4, 128))
+        scale = 10.0 ** rng.uniform(-6, 4)
+        noise = 10.0 ** rng.uniform(-3, 0)
+        tau = scale * 10.0 ** rng.uniform(-3, 0.5)
+        x = (scale * rng.normal(size=(nb, d))).astype(np.float32)
+        x_rec = x + (scale * noise * rng.normal(size=(nb, d))).astype(np.float32)
+        corrected, art = gae.guarantee(x, x_rec, tau)
+        assert gae.verify_guarantee(x, corrected, tau)
+        replay = gae.apply_correction(x_rec, art)
+        np.testing.assert_allclose(replay, corrected, rtol=1e-5, atol=1e-6 * scale)

@@ -1,0 +1,68 @@
+"""Tests for the SZ3-style baseline: pointwise error bound + exact decode."""
+
+import numpy as np
+import pytest
+
+from repro.core import sz
+
+
+def _smooth_field(seed, shape):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape)
+    for ax in range(3):  # crude smoothing -> compressible field
+        for _ in range(3):
+            x = 0.5 * x + 0.25 * (np.roll(x, 1, ax) + np.roll(x, -1, ax))
+    return x.astype(np.float32)
+
+
+class TestSZ:
+    @pytest.mark.parametrize("eb", [1e-1, 1e-3, 1e-5])
+    def test_pointwise_error_bound(self, eb):
+        data = _smooth_field(0, (16, 24, 20))
+        art = sz.compress(data, eb)
+        assert np.abs(art.recon.astype(np.float64) - data).max() <= eb * (1 + 1e-9)
+
+    @pytest.mark.parametrize("shape", [(8, 8, 8), (10, 33, 47), (4, 5, 6), (50, 12, 9)])
+    def test_decode_matches_encode_side_recon(self, shape):
+        data = _smooth_field(1, shape)
+        art = sz.compress(data, 1e-3)
+        dec = sz.decompress(art)
+        np.testing.assert_allclose(dec, art.recon, atol=1e-12)
+
+    def test_smooth_data_compresses_well(self):
+        data = _smooth_field(2, (16, 48, 48))
+        art = sz.compress(data, 1e-2 * float(data.max() - data.min()))
+        assert data.nbytes / art.payload_bytes() > 10
+
+    def test_tighter_bound_costs_more(self):
+        data = _smooth_field(3, (16, 32, 32))
+        loose = sz.compress(data, 1e-2).payload_bytes()
+        tight = sz.compress(data, 1e-4).payload_bytes()
+        assert tight > loose
+
+    def test_constant_field_nearly_free(self):
+        data = np.full((8, 16, 16), 3.25, np.float32)
+        art = sz.compress(data, 1e-6)
+        assert np.abs(art.recon - data).max() <= 1e-6
+        assert art.payload_bytes() < 2048
+
+    def test_outlier_path(self):
+        """A spike far beyond the quantization radius must round-trip raw."""
+        data = _smooth_field(4, (8, 16, 16))
+        data[3, 7, 9] = 1e9
+        eb = 1e-7
+        art = sz.compress(data, eb)
+        assert art.outlier_values.size >= 1
+        assert np.abs(art.recon[3, 7, 9] - 1e9) <= 1.0  # fp32 round only
+        dec = sz.decompress(art)
+        np.testing.assert_allclose(dec, art.recon, atol=1e-12)
+
+    @pytest.mark.parametrize("trial", range(5))
+    def test_property_random_shapes(self, trial):
+        rng = np.random.default_rng(200 + trial)
+        shape = tuple(int(rng.integers(4, 40)) for _ in range(3))
+        eb = 10.0 ** rng.uniform(-6, -1)
+        data = _smooth_field(trial, shape) * 10.0 ** rng.uniform(-3, 3)
+        art = sz.compress(data, eb)
+        assert np.abs(art.recon.astype(np.float64) - data).max() <= eb * (1 + 1e-9)
+        np.testing.assert_allclose(sz.decompress(art), art.recon, atol=1e-12)
