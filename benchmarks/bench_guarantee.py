@@ -1,0 +1,173 @@
+"""Guarantee-stage benchmark: device-resident engine vs the numpy oracle.
+
+Measures the hot path of the whole system — Algorithm 1's per-error-bound
+compress/decompress post-process — on the quick-mode surrogate geometry at
+the paper's full time span (S=12 species, NB=5120 blocks of D=80: the
+bench_compression quick spatial grid with T=64 frames).
+
+Two workloads are timed at every tau in the sweep:
+
+* oracle: the retained per-species float64 numpy implementation
+  (``gae_ref.guarantee`` + ``gae_ref.apply_correction``), exactly the seed
+  pipeline's stage 5;
+* engine: ``gae.GuaranteeEngine`` — tau-independent ``prepare`` (residual,
+  PCA, Pallas fp64 projection, energy ordering) paid once for the sweep,
+  then per-tau ``select`` (jitted fp64 cut + masked select-and-accumulate
+  Pallas kernel) and batched decode replay.
+
+The engine's byte accounting must be bit-identical to the oracle's and
+``verify_guarantee`` must hold at every bound — the benchmark asserts both,
+so a perf number from a wrong engine cannot be reported.
+
+Writes BENCH_guarantee.json (repo root) with per-tau timings and the
+headline sweep speedup; also emits results/bench/guarantee.csv.
+
+  PYTHONPATH=src python -m benchmarks.bench_guarantee
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import gae, gae_ref  # noqa: E402
+
+# quick-mode surrogate geometry: 12 species on the 80x80 spatial grid in
+# 4x5x4 blocks (bench_compression quick), at the paper's full time span
+# (T=64 vs the paper's 50 steps) -> 5120 blocks of D=80 per species; taus
+# from the TARGETS error bounds (tau = target_nrmse * sqrt(D), range = 1)
+S, NB, D = 12, 5120, 80
+TARGETS = (3e-3, 1e-3, 3e-4, 1e-4)
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_guarantee.json")
+OUT_CSV = "results/bench/guarantee.csv"
+
+
+def make_problem(seed: int = 0, noise: float = 0.02):
+    """Normalized-units surrogate: blocks in ~[0,1], AE-like residual."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(S, NB, D)).astype(np.float32) * 0.18 + 0.5
+    x_rec = base + noise * rng.normal(size=base.shape).astype(np.float32)
+    return base, x_rec
+
+
+def _time(fn, repeat=3):
+    """Best-of-N wall time: robust to CPU contention in shared runners."""
+    fn()  # warmup (jit compile / allocator)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _assert_bit_identical(arts, x, x_rec, tau):
+    """Engine artifacts vs fresh oracle runs: same bytes, bit for bit."""
+    total_engine = 0
+    total_oracle = 0
+    for s in range(S):
+        _, a_ref = gae_ref.guarantee(x[s], x_rec[s], tau)
+        a_eng = arts[s]
+        assert np.array_equal(a_eng.coeff_q, a_ref.coeff_q), "coeff stream"
+        assert np.array_equal(a_eng.index_offsets, a_ref.index_offsets)
+        assert np.array_equal(a_eng.index_flat, a_ref.index_flat), "index sets"
+        assert np.array_equal(a_eng.basis, a_ref.basis), "trimmed basis"
+        total_engine += a_eng.total_bytes()
+        total_oracle += a_ref.total_bytes()
+    assert total_engine == total_oracle
+    return total_engine
+
+
+def run(seed: int = 0, repeat: int = 8):
+    x, x_rec = make_problem(seed)
+    taus = [t * np.sqrt(D) for t in TARGETS]
+    engine = gae.GuaranteeEngine()
+
+    prepare_s = _time(lambda: engine.prepare(x, x_rec), repeat=2)
+    prep = engine.prepare(x, x_rec)
+
+    rows = []
+    oracle_total = 0.0
+    engine_total = prepare_s
+    for target, tau in zip(TARGETS, taus):
+        # --- oracle: per-species guarantee + decode replay -------------
+        def oracle_pass():
+            arts = []
+            for s in range(S):
+                _, art = gae_ref.guarantee(x[s], x_rec[s], tau)
+                arts.append(art)
+            for s in range(S):
+                gae_ref.apply_correction(x_rec[s], arts[s])
+        oracle_s = _time(oracle_pass, repeat=3)
+
+        # --- engine: per-tau select + batched decode replay ------------
+        def engine_pass():
+            corrected, arts = engine.select(prep, tau)
+            gae.apply_correction_batched(x_rec, arts, engine)
+        select_s = _time(engine_pass, repeat=repeat)
+
+        corrected, arts = engine.select(prep, tau)
+        for s in range(S):
+            assert gae.verify_guarantee(x[s], corrected[s], tau), \
+                f"bound violated at target={target:g}"
+        total_bytes = _assert_bit_identical(arts, x, x_rec, tau)
+
+        oracle_total += oracle_s
+        engine_total += select_s
+        rows.append({
+            "target_nrmse": target,
+            "tau": tau,
+            "oracle_ms": oracle_s * 1e3,
+            "engine_select_ms": select_s * 1e3,
+            "speedup_marginal": oracle_s / select_s,
+            "guarantee_bytes": int(total_bytes),
+            "bytes_bit_identical": True,
+            "bound_verified": True,
+        })
+        print(f"[bench_guarantee] target={target:.0e} oracle={oracle_s*1e3:7.1f}ms"
+              f" engine={select_s*1e3:6.1f}ms ({oracle_s/select_s:5.1f}x)"
+              f" bytes={total_bytes}")
+
+    single_shot_ms = prepare_s * 1e3 + rows[0]["engine_select_ms"]
+    marginals = [r["speedup_marginal"] for r in rows]
+    summary = {
+        "problem": {"S": S, "NB": NB, "D": D, "seed": seed},
+        "prepare_ms": prepare_s * 1e3,
+        "sweep": rows,
+        "oracle_sweep_ms": oracle_total * 1e3,
+        "engine_sweep_ms": engine_total * 1e3,
+        # headline: steady-state per-error-bound throughput — the stage's
+        # cost in the pipeline's real workload, where one fitted model is
+        # swept across many error bounds (and served repeatedly) so the
+        # tau-independent prepare amortizes out
+        "speedup_steady_state": float(np.exp(np.mean(np.log(marginals)))),
+        # full TARGETS sweep including one un-amortized prepare
+        "speedup_sweep": oracle_total / engine_total,
+        # single-shot: one tau paying the full prepare
+        "speedup_single": rows[0]["oracle_ms"] / single_shot_ms,
+        "backend": "cpu-interpret-pallas",
+    }
+    print(f"[bench_guarantee] steady-state {summary['speedup_steady_state']:.1f}x"
+          f" | sweep: oracle {oracle_total*1e3:.0f}ms vs engine "
+          f"{engine_total*1e3:.0f}ms incl. prepare {prepare_s*1e3:.0f}ms"
+          f" ({summary['speedup_sweep']:.1f}x)")
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+    os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
+    keys = list(rows[0].keys())
+    with open(OUT_CSV, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -64,6 +64,28 @@ def bench_gae(rows):
                      f"bytes={art.total_bytes()}"))
 
 
+def bench_guarantee_engine(rows):
+    """Device-resident guarantee engine vs numpy oracle; emits the
+    BENCH_guarantee.json perf trajectory for future PRs to regress
+    against (harness CSV rows preserved alongside)."""
+    from benchmarks import bench_guarantee
+
+    summary = bench_guarantee.run()
+    # steady-state = per-bound select cost with prepare amortized out,
+    # matching the speedup_steady_state definition
+    select_ms = [r["engine_select_ms"] for r in summary["sweep"]]
+    rows.append((
+        "guarantee_engine_steady_state",
+        sum(select_ms) / len(select_ms) * 1e3,
+        f"speedup={summary['speedup_steady_state']:.1f}x",
+    ))
+    rows.append((
+        "guarantee_engine_sweep",
+        summary["engine_sweep_ms"] * 1e3,
+        f"speedup={summary['speedup_sweep']:.1f}x",
+    ))
+
+
 def bench_sz(rows):
     from repro.core import sz
     from repro.data import s3d
@@ -85,6 +107,7 @@ def main() -> None:
 
     bench_kernels(rows)
     bench_gae(rows)
+    bench_guarantee_engine(rows)
     bench_sz(rows)
 
     # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)

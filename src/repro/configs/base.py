@@ -129,7 +129,13 @@ class ArchConfig:
             remat="none",
         )
         if self.n_experts:
-            kw.update(n_experts=min(8, self.n_experts), moe_top_k=min(2, self.moe_top_k))
+            # generous capacity: smoke runs feed a handful of tokens through
+            # randomly-initialized routers, where capacity drops are near
+            # certain and would make prefill vs decode-step outputs diverge
+            # by design rather than by bug
+            kw.update(n_experts=min(8, self.n_experts),
+                      moe_top_k=min(2, self.moe_top_k),
+                      capacity_factor=8.0)
         if self.is_encdec:
             kw.update(n_encoder_layers=2, n_audio_ctx=8)
         if self.attn_period:

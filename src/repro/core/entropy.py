@@ -4,10 +4,16 @@ The Huffman path is the paper's coder: quantized integer streams are
 frequency-counted, a canonical Huffman code is built, and the stream is
 bit-packed with a self-describing header (symbol table + code lengths).
 Encoding is vectorized in numpy (loop over code-bit position, not symbols);
-decoding uses a k-bit lookup table.
+decoding batches the k-bit table lookups over every bit position and walks
+the sequential codeword chain speculatively chunk-by-chunk (exact, with a
+scalar fallback only for chunks that never self-synchronize); codes longer
+than the table are resolved by a vectorized prefix match.
 
 ``zstd_bytes`` exposes the zstandard backend used as the final lossless
-stage of the SZ baseline (matching SZ3's use of zstd).
+stage of the SZ baseline (matching SZ3's use of zstd). When the
+``zstandard`` wheel is absent (hermetic CI images), stdlib ``zlib`` stands
+in — same role in the pipeline, slightly worse ratio, self-describing via a
+one-byte backend tag so streams decode with either backend present.
 """
 
 from __future__ import annotations
@@ -15,9 +21,14 @@ from __future__ import annotations
 import heapq
 import io
 import struct
+import zlib
 
 import numpy as np
-import zstandard
+
+try:  # optional: not all images carry the zstandard wheel
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
 
 _MAGIC = b"HUF1"
 _MAX_CODE_LEN = 32
@@ -95,6 +106,226 @@ def huffman_encode(values: np.ndarray) -> bytes:
     return header.getvalue() + payload
 
 
+def _decode_table(lengths: np.ndarray, codes: np.ndarray):
+    """k-bit lookup table + dict of codes too long for the table."""
+    k = len(lengths)
+    table_bits = min(int(lengths.max()), 16)
+    table_sym = np.full(1 << table_bits, -1, dtype=np.int32)
+    table_len = np.zeros(1 << table_bits, dtype=np.int32)
+    long_codes: dict[tuple[int, int], int] = {}
+    for i in range(k):
+        ln, cd = int(lengths[i]), int(codes[i])
+        if ln <= table_bits:
+            base = cd << (table_bits - ln)
+            table_sym[base : base + (1 << (table_bits - ln))] = i
+            table_len[base : base + (1 << (table_bits - ln))] = ln
+        else:
+            long_codes[(ln, cd)] = i
+    return table_bits, table_sym, table_len, long_codes
+
+
+def _window_values(bit_arr: np.ndarray, width: int) -> np.ndarray:
+    """Big-endian integer value of ``bit_arr[p : p + width]`` for every p.
+
+    One vectorized shift-or pass per code bit — the batched table lookup
+    that replaces the per-symbol interpreter loop.
+    """
+    w = len(bit_arr) - width
+    vals = np.zeros(w, dtype=np.int32)
+    for j in range(width):
+        np.left_shift(vals, 1, out=vals)
+        np.bitwise_or(vals, bit_arr[j : j + w], out=vals)
+    return vals
+
+
+def _resolve_long_codes(bit_arr, sym_at, len_at, long_codes):
+    """Fix (sym, len) at positions whose code exceeds the table width.
+
+    No short code is a prefix of a long one, so long-code positions are
+    exactly the table misses, and at most one long code matches each.
+    """
+    miss = np.flatnonzero(sym_at < 0)
+    if miss.size == 0:
+        return
+    by_len: dict[int, dict[int, int]] = {}
+    for (ln, cd), i in long_codes.items():
+        by_len.setdefault(ln, {})[cd] = i
+    for ln in sorted(by_len):
+        pairs = sorted(by_len[ln].items())
+        cds = np.array([c for c, _ in pairs], dtype=np.int64)
+        syms = np.array([i for _, i in pairs], dtype=np.int64)
+        window = np.zeros(miss.size, dtype=np.int64)
+        for j in range(ln):
+            window = (window << 1) | bit_arr[miss + j].astype(np.int64)
+        slot = np.searchsorted(cds, window)
+        hit = (slot < len(cds)) & (cds[np.minimum(slot, len(cds) - 1)] == window)
+        sym_at[miss[hit]] = syms[slot[hit]].astype(np.int32)
+        len_at[miss[hit]] = ln
+        miss = miss[~hit]
+        if miss.size == 0:
+            return
+
+
+def _chain_positions(len_at: np.ndarray, n: int) -> np.ndarray:
+    """Bit positions of the first ``n`` codewords: p_{i+1} = p_i + len[p_i].
+
+    The position chain is inherently sequential, so it is decoded
+    speculatively in three vectorized phases:
+
+    1. cut the bitstream into small chunks and walk every chunk from its
+       boundary in lockstep (one vectorized step per round), recording
+       positions and each walk's exit into the next chunk;
+    2. walk every chunk again in lockstep from its *candidate true entry* —
+       the previous chunk's speculative exit — until it joins that chunk's
+       phase-1 walk (Huffman streams self-synchronize, so this takes a few
+       codewords at most);
+    3. assemble prefix + joined tail per chunk with two ragged scatters.
+
+    Chunks that never self-synchronize invalidate their successor's entry;
+    those successors (rare) are re-walked scalar, cascading only until a
+    walk re-joins the speculative chain. The result is always exact.
+    """
+    b = len(len_at)
+    bpc = 256  # best vector-width/round-count balance; codewords (<=32b) never span a chunk
+    n_chunks = -(-b // bpc)
+    starts = np.arange(n_chunks, dtype=np.int64) * bpc
+    ends = np.minimum(starts + bpc, b)
+    if not (len_at > 0).all():
+        # only possible with unresolved long-code windows; the chain must
+        # never step on one, so guard each round below
+        def checked_step(cur, mask):
+            step = len_at[cur]
+            if not (step[mask] > 0).all():
+                raise ValueError("corrupt Huffman stream")
+            return step
+    else:
+        def checked_step(cur, mask):
+            return len_at[cur]
+
+    # -- phase 1: speculative boundary walks ---------------------------
+    cur = starts.copy()
+    active = cur < ends
+    exits = ends.copy()
+    records = []
+    counts = np.zeros(n_chunks, dtype=np.int64)
+    while active.any():
+        records.append(cur.copy())
+        counts += active
+        nxt = cur + checked_step(cur, active)
+        crossed = active & (nxt >= ends)
+        if crossed.any():
+            exits[crossed] = nxt[crossed]
+        still = active & (nxt < ends)
+        cur = np.where(still, nxt, cur)
+        active = still
+    rec = (
+        np.stack(records, axis=0) if records else np.zeros((0, n_chunks), np.int64)
+    )
+    n_rounds = len(records)
+    # O(1) membership: was p visited speculatively, and at which round of
+    # its chunk? (walks never leave their chunk, so ranges are disjoint)
+    valid = np.arange(n_rounds, dtype=np.int64)[:, None] < counts[None, :]
+    spec_pos = rec[valid]
+    visited = np.zeros(b + 1, dtype=bool)
+    rank = np.zeros(b + 1, dtype=np.int64)
+    visited[spec_pos] = True
+    rank[spec_pos] = np.broadcast_to(
+        np.arange(n_rounds, dtype=np.int64)[:, None], rec.shape
+    )[valid]
+
+    # -- phase 2: lockstep resync from candidate true entries ----------
+    entry0 = np.concatenate([[0], exits[:-1]])
+    walking = entry0 < ends
+    cur = np.where(walking, entry0, 0)
+    walk_end = entry0.copy()  # walk-off position per chunk (for repair)
+    joined = np.zeros(n_chunks, dtype=bool)
+    join_rank = np.zeros(n_chunks, dtype=np.int64)
+    pre_records = []
+    pre_counts = np.zeros(n_chunks, dtype=np.int64)
+    while walking.any():
+        hit = walking & visited[cur]
+        if hit.any():
+            join_rank[hit] = rank[cur[hit]]
+            joined |= hit
+            walking = walking & ~hit
+            if not walking.any():
+                break
+        pre_records.append(cur.copy())
+        pre_counts += walking
+        nxt = cur + checked_step(cur, walking)
+        off_chunk = walking & (nxt >= ends)
+        if off_chunk.any():
+            walk_end[off_chunk] = nxt[off_chunk]
+        walking = walking & (nxt < ends)
+        cur = np.where(walking, nxt, cur)
+    pre = (
+        np.stack(pre_records, axis=0)
+        if pre_records
+        else np.zeros((0, n_chunks), np.int64)
+    )
+
+    # -- repair: successors of chunks that never joined ----------------
+    repaired: dict[int, np.ndarray] = {}
+    if n_chunks > 1 and not joined[:-1].all():
+        repair_end: dict[int, int] = {}
+        for c in np.flatnonzero(~joined[:-1]).tolist():
+            nxt_c = c + 1
+            entry = repair_end.get(c, int(walk_end[c]))
+            if nxt_c in repaired:
+                continue
+            while nxt_c < n_chunks:
+                if nxt_c not in repaired and entry == int(entry0[nxt_c]):
+                    break  # speculative entry was right after all
+                prefix = []
+                p = entry
+                join = None
+                while p < ends[nxt_c]:
+                    if visited[p]:
+                        join = int(rank[p])
+                        break
+                    step = int(len_at[p])
+                    if step <= 0:
+                        raise ValueError("corrupt Huffman stream")
+                    prefix.append(p)
+                    p += step
+                repaired[nxt_c] = np.array(prefix, dtype=np.int64)
+                joined[nxt_c] = join is not None
+                join_rank[nxt_c] = join if join is not None else 0
+                pre_counts[nxt_c] = len(prefix)
+                # once joined, the true chain rides the speculative one to
+                # its recorded exit; otherwise our walk-off is the exit
+                repair_end[nxt_c] = int(exits[nxt_c]) if join is not None else p
+                if join is not None:
+                    break
+                entry = p
+                nxt_c += 1
+                if nxt_c in repaired:
+                    break
+
+    # -- phase 3: ragged assembly --------------------------------------
+    tail_counts = np.where(joined, counts - join_rank, 0)
+    lengths = pre_counts + tail_counts
+    off = np.zeros(n_chunks + 1, dtype=np.int64)
+    np.cumsum(lengths, out=off[1:])
+    if off[-1] < n:
+        raise ValueError("corrupt Huffman stream")
+    out = np.empty(off[-1], dtype=np.int64)
+    if pre.size:
+        rows = np.arange(pre.shape[0], dtype=np.int64)[:, None]
+        mask = rows < pre_counts[None, :]
+        if repaired:
+            mask[:, list(repaired)] = False
+        out[(off[:-1][None, :] + rows)[mask]] = pre[mask]
+    if rec.size:
+        rows = np.arange(n_rounds, dtype=np.int64)[:, None]
+        mask = joined[None, :] & (rows >= join_rank[None, :]) & valid
+        dest = off[:-1][None, :] + pre_counts[None, :] + rows - join_rank[None, :]
+        out[dest[mask]] = rec[mask]
+    for c, prefix in repaired.items():
+        out[off[c] : off[c] + len(prefix)] = prefix
+    return out[:n]
+
+
 def huffman_decode(blob: bytes) -> np.ndarray:
     if blob[:4] != _MAGIC:
         raise ValueError("bad magic")
@@ -107,48 +338,26 @@ def huffman_decode(blob: bytes) -> np.ndarray:
     lengths = np.frombuffer(blob, dtype="<u1", count=k, offset=off).astype(np.int64)
     off += k
     codes = _canonical_codes(lengths)
+    table_bits, table_sym, table_len, long_codes = _decode_table(lengths, codes)
 
     bit_arr = np.unpackbits(np.frombuffer(blob, dtype=np.uint8, offset=off))
-    # k-bit table decode
-    table_bits = min(int(lengths.max()), 16)
-    table_sym = np.full(1 << table_bits, -1, dtype=np.int64)
-    table_len = np.zeros(1 << table_bits, dtype=np.int64)
-    long_codes: dict[tuple[int, int], int] = {}
-    for i in range(k):
-        ln, cd = int(lengths[i]), int(codes[i])
-        if ln <= table_bits:
-            base = cd << (table_bits - ln)
-            table_sym[base : base + (1 << (table_bits - ln))] = i
-            table_len[base : base + (1 << (table_bits - ln))] = ln
-        else:
-            long_codes[(ln, cd)] = i
+    # pad so windowed reads never go OOB; stays uint8 — the shift-or and
+    # long-code passes upcast on the fly, so per-bit memory stays 1 byte
+    bit_arr = np.concatenate(
+        [bit_arr, np.zeros(_MAX_CODE_LEN + table_bits, np.uint8)]
+    )
 
-    out = np.empty(n, dtype=np.int64)
-    # pad bit array so windowed reads never go OOB
-    bit_arr = np.concatenate([bit_arr, np.zeros(_MAX_CODE_LEN + table_bits, np.uint8)])
-    weights = (1 << np.arange(table_bits - 1, -1, -1)).astype(np.int64)
-    pos = 0
-    max_len = int(lengths.max())
-    for i in range(n):
-        window = int(bit_arr[pos : pos + table_bits] @ weights)
-        sym_idx = table_sym[window]
-        if sym_idx >= 0:
-            out[i] = symbols[sym_idx]
-            pos += int(table_len[window])
-        else:
-            # rare long code: extend bit by bit
-            code = window
-            ln = table_bits
-            while True:
-                ln += 1
-                code = (code << 1) | int(bit_arr[pos + ln - 1])
-                if (ln, code) in long_codes:
-                    out[i] = symbols[long_codes[(ln, code)]]
-                    pos += ln
-                    break
-                if ln > max_len:
-                    raise ValueError("corrupt Huffman stream")
-    return out
+    win = _window_values(bit_arr, table_bits)
+    sym_at = table_sym[win]
+    len_at = table_len[win]
+    if long_codes:
+        _resolve_long_codes(bit_arr, sym_at, len_at, long_codes)
+
+    pos = _chain_positions(len_at, int(n))
+    sym_idx = sym_at[pos]
+    if (sym_idx < 0).any():
+        raise ValueError("corrupt Huffman stream")
+    return symbols[sym_idx]
 
 
 def huffman_size_bytes(values: np.ndarray) -> int:
@@ -164,9 +373,22 @@ def huffman_size_bytes(values: np.ndarray) -> int:
     return header + (total_bits + 7) // 8
 
 
+_ZSTD_TAG = b"\x01"
+_ZLIB_TAG = b"\x02"
+
+
 def zstd_bytes(data: bytes, level: int = 19) -> bytes:
-    return zstandard.ZstdCompressor(level=level).compress(data)
+    if zstandard is not None:
+        return _ZSTD_TAG + zstandard.ZstdCompressor(level=level).compress(data)
+    return _ZLIB_TAG + zlib.compress(data, level=min(level, 9))
 
 
 def zstd_unbytes(blob: bytes) -> bytes:
-    return zstandard.ZstdDecompressor().decompress(blob)
+    tag, payload = blob[:1], blob[1:]
+    if tag == _ZSTD_TAG:
+        if zstandard is None:
+            raise RuntimeError("stream was zstd-coded but zstandard is absent")
+        return zstandard.ZstdDecompressor().decompress(payload)
+    if tag == _ZLIB_TAG:
+        return zlib.decompress(payload)
+    raise ValueError("unknown lossless-backend tag")

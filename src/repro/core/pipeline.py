@@ -15,10 +15,22 @@ Stages:
      the *quantized* latents so encode/decode stay consistent);
   4. (GBATC) pointwise tensor-correction network on reconstructed->original
      species vectors;
-  5. per-species PCA-residual guarantee (Algorithm 1) with
-     tau_s = target_nrmse * sqrt(D) (normalized range = 1);
+  5. device-resident guarantee engine (Algorithm 1): one batched (S, NB, D)
+     dispatch through ``gae.GuaranteeEngine`` — Pallas projection and
+     masked select-and-accumulate kernels plus jitted fp64 selection — with
+     tau_s = target_nrmse * sqrt(D) (normalized range = 1). The engine's
+     tau-independent state (residual PCA, projections, energy ordering) is
+     cached per (latent_bin, correction) so sweeping error bounds against
+     one fitted model pays it once; decompress replays corrections through
+     the same batched kernel path;
   6. exact byte accounting: latent stream + decoder params + correction
-     params + per-species {coeffs, index bitmap, basis} + metadata.
+     params + per-species {coeffs, CSR index bitmap, basis} + metadata,
+     with stream sizes memoized on the artifact so repeated breakdowns
+     (e.g. the benchmark's TARGETS sweep) never recount identical streams.
+
+All jitted callables (AE encode/decode, correction apply, guarantee
+selection) are constructed once per pipeline instance — compress/decompress
+never re-trace.
 """
 
 from __future__ import annotations
@@ -62,6 +74,15 @@ class CompressedArtifact:
     norm_range: np.ndarray  # (S,)
     shape: tuple[int, int, int, int]
     cfg: PipelineConfig
+    # memoized Huffman size of latent_q (immutable once built)
+    _latent_bytes: Optional[int] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    def latent_bytes(self) -> int:
+        if self._latent_bytes is None:
+            self._latent_bytes = entropy.huffman_size_bytes(self.latent_q)
+        return self._latent_bytes
 
     def byte_breakdown(
         self,
@@ -69,7 +90,7 @@ class CompressedArtifact:
         corr_net: Optional[correction.TensorCorrectionNetwork],
     ) -> dict:
         scale = self.cfg.param_dtype_bytes / 4
-        latent_bytes = entropy.huffman_size_bytes(self.latent_q)
+        latent_bytes = self.latent_bytes()
         decoder_bytes = int(model.decoder_param_bytes(self.ae_params) * scale)
         corr_bytes = (
             int(corr_net.param_bytes(self.corr_params) * scale)
@@ -125,13 +146,26 @@ class GBATCPipeline:
             if cfg.use_correction
             else None
         )
+        # jitted once per instance: rebuilding jax.jit(...) per call would
+        # re-trace (and re-compile) on every compress/decompress
+        self._jit_encode = jax.jit(self.model.encode)
+        self._jit_decode = jax.jit(self.model.decode)
+        self._jit_corr = (
+            jax.jit(self.corr_net.__call__) if self.corr_net is not None else None
+        )
+        self._gengine = gae.default_engine()
         # populated by fit()
         self._ae_params: Any = None
         self._corr_params: Any = None
         self._latents: Optional[np.ndarray] = None
         self._blocks: Optional[np.ndarray] = None
+        self._vecs_orig: Optional[np.ndarray] = None
         self._data: Optional[np.ndarray] = None
         self._norm: Optional[tuple[np.ndarray, np.ndarray]] = None
+        # tau-independent guarantee state per (latent_bin, skip_correction)
+        self._prepared: dict[tuple, tuple] = {}
+
+    _PREPARED_CACHE_MAX = 4  # GBATC + GBA at a couple of latent bins
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -158,11 +192,11 @@ class GBATCPipeline:
             seed=cfg.seed,
             log_every=200 if verbose else 0,
         )
-        latents = np.asarray(_batched_encode(self.model, params, blocks))
+        latents = np.asarray(_batched(self._jit_encode, params, blocks))
 
         corr_params = None
         if self.corr_net is not None:
-            x_rec = np.asarray(_batched_decode(self.model, params, latents))
+            x_rec = np.asarray(_batched(self._jit_decode, params, latents))
             vec_rec = correction.blocks_to_pointwise(x_rec)
             vec_orig = correction.blocks_to_pointwise(blocks)
             corr_params = correction.fit(
@@ -174,19 +208,45 @@ class GBATCPipeline:
         self._corr_params = corr_params
         self._latents = latents
         self._blocks = blocks
+        self._vecs_orig = blocking.blocks_as_vectors(blocks)
         self._data = data
         self._norm = (mn, rngs)
+        self._prepared.clear()
         return {"final_ae_loss": losses[-1] if losses else float("nan")}
 
     # ------------------------------------------------------------------
     def _decode_corrected(self, latent_deq: np.ndarray,
                           corr_params=None) -> np.ndarray:
-        x_rec = np.asarray(_batched_decode(self.model, self._ae_params, latent_deq))
+        x_rec = np.asarray(_batched(self._jit_decode, self._ae_params, latent_deq))
         if self.corr_net is not None and corr_params is not None:
             vecs = correction.blocks_to_pointwise(x_rec)
-            fixed = np.asarray(_batched_apply(self.corr_net, corr_params, vecs))
+            fixed = np.asarray(
+                _batched(self._jit_corr, corr_params, vecs, batch=1 << 16)
+            )
             x_rec = correction.pointwise_to_blocks(fixed, x_rec)
         return x_rec
+
+    def _prepare_guarantee(self, latent_bin_rel: float, skip_correction: bool):
+        """Decode + tau-independent guarantee prep, cached per sweep key."""
+        lat_bin = float(latent_bin_rel * max(self._latents.std(), 1e-12))
+        key = (lat_bin, bool(skip_correction))
+        hit = self._prepared.get(key)
+        if hit is not None:
+            return hit
+        lat_q = quantize(self._latents, lat_bin)
+        corr_params = None if skip_correction else self._corr_params
+        x_rec = self._decode_corrected(dequantize(lat_q, lat_bin),
+                                       corr_params=corr_params)
+        vecs_rec = blocking.blocks_as_vectors(x_rec)
+        prepared = self._gengine.prepare(self._vecs_orig, vecs_rec)
+        latent_bytes = entropy.huffman_size_bytes(lat_q)
+        entry = (prepared, lat_q, lat_bin, corr_params, latent_bytes)
+        # bounded FIFO: each entry pins several (S, NB, D) fp64 tensors, and
+        # a latent_bin_rel sweep would otherwise accumulate one per value
+        while len(self._prepared) >= self._PREPARED_CACHE_MAX:
+            self._prepared.pop(next(iter(self._prepared)))
+        self._prepared[key] = entry
+        return entry
 
     def compress(
         self,
@@ -199,7 +259,9 @@ class GBATCPipeline:
 
         ``skip_correction=True`` reports the GBA variant off the same fitted
         AE (the correction net is trained after the AE, so GBA and GBATC
-        legitimately share the encoder — paper §II-C)."""
+        legitimately share the encoder — paper §II-C). Sweeping
+        ``target_nrmse`` reuses the cached tau-independent guarantee state,
+        so each additional error bound costs only the engine's select pass."""
         if self._latents is None:
             raise RuntimeError("call fit() first")
         cfg = self.cfg
@@ -207,35 +269,25 @@ class GBATCPipeline:
         data = self._data
         mn, rngs = self._norm
 
-        lat_bin = float(latent_bin_rel * max(self._latents.std(), 1e-12))
-        lat_q = quantize(self._latents, lat_bin)
-        corr_params = None if skip_correction else self._corr_params
-        x_rec = self._decode_corrected(dequantize(lat_q, lat_bin),
-                                       corr_params=corr_params)
+        prepared, lat_q, lat_bin, corr_params, latent_bytes = \
+            self._prepare_guarantee(latent_bin_rel, skip_correction)
+
+        d = geom.block_size
+        tau = target_nrmse * np.sqrt(d)  # normalized range == 1
+        corrected, arts = self._gengine.select(prepared, tau, coeff_bin)
 
         artifact = CompressedArtifact(
             latent_q=lat_q,
             latent_bin=lat_bin,
             ae_params=self._ae_params,
             corr_params=corr_params,
-            species_guarantees=[],
+            species_guarantees=arts,
             norm_min=mn,
             norm_range=rngs,
             shape=tuple(data.shape),
             cfg=cfg,
+            _latent_bytes=latent_bytes,
         )
-
-        d = geom.block_size
-        tau = target_nrmse * np.sqrt(d)  # normalized range == 1
-        vecs_orig = blocking.blocks_as_vectors(self._blocks)
-        vecs_rec = blocking.blocks_as_vectors(x_rec)
-        corrected = np.empty_like(vecs_rec)
-        for sidx in range(self.n_species):
-            corr_s, art_s = gae.guarantee(
-                vecs_orig[sidx], vecs_rec[sidx], tau, coeff_bin
-            )
-            corrected[sidx] = corr_s
-            artifact.species_guarantees.append(art_s)
 
         rec_blocks = blocking.vectors_as_blocks(corrected, geom)
         rec_normed = blocking.from_blocks(rec_blocks, data.shape, geom)
@@ -264,19 +316,18 @@ class GBATCPipeline:
         """Replay stored streams only (no access to the original data)."""
         geom = artifact.cfg.geometry
         lat = dequantize(artifact.latent_q, artifact.latent_bin)
-        x_rec = np.asarray(_batched_decode(self.model, artifact.ae_params, lat))
+        x_rec = np.asarray(_batched(self._jit_decode, artifact.ae_params, lat))
         if self.corr_net is not None and artifact.corr_params is not None:
             vecs = correction.blocks_to_pointwise(x_rec)
             fixed = np.asarray(
-                _batched_apply(self.corr_net, artifact.corr_params, vecs)
+                _batched(self._jit_corr, artifact.corr_params, vecs,
+                         batch=1 << 16)
             )
             x_rec = correction.pointwise_to_blocks(fixed, x_rec)
         vecs_rec = blocking.blocks_as_vectors(x_rec)
-        corrected = np.empty_like(vecs_rec)
-        for sidx in range(vecs_rec.shape[0]):
-            corrected[sidx] = gae.apply_correction(
-                vecs_rec[sidx], artifact.species_guarantees[sidx]
-            )
+        corrected = gae.apply_correction_batched(
+            vecs_rec, artifact.species_guarantees, self._gengine
+        )
         rec_blocks = blocking.vectors_as_blocks(corrected, geom)
         rec_normed = blocking.from_blocks(rec_blocks, artifact.shape, geom)
         return (
@@ -285,28 +336,10 @@ class GBATCPipeline:
         ).astype(np.float32)
 
 
-def _batched_encode(model, params, blocks, batch: int = 512):
-    fn = jax.jit(model.encode)
+def _batched(fn, params, arrays, batch: int = 512):
+    """Apply an already-jitted (params, x) callable over leading-axis chunks."""
     outs = [
-        np.asarray(fn(params, jnp.asarray(blocks[i : i + batch])))
-        for i in range(0, blocks.shape[0], batch)
-    ]
-    return np.concatenate(outs, axis=0)
-
-
-def _batched_decode(model, params, latents, batch: int = 512):
-    fn = jax.jit(model.decode)
-    outs = [
-        np.asarray(fn(params, jnp.asarray(latents[i : i + batch])))
-        for i in range(0, latents.shape[0], batch)
-    ]
-    return np.concatenate(outs, axis=0)
-
-
-def _batched_apply(net, params, vecs, batch: int = 1 << 16):
-    fn = jax.jit(net.__call__)
-    outs = [
-        np.asarray(fn(params, jnp.asarray(vecs[i : i + batch])))
-        for i in range(0, vecs.shape[0], batch)
+        np.asarray(fn(params, jnp.asarray(arrays[i : i + batch])))
+        for i in range(0, arrays.shape[0], batch)
     ]
     return np.concatenate(outs, axis=0)

@@ -6,38 +6,37 @@ millions of D=80 blocks per species:
   project: C   = R @ U            (coefficients, eq. 1)
   correct: x^G = x^R + (C.mask) @ U^T   (eq. 2)
 
-TPU adaptation: D=80 is padded to 128 (MXU lane width) by the wrapper; U
-(128x128 fp32 = 64 KiB) is VMEM-resident and reused across all row tiles —
-the kernel is then purely bandwidth-bound on R, which is the roofline
-optimum for this shape.
+TPU adaptation: D=80 is padded to 128 (MXU lane width); U (128x128 fp32 =
+64 KiB) is VMEM-resident and reused across all row tiles — the kernels are
+then purely bandwidth-bound on R, which is the roofline optimum for this
+shape.
+
+Two tiers of API:
+
+* 2D single-species (``gbatc_project`` / ``gbatc_correct``) — the original
+  kernels, kept for checkpoint compression and as the simplest contract.
+* 3D batched-over-species (``*_batched``) — one dispatch for the whole
+  (S, NB, D) problem with a per-species basis stack (S, D, D). The grid is
+  (species tiles, row tiles); on CPU interpret mode the guarantee engine
+  collapses it to a single step (species_per_tile=S, rows_per_tile=NB) so
+  the interpreter overhead is paid once per call.
+
+``gbatc_select_accumulate`` fuses Algorithm 1's masked select-and-accumulate:
+given quantized coefficient values, each element's rank in the per-block
+energy order, and the per-block cut M, it forms the keep mask in-registers
+and applies the correction GEMM without ever materialising the masked
+coefficient tensor in HBM.
+
+All kernels compute in the dtype of their inputs (fp32 on the MXU path;
+fp64 under interpret mode, where the guarantee engine needs bit-stable
+quantization against the fp64 numpy oracle).
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-
-
-def _project_kernel(r_ref, u_ref, c_ref):
-    r = r_ref[...].astype(jnp.float32)
-    u = u_ref[...].astype(jnp.float32)
-    c_ref[...] = jax.lax.dot_general(
-        r, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    ).astype(c_ref.dtype)
-
-
-def _correct_kernel(x_ref, c_ref, m_ref, u_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)
-    cm = c_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)
-    u = u_ref[...].astype(jnp.float32)
-    o_ref[...] = (
-        x + jax.lax.dot_general(
-            cm, u, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-    ).astype(o_ref.dtype)
 
 
 def _pad_to(x, target, axis):
@@ -49,18 +48,57 @@ def _pad_to(x, target, axis):
     return jnp.pad(x, widths)
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _lane(d: int, interpret: bool, lane: int | None) -> int:
+    """Padded feature width: MXU lane width on TPU, sublane-aligned under
+    interpret (where any shape works and padding only wastes flops)."""
+    if lane is None:
+        lane = 128 if not interpret else 8
+    return max(lane, _round_up(d, lane))
+
+
+# ---------------------------------------------------------------------------
+# 2D single-species kernels (original contract)
+# ---------------------------------------------------------------------------
+
+
+def _project_kernel(r_ref, u_ref, c_ref):
+    r = r_ref[...]
+    u = u_ref[...]
+    c_ref[...] = jax.lax.dot_general(
+        r, u, (((1,), (0,)), ((), ())), preferred_element_type=c_ref.dtype
+    ).astype(c_ref.dtype)
+
+
+def _correct_kernel(x_ref, c_ref, m_ref, u_ref, o_ref):
+    x = x_ref[...]
+    cm = c_ref[...] * m_ref[...].astype(c_ref.dtype)
+    u = u_ref[...]
+    o_ref[...] = (
+        x + jax.lax.dot_general(
+            cm, u, (((1,), (1,)), ((), ())), preferred_element_type=o_ref.dtype
+        ).astype(o_ref.dtype)
+    )
+
+
 def gbatc_project(
     residual: jax.Array,  # (NB, D)
     basis: jax.Array,  # (D, D) orthonormal columns
     *,
     rows_per_tile: int = 512,
     interpret: bool = False,
+    lane: int | None = None,
 ) -> jax.Array:
-    """c = R @ U, blocked over rows; returns (NB, D) fp32."""
+    """c = R @ U, blocked over rows; returns (NB, D) in the input dtype."""
     nb, d = residual.shape
-    dp = max(128, -(-d // 128) * 128)
-    r = _pad_to(_pad_to(residual, dp, 1), -(-nb // rows_per_tile) * rows_per_tile, 0)
-    u = _pad_to(_pad_to(basis, dp, 0), dp, 1)
+    dtype = jnp.result_type(residual.dtype, basis.dtype)
+    dp = _lane(d, interpret, lane)
+    r = _pad_to(_pad_to(residual.astype(dtype), dp, 1),
+                _round_up(nb, rows_per_tile), 0)
+    u = _pad_to(_pad_to(basis.astype(dtype), dp, 0), dp, 1)
     rp = r.shape[0]
     rt = min(rows_per_tile, rp)
 
@@ -72,7 +110,7 @@ def gbatc_project(
             pl.BlockSpec((dp, dp), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((rt, dp), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rp, dp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rp, dp), dtype),
         interpret=interpret,
     )(r, u)
     return c[:nb, :d]
@@ -86,15 +124,17 @@ def gbatc_correct(
     *,
     rows_per_tile: int = 512,
     interpret: bool = False,
+    lane: int | None = None,
 ) -> jax.Array:
     """x^G = x^R + (coeffs * mask) @ U^T."""
     nb, d = x_rec.shape
-    dp = max(128, -(-d // 128) * 128)
-    rp = -(-nb // rows_per_tile) * rows_per_tile
-    x = _pad_to(_pad_to(x_rec, dp, 1), rp, 0)
-    c = _pad_to(_pad_to(coeffs, dp, 1), rp, 0)
+    dtype = jnp.result_type(x_rec.dtype, coeffs.dtype, basis.dtype)
+    dp = _lane(d, interpret, lane)
+    rp = _round_up(nb, rows_per_tile)
+    x = _pad_to(_pad_to(x_rec.astype(dtype), dp, 1), rp, 0)
+    c = _pad_to(_pad_to(coeffs.astype(dtype), dp, 1), rp, 0)
     m = _pad_to(_pad_to(mask, dp, 1), rp, 0)
-    u = _pad_to(_pad_to(basis, dp, 0), dp, 1)
+    u = _pad_to(_pad_to(basis.astype(dtype), dp, 0), dp, 1)
     rt = min(rows_per_tile, rp)
 
     out = pl.pallas_call(
@@ -107,7 +147,156 @@ def gbatc_correct(
             pl.BlockSpec((dp, dp), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((rt, dp), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rp, dp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rp, dp), dtype),
         interpret=interpret,
     )(x, c, m, u)
     return out[:nb, :d]
+
+
+# ---------------------------------------------------------------------------
+# Batched-over-species kernels: one dispatch for (S, NB, D)
+# ---------------------------------------------------------------------------
+
+_BATCH_DIMS = (((2,), (1,)), ((0,), (0,)))  # (s,n,d) @ (s,d,k) -> (s,n,k)
+_BATCH_DIMS_T = (((2,), (2,)), ((0,), (0,)))  # (s,n,k) @ (s,d,k) -> (s,n,d)
+
+
+def _project_batched_kernel(r_ref, u_ref, c_ref):
+    c_ref[...] = jax.lax.dot_general(
+        r_ref[...], u_ref[...], _BATCH_DIMS, preferred_element_type=c_ref.dtype
+    ).astype(c_ref.dtype)
+
+
+def _correct_batched_kernel(x_ref, c_ref, u_ref, o_ref):
+    o_ref[...] = x_ref[...] + jax.lax.dot_general(
+        c_ref[...], u_ref[...], _BATCH_DIMS_T, preferred_element_type=o_ref.dtype
+    ).astype(o_ref.dtype)
+
+
+def _select_accumulate_kernel(x_ref, c_ref, rank_ref, m_ref, u_ref, o_ref):
+    keep = rank_ref[...] < m_ref[...][..., None]
+    cm = c_ref[...] * keep.astype(c_ref.dtype)
+    o_ref[...] = x_ref[...] + jax.lax.dot_general(
+        cm, u_ref[...], _BATCH_DIMS_T, preferred_element_type=o_ref.dtype
+    ).astype(o_ref.dtype)
+
+
+def _batched_tiles(s, nb, species_per_tile, rows_per_tile):
+    spt = s if species_per_tile is None else min(species_per_tile, s)
+    rpt = nb if rows_per_tile is None else min(rows_per_tile, nb)
+    return spt, rpt, _round_up(s, spt), _round_up(nb, rpt)
+
+
+def gbatc_project_batched(
+    residual: jax.Array,  # (S, NB, D)
+    basis: jax.Array,  # (S, D, D) per-species orthonormal columns
+    *,
+    species_per_tile: int | None = None,
+    rows_per_tile: int | None = None,
+    interpret: bool = False,
+    lane: int | None = None,
+) -> jax.Array:
+    """Per-species c_s = R_s @ U_s in one dispatch; returns (S, NB, D)."""
+    s, nb, d = residual.shape
+    dtype = jnp.result_type(residual.dtype, basis.dtype)
+    dp = _lane(d, interpret, lane)
+    spt, rpt, sp, rp = _batched_tiles(s, nb, species_per_tile, rows_per_tile)
+    r = _pad_to(_pad_to(_pad_to(residual.astype(dtype), dp, 2), rp, 1), sp, 0)
+    u = _pad_to(_pad_to(_pad_to(basis.astype(dtype), dp, 1), dp, 2), sp, 0)
+
+    c = pl.pallas_call(
+        _project_batched_kernel,
+        grid=(sp // spt, rp // rpt),
+        in_specs=[
+            pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((spt, dp, dp), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, rp, dp), dtype),
+        interpret=interpret,
+    )(r, u)
+    return c[:s, :nb, :d]
+
+
+def gbatc_correct_batched(
+    x_rec: jax.Array,  # (S, NB, D)
+    coeffs: jax.Array,  # (S, NB, D) — already masked/dequantized
+    basis: jax.Array,  # (S, D, D)
+    *,
+    species_per_tile: int | None = None,
+    rows_per_tile: int | None = None,
+    interpret: bool = False,
+    lane: int | None = None,
+) -> jax.Array:
+    """Per-species x^G_s = x^R_s + C_s @ U_s^T in one dispatch."""
+    s, nb, d = x_rec.shape
+    dtype = jnp.result_type(x_rec.dtype, coeffs.dtype, basis.dtype)
+    dp = _lane(d, interpret, lane)
+    spt, rpt, sp, rp = _batched_tiles(s, nb, species_per_tile, rows_per_tile)
+    x = _pad_to(_pad_to(_pad_to(x_rec.astype(dtype), dp, 2), rp, 1), sp, 0)
+    c = _pad_to(_pad_to(_pad_to(coeffs.astype(dtype), dp, 2), rp, 1), sp, 0)
+    u = _pad_to(_pad_to(_pad_to(basis.astype(dtype), dp, 1), dp, 2), sp, 0)
+
+    out = pl.pallas_call(
+        _correct_batched_kernel,
+        grid=(sp // spt, rp // rpt),
+        in_specs=[
+            pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((spt, dp, dp), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, rp, dp), dtype),
+        interpret=interpret,
+    )(x, c, u)
+    return out[:s, :nb, :d]
+
+
+def gbatc_select_accumulate(
+    x_rec: jax.Array,  # (S, NB, D)
+    coeff_vals: jax.Array,  # (S, NB, D) dequantized coefficient values
+    rank: jax.Array,  # (S, NB, D) int32 energy-order rank of each element
+    m: jax.Array,  # (S, NB) int32 per-block cut: keep rank < m
+    basis: jax.Array,  # (S, D, D)
+    *,
+    species_per_tile: int | None = None,
+    rows_per_tile: int | None = None,
+    interpret: bool = False,
+    lane: int | None = None,
+) -> jax.Array:
+    """Fused Algorithm-1 tail: x^G = x^R + (C * [rank < m]) @ U^T.
+
+    The keep mask never leaves registers/VMEM — this is the "masked
+    select-and-accumulate" of the guarantee engine's decode-free hot path.
+    """
+    s, nb, d = x_rec.shape
+    dtype = jnp.result_type(x_rec.dtype, coeff_vals.dtype, basis.dtype)
+    dp = _lane(d, interpret, lane)
+    spt, rpt, sp, rp = _batched_tiles(s, nb, species_per_tile, rows_per_tile)
+    x = _pad_to(_pad_to(_pad_to(x_rec.astype(dtype), dp, 2), rp, 1), sp, 0)
+    c = _pad_to(_pad_to(_pad_to(coeff_vals.astype(dtype), dp, 2), rp, 1), sp, 0)
+    # pad ranks with a sentinel above any valid cut so padded lanes drop out
+    rk = jnp.pad(
+        rank.astype(jnp.int32),
+        [(0, sp - s), (0, rp - nb), (0, dp - d)],
+        constant_values=jnp.iinfo(jnp.int32).max,
+    )
+    mm = _pad_to(m.astype(jnp.int32), rp, 1)
+    mm = _pad_to(mm, sp, 0)
+    u = _pad_to(_pad_to(_pad_to(basis.astype(dtype), dp, 1), dp, 2), sp, 0)
+
+    out = pl.pallas_call(
+        _select_accumulate_kernel,
+        grid=(sp // spt, rp // rpt),
+        in_specs=[
+            pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((spt, rpt), lambda i, j: (i, j)),
+            pl.BlockSpec((spt, dp, dp), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((spt, rpt, dp), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, rp, dp), dtype),
+        interpret=interpret,
+    )(x, c, rk, mm, u)
+    return out[:s, :nb, :d]

@@ -92,3 +92,19 @@ def gbatc_correct_ref(x_rec, coeffs, mask, basis):
     return x_rec.astype(jnp.float32) + (
         coeffs.astype(jnp.float32) * mask.astype(jnp.float32)
     ) @ basis.astype(jnp.float32).T
+
+
+def gbatc_project_batched_ref(residual, basis):
+    """Per-species c_s = R_s @ U_s. residual: (S, NB, D); basis: (S, D, D)."""
+    return jnp.einsum("snd,sdk->snk", residual, basis)
+
+
+def gbatc_correct_batched_ref(x_rec, coeffs, basis):
+    """Per-species x^G_s = x^R_s + C_s @ U_s^T (coeffs already masked)."""
+    return x_rec + jnp.einsum("snk,sdk->snd", coeffs, basis)
+
+
+def gbatc_select_accumulate_ref(x_rec, coeff_vals, rank, m, basis):
+    """Fused masked select-and-accumulate: keep rank < m, then correct."""
+    keep = (rank < m[..., None]).astype(coeff_vals.dtype)
+    return gbatc_correct_batched_ref(x_rec, coeff_vals * keep, basis)

@@ -89,6 +89,36 @@ class TestHuffman:
         data = np.arange(1000, dtype=np.int32).tobytes()
         assert entropy.zstd_unbytes(entropy.zstd_bytes(data)) == data
 
+    def test_long_codes_beyond_table(self):
+        """Fibonacci frequencies force code lengths past the 16-bit lookup
+        table — the vectorized decoder's long-code path must stay exact."""
+        fib = [1, 1]
+        while len(fib) < 26:
+            fib.append(fib[-1] + fib[-2])
+        vals = np.concatenate(
+            [np.full(f, i, np.int64) for i, f in enumerate(fib)]
+        )
+        np.random.default_rng(0).shuffle(vals)
+        blob = entropy.huffman_encode(vals)
+        k = int(np.frombuffer(blob, dtype="<u4", count=1, offset=12)[0])
+        lengths = np.frombuffer(blob, dtype="<u1", count=k, offset=16 + 8 * k)
+        assert lengths.max() > 16  # the premise: codes exceed the table
+        assert np.array_equal(entropy.huffman_decode(blob), vals)
+
+    def test_large_stream_round_trip(self):
+        """Speculative chunk decode across many chunks, wide alphabet."""
+        rng = np.random.default_rng(42)
+        vals = np.rint(rng.normal(scale=25.0, size=300000)).astype(np.int64)
+        blob = entropy.huffman_encode(vals)
+        assert np.array_equal(entropy.huffman_decode(blob), vals)
+
+    def test_truncated_stream_raises(self):
+        vals = np.rint(np.random.default_rng(7).normal(
+            scale=2.0, size=5000)).astype(np.int64)
+        blob = entropy.huffman_encode(vals)
+        with pytest.raises(ValueError):
+            entropy.huffman_decode(blob[: len(blob) // 2])
+
 
 class TestIndexCoding:
     @pytest.mark.parametrize("seed", range(3))
@@ -100,20 +130,41 @@ class TestIndexCoding:
             sets.append(
                 np.sort(rng.choice(80, size=m, replace=False)).astype(np.int64)
             )
-        blob = index_coding.encode_indices(sets)
-        out = index_coding.decode_indices(blob)
-        assert len(out) == len(sets)
-        for a, b in zip(sets, out):
-            assert np.array_equal(a, b)
-        assert index_coding.encoded_size_bytes(sets) == len(blob)
+        offsets, flat = index_coding.sets_to_csr(sets)
+        blob = index_coding.encode_indices(offsets, flat)
+        out_off, out_flat = index_coding.decode_indices(blob)
+        np.testing.assert_array_equal(out_off, offsets)
+        np.testing.assert_array_equal(out_flat, flat)
+        assert index_coding.encoded_size_bytes(offsets, flat) == len(blob)
+
+    def test_csr_set_conversion_round_trip(self):
+        sets = [np.array([0, 3, 7]), np.zeros(0, np.int64), np.array([79]),
+                np.zeros(0, np.int64)]
+        offsets, flat = index_coding.sets_to_csr(sets)
+        back = index_coding.csr_to_sets(offsets, flat)
+        assert len(back) == len(sets)
+        for a, b in zip(sets, back):
+            np.testing.assert_array_equal(a, b)
+
+    def test_empty_blocks_only_cost_length_fields(self):
+        offsets = np.zeros(101, np.int64)
+        flat = np.zeros(0, np.int64)
+        blob = index_coding.encode_indices(offsets, flat)
+        assert len(blob) == 4 + 2 * 100  # header + u16 lengths, zero bits
+        out_off, out_flat = index_coding.decode_indices(blob)
+        np.testing.assert_array_equal(out_off, offsets)
+        assert out_flat.size == 0
 
     def test_prefix_property(self):
         """Leading-index selections must cost fewer bits than trailing ones."""
-        lead = [np.arange(5, dtype=np.int64) for _ in range(100)]
-        trail = [np.arange(75, 80, dtype=np.int64) for _ in range(100)]
-        assert index_coding.encoded_size_bytes(lead) < index_coding.encoded_size_bytes(
-            trail
+        lead = index_coding.sets_to_csr(
+            [np.arange(5, dtype=np.int64) for _ in range(100)]
         )
+        trail = index_coding.sets_to_csr(
+            [np.arange(75, 80, dtype=np.int64) for _ in range(100)]
+        )
+        assert index_coding.encoded_size_bytes(*lead) < \
+            index_coding.encoded_size_bytes(*trail)
 
 
 class TestPCA:

@@ -89,3 +89,142 @@ class TestGuaranteeProperties:
         assert gae.verify_guarantee(x, corrected, tau)
         replay = gae.apply_correction(x_rec, art)
         np.testing.assert_allclose(replay, corrected, rtol=1e-5, atol=1e-6 * scale)
+
+
+def _assert_artifact_equal(a, b):
+    """Bit-identical artifact contract (the engine's byte-accounting claim)."""
+    np.testing.assert_array_equal(a.coeff_q, b.coeff_q)
+    np.testing.assert_array_equal(a.index_offsets, b.index_offsets)
+    np.testing.assert_array_equal(a.index_flat, b.index_flat)
+    np.testing.assert_array_equal(a.basis, b.basis)
+    assert a.coeff_bin == b.coeff_bin
+    assert a.tau == b.tau
+    assert a.total_bytes() == b.total_bytes()
+
+
+class TestEngineOracleParity:
+    """Device engine vs the retained numpy oracle (gae_ref): identical byte
+    accounting, matching corrections, on adversarial geometries."""
+
+    def _parity(self, x, xr, taus, engine=None):
+        from repro.core import gae_ref
+
+        engine = engine or gae.default_engine()
+        prep = engine.prepare(x, xr)
+        for tau in taus:
+            corrected, arts = engine.select(prep, tau)
+            for s in range(x.shape[0]):
+                c_ref, a_ref = gae_ref.guarantee(x[s], xr[s], tau)
+                _assert_artifact_equal(arts[s], a_ref)
+                np.testing.assert_allclose(corrected[s], c_ref,
+                                           atol=2e-5, rtol=1e-5)
+                assert gae.verify_guarantee(x[s], corrected[s], tau)
+                replay = gae.apply_correction(xr[s], arts[s])
+                np.testing.assert_allclose(replay, gae_ref.apply_correction(
+                    xr[s], a_ref), atol=2e-6)
+            dec = gae.apply_correction_batched(xr, arts, engine)
+            np.testing.assert_allclose(dec, corrected, atol=1e-6)
+
+    def test_no_block_needs_fixing(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(3, 120, 80)).astype(np.float32)
+        xr = x + 1e-5 * rng.normal(size=x.shape).astype(np.float32)
+        self._parity(x, xr, [10.0])
+
+    def test_every_block_needs_fixing(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(3, 120, 80)).astype(np.float32)
+        xr = np.zeros_like(x)  # terrible reconstruction everywhere
+        self._parity(x, xr, [0.8, 0.3])
+
+    def test_mixed_species_some_empty(self):
+        """One species within bound, one far out — batched dispatch must
+        keep the clean species byte-free and untouched."""
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(2, 150, 64)).astype(np.float32)
+        xr = x.copy()
+        xr[1] += 0.5 * rng.normal(size=x.shape[1:]).astype(np.float32)
+        prep = gae.default_engine().prepare(x, xr)
+        corrected, arts = gae.default_engine().select(prep, 1.0)
+        assert arts[0].coeff_q.size == 0 and arts[0].basis.shape[1] == 0
+        assert arts[1].coeff_q.size > 0
+        np.testing.assert_array_equal(corrected[0], xr[0])
+        self._parity(x, xr, [1.0])
+
+    def test_d_not_multiple_of_lane(self):
+        """D=130 crosses the 128-lane boundary; force MXU-style padding."""
+        engine = gae.GuaranteeEngine(interpret=True, lane=128)
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(2, 90, 130)).astype(np.float32)
+        xr = x + 0.1 * rng.normal(size=x.shape).astype(np.float32)
+        self._parity(x, xr, [0.9, 0.4], engine=engine)
+
+    def test_nb_not_multiple_of_rows_per_tile(self):
+        engine = gae.GuaranteeEngine(
+            interpret=True, species_per_tile=1, rows_per_tile=256
+        )
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(3, 513, 80)).astype(np.float32)
+        xr = x + 0.1 * rng.normal(size=x.shape).astype(np.float32)
+        self._parity(x, xr, [0.7], engine=engine)
+
+    def test_float64_reconstructions_keep_oracle_parity(self):
+        """The seed API accepted float64 x_rec; the engine must not narrow
+        it before forming the residual, or byte accounting drifts."""
+        rng = np.random.default_rng(9)
+        x = rng.normal(size=(2, 120, 80))  # float64, as the seed allowed
+        xr = x + 0.1 * rng.normal(size=x.shape)
+        self._parity(x, xr, [0.8, 0.3])
+
+    def test_jit_selection_backend_matches(self):
+        """The jnp selection backend (accelerator path) must produce the
+        same artifacts as the default host backend and the oracle."""
+        engine = gae.GuaranteeEngine(interpret=True, select_backend="jit")
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=(2, 160, 80)).astype(np.float32)
+        xr = x + 0.1 * rng.normal(size=x.shape).astype(np.float32)
+        self._parity(x, xr, [0.8, 0.35], engine=engine)
+        host = gae.GuaranteeEngine(interpret=True, select_backend="host")
+        pj = engine.prepare(x, xr)
+        ph = host.prepare(x, xr)
+        for tau in (0.8, 0.35):
+            cj, aj = engine.select(pj, tau)
+            ch, ah = host.select(ph, tau)
+            np.testing.assert_allclose(cj, ch, atol=1e-6)
+            for a, b in zip(aj, ah):
+                _assert_artifact_equal(a, b)
+
+    def test_prepared_state_reused_across_taus(self):
+        """The tau sweep off one prepare must equal fresh per-tau runs."""
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(2, 200, 80)).astype(np.float32)
+        xr = x + 0.1 * rng.normal(size=x.shape).astype(np.float32)
+        engine = gae.default_engine()
+        prep = engine.prepare(x, xr)
+        for tau in (1.0, 0.5, 0.25):
+            corr_sweep, arts_sweep = engine.select(prep, tau)
+            corr_fresh, arts_fresh = gae.guarantee_batched(x, xr, tau)
+            np.testing.assert_array_equal(corr_sweep, corr_fresh)
+            for a, b in zip(arts_sweep, arts_fresh):
+                _assert_artifact_equal(a, b)
+
+
+class TestCSRArtifact:
+    def test_csr_layout_consistent(self):
+        x, x_rec = _make_case(11)
+        _, art = gae.guarantee(x, x_rec, 0.3)
+        assert art.index_offsets.shape == (x.shape[0] + 1,)
+        assert art.index_offsets[0] == 0
+        assert art.index_offsets[-1] == art.index_flat.size == art.coeff_q.size
+        counts = np.diff(art.index_offsets)
+        assert (counts >= 0).all()
+        # ascending indices within each block
+        for ids in art.index_sets:
+            assert np.all(np.diff(ids) > 0) or ids.size <= 1
+
+    def test_size_memoization_stable(self):
+        x, x_rec = _make_case(12)
+        _, art = gae.guarantee(x, x_rec, 0.3)
+        first = (art.coeff_bytes(), art.index_bytes(), art.total_bytes())
+        assert (art.coeff_bytes(), art.index_bytes(), art.total_bytes()) == first
+        assert art._coeff_bytes is not None  # memo actually populated

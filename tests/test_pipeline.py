@@ -99,3 +99,55 @@ class TestSurrogateData:
         a, b = small_data[:, 0], small_data[:, 1]
         corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
         assert corr > 0.9  # adjacent frames strongly correlated
+
+
+class TestRoundTripAfterCSR:
+    """decompress(compress(...)) must satisfy the guarantee end to end —
+    the CSR index/coefficient streams are the only carrier of corrections."""
+
+    def test_decompressed_output_meets_guarantee(self, small_data, fitted_gbatc):
+        target = 1e-3
+        rep = fitted_gbatc.compress(target_nrmse=target)
+        dec = fitted_gbatc.decompress(rep.artifact)
+        geom = fitted_gbatc.cfg.geometry
+        tau = target * np.sqrt(geom.block_size)
+        normed, mn, rngs = GBATCPipeline._normalize(small_data)
+        dec_normed = (
+            (dec - fitted_gbatc._norm[0][:, None, None, None])
+            / rngs[:, None, None, None]
+        )
+        vo = blocking.blocks_as_vectors(blocking.to_blocks(normed, geom))
+        vr = blocking.blocks_as_vectors(
+            blocking.to_blocks(dec_normed.astype(np.float32), geom)
+        )
+        for s in range(small_data.shape[0]):
+            assert gae.verify_guarantee(vo[s], vr[s], tau)
+        # per-species NRMSE of the decompressed tensor also meets the target
+        per = np.array([
+            metrics.nrmse(small_data[s], dec[s])
+            for s in range(small_data.shape[0])
+        ])
+        assert per.max() <= target * (1 + 1e-3)
+
+    def test_artifact_streams_survive_wire_round_trip(self, fitted_gbatc):
+        """Index sets re-encoded through the Fig. 2 bitstream decode to the
+        same CSR arrays the artifact carries."""
+        from repro.core import index_coding
+
+        rep = fitted_gbatc.compress(target_nrmse=1e-3)
+        for art in rep.artifact.species_guarantees:
+            blob = index_coding.encode_indices(art.index_offsets, art.index_flat)
+            off, flat = index_coding.decode_indices(blob)
+            np.testing.assert_array_equal(off, art.index_offsets)
+            np.testing.assert_array_equal(flat, art.index_flat)
+            assert len(blob) == art.index_bytes()
+
+    def test_target_sweep_reuses_prepared_state(self, fitted_gbatc):
+        """Sweeping error bounds must hit the cached tau-independent state
+        (one prepared entry per (latent_bin, correction) key) and still
+        produce bound-satisfying reports."""
+        fitted_gbatc._prepared.clear()
+        for target in (5e-3, 1e-3, 3e-4):
+            rep = fitted_gbatc.compress(target_nrmse=target)
+            assert rep.per_species_nrmse.max() <= target * (1 + 1e-3)
+        assert len(fitted_gbatc._prepared) == 1
