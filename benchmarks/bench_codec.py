@@ -1,0 +1,151 @@
+"""Codec wire-format benchmark: serialize/deserialize throughput + verified
+on-disk compression ratio.
+
+Unlike ``bench_compression`` (which reports quality from in-memory byte
+*accounting*), every ratio here is computed from a container actually
+written to disk: CR = raw bytes / ``os.path.getsize``. The benchmark also
+asserts the acceptance contract at every error bound — the standalone
+``repro.codec.decompress`` of the on-disk blob must bit-match the
+encoder-side replay, satisfy the NRMSE bound, and the reported byte total
+must equal the file size exactly — so a throughput number from a broken
+wire format cannot be reported.
+
+Writes BENCH_codec.json (repo root) + results/bench/codec.csv.
+
+  PYTHONPATH=src python -m benchmarks.bench_codec
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import codec  # noqa: E402
+from repro.core import metrics  # noqa: E402
+from repro.core.pipeline import PipelineConfig  # noqa: E402
+from repro.data import s3d  # noqa: E402
+
+TARGETS = (3e-3, 1e-3, 3e-4)
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_codec.json")
+OUT_CSV = "results/bench/codec.csv"
+BLOB_DIR = "results/bench"
+
+
+def _time(fn, repeat=5):
+    """Best-of-N wall time: robust to CPU contention in shared runners."""
+    fn()  # warmup (jit compile / caches)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True, seed: int = 1):
+    scfg = (
+        s3d.S3DConfig(n_species=12, n_time=16, height=80, width=80, seed=seed)
+        if quick
+        else s3d.S3DConfig(n_species=16, n_time=24, height=120, width=120,
+                           seed=seed)
+    )
+    data = s3d.generate(scfg)["species"]
+    gbatc = codec.GBATCCodec(
+        PipelineConfig(
+            conv_channels=(16, 32),
+            ae_steps=150 if quick else 800,
+            corr_steps=80 if quick else 400,
+        )
+    )
+    t0 = time.time()
+    gbatc.fit(data)
+    fit_s = time.time() - t0
+    raw_mb = data.nbytes / 1e6
+
+    os.makedirs(BLOB_DIR, exist_ok=True)
+    rows = []
+    for target in TARGETS:
+        blob, rep = gbatc.compress_report(target_nrmse=target)
+        path = os.path.join(BLOB_DIR, f"codec_target{target:g}.gbtc")
+        with open(path, "wb") as f:
+            f.write(blob)
+        on_disk = os.path.getsize(path)
+
+        # -- the acceptance contract, asserted before any number is kept --
+        assert on_disk == len(blob)
+        assert rep.bytes_breakdown["total"] == on_disk, "accounting != file size"
+        with open(path, "rb") as f:
+            decoded = codec.decompress(f.read())
+        inmem = gbatc.pipeline.decompress(rep.artifact)
+        assert np.array_equal(decoded, inmem), "wire decode != in-memory replay"
+        per = np.array(
+            [metrics.nrmse(data[s], decoded[s]) for s in range(data.shape[0])]
+        )
+        assert per.max() <= target * (1 + 1e-3), "bound violated on wire"
+
+        # -- serialize: full container build incl. entropy coding ----------
+        art = rep.artifact
+        serialize_s = _time(
+            lambda: codec.encode(
+                dataclasses.replace(
+                    art, _latent_blob=None, _param_streams=None, _wire=None
+                )
+            )
+        )
+        # -- deserialize: parse + entropy decode + NN decode + replay ------
+        deserialize_s = _time(lambda: codec.decompress(blob))
+
+        rows.append({
+            "target_nrmse": target,
+            "blob_bytes": on_disk,
+            "on_disk_compression_ratio": data.nbytes / on_disk,
+            "serialize_ms": serialize_s * 1e3,
+            "deserialize_ms": deserialize_s * 1e3,
+            "serialize_MBps": raw_mb / (serialize_s * 1e3) * 1e3,
+            "deserialize_MBps": raw_mb / (deserialize_s * 1e3) * 1e3,
+            "max_species_nrmse": float(per.max()),
+            "decode_bit_identical": True,
+            "total_equals_file_size": True,
+            **{f"bytes_{k}": v for k, v in rep.bytes_breakdown.items()
+               if k != "total"},
+        })
+        print(f"[bench_codec] target={target:.0e} CR={rows[-1]['on_disk_compression_ratio']:6.1f}x "
+              f"({on_disk} B on disk) ser={serialize_s*1e3:6.1f}ms "
+              f"deser={deserialize_s*1e3:6.1f}ms")
+
+    summary = {
+        "problem": {
+            "shape": list(data.shape),
+            "raw_bytes": int(data.nbytes),
+            "seed": seed,
+            "quick": quick,
+        },
+        "fit_s": fit_s,
+        "targets": rows,
+        "serialize_MBps_mean": float(np.mean([r["serialize_MBps"] for r in rows])),
+        "deserialize_MBps_mean": float(
+            np.mean([r["deserialize_MBps"] for r in rows])
+        ),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+    keys = list(rows[0].keys())
+    with open(OUT_CSV, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    print(f"[bench_codec] fit {fit_s:.0f}s | "
+          f"ser {summary['serialize_MBps_mean']:.0f} MB/s, "
+          f"deser {summary['deserialize_MBps_mean']:.0f} MB/s -> {OUT_JSON}")
+    return summary
+
+
+if __name__ == "__main__":
+    run(quick="--full" not in sys.argv)

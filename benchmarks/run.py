@@ -86,6 +86,28 @@ def bench_guarantee_engine(rows):
     ))
 
 
+def bench_codec_wire(rows, full=False):
+    """Container wire format: on-disk-verified ratios + codec throughput;
+    emits BENCH_codec.json (harness CSV rows preserved alongside)."""
+    from benchmarks import bench_codec
+
+    summary = bench_codec.run(quick=not full)
+    ser = [r["serialize_ms"] for r in summary["targets"]]
+    deser = [r["deserialize_ms"] for r in summary["targets"]]
+    crs = [r["on_disk_compression_ratio"] for r in summary["targets"]]
+    rows.append((
+        "codec_serialize",
+        sum(ser) / len(ser) * 1e3,
+        f"MBps={summary['serialize_MBps_mean']:.0f}",
+    ))
+    rows.append((
+        "codec_deserialize",
+        sum(deser) / len(deser) * 1e3,
+        f"MBps={summary['deserialize_MBps_mean']:.0f}"
+        " CR=" + "/".join(f"{c:.1f}" for c in crs),
+    ))
+
+
 def bench_sz(rows):
     from repro.core import sz
     from repro.data import s3d
@@ -108,6 +130,7 @@ def main() -> None:
     bench_kernels(rows)
     bench_gae(rows)
     bench_guarantee_engine(rows)
+    bench_codec_wire(rows, full=full)
     bench_sz(rows)
 
     # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)

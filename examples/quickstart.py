@@ -1,18 +1,26 @@
-"""Quickstart: compress a CFD snapshot series with GBATC and verify the
-guarantee — the paper's pipeline end to end in ~2 minutes on CPU.
+"""Quickstart: compress a CFD snapshot series to *bytes on disk* with the
+GBATC codec, decompress it standalone, and verify the error-bound guarantee —
+the paper's pipeline end to end in ~2 minutes on CPU.
 
   PYTHONPATH=src python examples/quickstart.py
+
+The codec API is bytes in, bytes out: ``GBATCCodec.compress`` returns a
+self-describing container blob, and ``repro.codec.decompress(blob)``
+reconstructs the field from the blob alone — a fresh process with no fitted
+model can decode the file this script writes.
 """
 
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import codec
 from repro.core import metrics
-from repro.core.pipeline import GBATCPipeline, PipelineConfig
+from repro.core.pipeline import PipelineConfig
 from repro.data import s3d
 
 
@@ -27,25 +35,39 @@ def main():
           f"species peak range {data.max(axis=(1,2,3)).min():.1e} .. "
           f"{data.max(axis=(1,2,3)).max():.1e}")
 
-    # 2. fit the block AE + tensor-correction network once
-    pipe = GBATCPipeline(
-        PipelineConfig(conv_channels=(16, 32), ae_steps=500, corr_steps=200),
-        n_species=data.shape[0],
+    # 2. fit the block AE + tensor-correction network once, then compress
+    #    at the domain-expert bound (NRMSE 1e-3) straight to a file
+    gbatc = codec.GBATCCodec(
+        PipelineConfig(conv_channels=(16, 32), ae_steps=500, corr_steps=200)
     )
-    pipe.fit(data, verbose=True)
+    gbatc.fit(data, verbose=True)
+    blob, rep = gbatc.compress_report(target_nrmse=1e-3)
 
-    # 3. compress at the domain-expert bound (NRMSE 1e-3), decompress, audit
-    rep = pipe.compress(target_nrmse=1e-3)
-    print(f"\ncompression ratio : {rep.compression_ratio:.1f}x")
+    fd, path = tempfile.mkstemp(suffix=".gbtc", prefix="quickstart_field_")
+    with os.fdopen(fd, "wb") as f:
+        f.write(blob)
+    on_disk = os.path.getsize(path)
+    print(f"\nwrote {path}: {on_disk} bytes "
+          f"(compression ratio {data.nbytes / on_disk:.1f}x)")
     print(f"mean NRMSE        : {rep.mean_nrmse:.2e} (target 1e-3)")
     print(f"worst species     : {rep.per_species_nrmse.max():.2e}")
     print(f"bytes breakdown   : {rep.bytes_breakdown}")
+    assert rep.bytes_breakdown["total"] == on_disk  # measured, not estimated
 
-    decoded = pipe.decompress(rep.artifact)
-    assert np.allclose(decoded, rep.recon, atol=1e-6)
-    assert rep.per_species_nrmse.max() <= 1e-3 * (1 + 1e-3), "bound violated!"
+    # 3. decompress FROM THE FILE with no fitted state — everything the
+    #    decoder needs (geometry, decoder params, correction net, guarantee
+    #    streams, normalization) travels in the container
+    with open(path, "rb") as f:
+        decoded = codec.decompress(f.read())
+
+    per = np.array([metrics.nrmse(data[s], decoded[s])
+                    for s in range(data.shape[0])])
+    assert per.max() <= 1e-3 * (1 + 1e-3), "bound violated!"
+    assert np.array_equal(decoded, gbatc.pipeline.decompress(rep.artifact))
+    os.remove(path)
     print("\nguarantee verified: every species within the error bound; "
-          "decompress(artifact) bit-matches the encoder-side reconstruction.")
+          "the on-disk container decodes bit-identically to the "
+          "encoder-side reconstruction, with no fitted pipeline.")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,9 @@
 production-grade JAX training/inference framework.
 
 Layers:
+  repro.codec     — public codec API: bytes-in/bytes-out GBATC container
+                    (fit/compress to a self-describing blob, standalone
+                    decompress with no fitted state)
   repro.core      — the paper's contribution (GBA / GBATC / GAE / SZ baseline)
   repro.nn        — minimal functional module system (params as pytrees)
   repro.data      — synthetic S3D surrogate + token pipelines

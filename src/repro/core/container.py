@@ -1,0 +1,141 @@
+"""Versioned, tagged-stream container format (the GBATC wire layout).
+
+A container is a self-describing byte blob::
+
+    magic "GBTC" (4) | version u16 | n_streams u16
+    stream table: n_streams x { name_len u8 | name (ascii) | length u64 }
+    payloads, concatenated in table order
+
+Every stream is an opaque byte string addressed by name; nothing about the
+layout is implicit, so a fresh process can enumerate and slice a container
+without any codec state. :class:`ContainerReader` enforces the format
+strictly — bad magic, unknown version, a truncated table, truncated
+payloads, *and trailing garbage* all raise :class:`ContainerFormatError` —
+which is what lets the codec assert ``len(blob)`` equals the sum of the
+header and the stream table's lengths exactly (the byte accounting is a
+view over this table, not an estimate).
+
+Containers nest: a stream's payload may itself be a container (the codec
+stores each species' guarantee artifact that way), and the framing overhead
+of every level is measurable, so "metadata bytes" in the breakdown is a
+real number rather than a ``8*S + 64`` guess.
+"""
+
+from __future__ import annotations
+
+import struct
+
+MAGIC = b"GBTC"
+FORMAT_VERSION = 1
+
+_HEAD = struct.Struct("<4sHH")  # magic, version, n_streams
+_LEN = struct.Struct("<Q")
+
+_MAX_NAME = 255
+
+
+class ContainerFormatError(ValueError):
+    """Raised when a blob is not a well-formed container of a known version."""
+
+
+class ContainerWriter:
+    """Accumulates named streams; ``to_bytes`` emits header + table + payloads."""
+
+    def __init__(self, version: int = FORMAT_VERSION):
+        self.version = version
+        self._streams: list[tuple[str, bytes]] = []
+
+    def add(self, name: str, payload: bytes) -> None:
+        if any(n == name for n, _ in self._streams):
+            raise ValueError(f"duplicate stream name {name!r}")
+        encoded = name.encode("ascii")
+        if not 0 < len(encoded) <= _MAX_NAME:
+            raise ValueError(f"stream name {name!r} must be 1..{_MAX_NAME} ascii bytes")
+        self._streams.append((name, bytes(payload)))
+
+    def to_bytes(self) -> bytes:
+        parts = [_HEAD.pack(MAGIC, self.version, len(self._streams))]
+        for name, payload in self._streams:
+            encoded = name.encode("ascii")
+            parts.append(struct.pack("<B", len(encoded)))
+            parts.append(encoded)
+            parts.append(_LEN.pack(len(payload)))
+        parts.extend(payload for _, payload in self._streams)
+        return b"".join(parts)
+
+
+class ContainerReader:
+    """Parses and validates a container blob; streams accessed by name."""
+
+    def __init__(self, blob: bytes):
+        blob = bytes(blob)
+        if len(blob) < _HEAD.size:
+            raise ContainerFormatError(
+                f"truncated container: {len(blob)} bytes, header needs {_HEAD.size}"
+            )
+        magic, version, n_streams = _HEAD.unpack_from(blob, 0)
+        if magic != MAGIC:
+            raise ContainerFormatError(f"bad magic {magic!r} (expected {MAGIC!r})")
+        if version != FORMAT_VERSION:
+            raise ContainerFormatError(
+                f"unsupported container version {version} "
+                f"(this reader speaks version {FORMAT_VERSION})"
+            )
+        off = _HEAD.size
+        names: list[str] = []
+        lengths: list[int] = []
+        for _ in range(n_streams):
+            if off + 1 > len(blob):
+                raise ContainerFormatError("truncated stream table")
+            (name_len,) = struct.unpack_from("<B", blob, off)
+            off += 1
+            if off + name_len + _LEN.size > len(blob):
+                raise ContainerFormatError("truncated stream table")
+            try:
+                name = blob[off : off + name_len].decode("ascii")
+            except UnicodeDecodeError as e:
+                raise ContainerFormatError("non-ascii stream name") from e
+            off += name_len
+            (length,) = _LEN.unpack_from(blob, off)
+            off += _LEN.size
+            if name in names:
+                raise ContainerFormatError(f"duplicate stream name {name!r}")
+            names.append(name)
+            lengths.append(length)
+        header_end = off
+        expected = header_end + sum(lengths)
+        if len(blob) != expected:
+            kind = "truncated" if len(blob) < expected else "trailing bytes in"
+            raise ContainerFormatError(
+                f"{kind} container: stream table declares {expected} bytes, "
+                f"blob has {len(blob)}"
+            )
+        self.version = version
+        self.header_bytes = header_end
+        self._blob = blob
+        self._offsets: dict[str, tuple[int, int]] = {}
+        for name, length in zip(names, lengths):
+            self._offsets[name] = (off, length)
+            off += length
+        self.names = names
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._offsets
+
+    def __getitem__(self, name: str) -> bytes:
+        try:
+            off, length = self._offsets[name]
+        except KeyError:
+            raise ContainerFormatError(f"missing stream {name!r}") from None
+        return self._blob[off : off + length]
+
+    def get(self, name: str, default: bytes | None = None) -> bytes | None:
+        return self[name] if name in self._offsets else default
+
+    def stream_sizes(self) -> dict[str, int]:
+        """Name -> payload length, from the stream table (measured, not estimated)."""
+        return {name: length for name, (_, length) in self._offsets.items()}
+
+    @property
+    def total_bytes(self) -> int:
+        return len(self._blob)

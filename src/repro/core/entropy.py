@@ -74,6 +74,66 @@ def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
     return codes
 
 
+def _pack_payload_bitloop(sym_codes, sym_lengths, offsets, total_bits) -> bytes:
+    """Reference payload packer: one masked pass per code-bit position.
+
+    Retained as the parity oracle for :func:`_pack_payload` (and for the
+    long-code edge cases the tests pin); ``huffman_encode`` no longer calls
+    it on the hot path.
+    """
+    bits = np.zeros(total_bits, dtype=np.uint8)
+    max_len = int(sym_lengths.max())
+    for j in range(max_len):
+        mask = sym_lengths > j
+        pos = offsets[mask] + j
+        shift = (sym_lengths[mask] - 1 - j).astype(np.uint64)
+        bits[pos] = ((sym_codes[mask] >> shift) & np.uint64(1)).astype(np.uint8)
+    return np.packbits(bits).tobytes()
+
+
+def _or_runs(out: np.ndarray, targets: np.ndarray, values: np.ndarray) -> None:
+    """``out[t] |= OR of values at t`` for *sorted* targets, loop-free.
+
+    Consecutive equal targets form runs; ``bitwise_or.reduceat`` collapses
+    each run in one pass, then a single fancy-index OR lands the results.
+    """
+    if targets.size == 0:
+        return
+    starts = np.flatnonzero(np.r_[True, targets[1:] != targets[:-1]])
+    out[targets[starts]] |= np.bitwise_or.reduceat(values, starts)
+
+
+def _pack_payload(sym_codes, sym_lengths, offsets, total_bits) -> bytes:
+    """Table-driven batched bit pack — no per-code-bit host loop.
+
+    The bitstream is built as big-endian 64-bit words. A code of length
+    ``l`` at bit offset ``o`` lands in word ``o // 64`` (left-aligned at
+    phase ``o % 64``) and, when it straddles the boundary (phase + l > 64),
+    spills its low bits into the next word. Codes are <= 32 bits, so no code
+    touches more than two words. Bit offsets are monotone, hence both the
+    primary and the spill word-index streams arrive sorted and the
+    per-word OR-accumulate collapses to two ``reduceat`` passes — every
+    step is a full-width vector op over the symbol stream. Bit-identical to
+    :func:`_pack_payload_bitloop` (asserted in the unit suite).
+    """
+    nbytes = (total_bits + 7) // 8
+    nwords = (total_bits + 63) // 64
+    w = (offsets >> 6).astype(np.int64)
+    phase = offsets & 63
+    spill_bits = sym_lengths + phase - 64  # > 0: code straddles the boundary
+    codes = sym_codes.astype(np.uint64)
+    lsh = np.where(spill_bits <= 0, -spill_bits, 0).astype(np.uint64)
+    rsh = np.where(spill_bits > 0, spill_bits, 0).astype(np.uint64)
+    hi = np.where(spill_bits <= 0, codes << lsh, codes >> rsh)
+    out = np.zeros(nwords + 1, dtype=np.uint64)  # +1: spill off the last word
+    _or_runs(out, w, hi)
+    straddle = spill_bits > 0
+    if straddle.any():
+        lo = codes[straddle] << (64 - rsh[straddle])
+        _or_runs(out, w[straddle] + 1, lo)
+    return out.astype(">u8").tobytes()[:nbytes]
+
+
 def huffman_encode(values: np.ndarray) -> bytes:
     """Encode an int array. Self-describing: header + packed bits."""
     values = np.asarray(values).ravel()
@@ -88,15 +148,7 @@ def huffman_encode(values: np.ndarray) -> bytes:
     sym_codes = codes[inverse]
     offsets = np.concatenate(([0], np.cumsum(sym_lengths)[:-1]))
     total_bits = int(sym_lengths.sum())
-
-    bits = np.zeros(total_bits, dtype=np.uint8)
-    max_len = int(lengths.max())
-    for j in range(max_len):
-        mask = sym_lengths > j
-        pos = offsets[mask] + j
-        shift = (sym_lengths[mask] - 1 - j).astype(np.uint64)
-        bits[pos] = ((sym_codes[mask] >> shift) & np.uint64(1)).astype(np.uint8)
-    payload = np.packbits(bits).tobytes()
+    payload = _pack_payload(sym_codes, sym_lengths, offsets, total_bits)
 
     header = io.BytesIO()
     header.write(_MAGIC)

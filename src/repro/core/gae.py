@@ -53,12 +53,13 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import struct
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 import numpy as np
 
-from repro.core import entropy, index_coding, pca
+from repro.core import container, entropy, index_coding, pca
 from repro.core.quantization import dequantize
 
 
@@ -125,6 +126,88 @@ class GuaranteeArtifact:
     def total_bytes(self) -> int:
         # 16 bytes of per-species metadata (tau, bin as float64)
         return self.coeff_bytes() + self.index_bytes() + self.basis_bytes() + 16
+
+    # --- wire format ---------------------------------------------------
+    _META = struct.Struct("<ddII")  # tau, coeff_bin, D, n_store
+
+    def to_bytes(self) -> bytes:
+        """Serialize to a nested container: coeff (Huffman), index (Fig. 2
+        bitmap), basis (raw little-endian float32), meta (tau/bin/dims)."""
+        w = container.ContainerWriter()
+        w.add("coeff", entropy.huffman_encode(self.coeff_q))
+        w.add("index", index_coding.encode_indices(self.index_offsets,
+                                                   self.index_flat))
+        w.add("basis", np.ascontiguousarray(
+            self.basis.astype("<f4", copy=False)).tobytes())
+        w.add("meta", self._META.pack(self.tau, self.coeff_bin,
+                                      *self.basis.shape))
+        return w.to_bytes()
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "GuaranteeArtifact":
+        """Inverse of :func:`to_bytes`; raises ContainerFormatError on a
+        malformed blob. Stream-size memos are seeded from the measured
+        payload lengths (they are exact by construction)."""
+        r = container.ContainerReader(blob)
+        meta = r["meta"]
+        if len(meta) != cls._META.size:
+            raise container.ContainerFormatError(
+                f"guarantee meta stream is {len(meta)} bytes, "
+                f"expected {cls._META.size}"
+            )
+        tau, coeff_bin, d, n_store = cls._META.unpack(meta)
+        if not (np.isfinite(tau) and tau >= 0):
+            raise container.ContainerFormatError(f"bad tau {tau!r}")
+        if not (np.isfinite(coeff_bin) and coeff_bin >= 0):
+            raise container.ContainerFormatError(f"bad coeff bin {coeff_bin!r}")
+        raw_basis = r["basis"]
+        if len(raw_basis) != 4 * d * n_store:
+            raise container.ContainerFormatError(
+                f"basis stream is {len(raw_basis)} bytes, "
+                f"expected {4 * d * n_store} for shape ({d}, {n_store})"
+            )
+        basis = np.frombuffer(raw_basis, dtype="<f4").reshape(d, n_store)
+        coeff_stream = r["coeff"]
+        index_stream = r["index"]
+        try:
+            coeff_q = entropy.huffman_decode(coeff_stream)
+            offsets, flat = index_coding.decode_indices(index_stream)
+        except (ValueError, struct.error) as e:
+            # struct.error: truncated Huffman/index headers (not a ValueError)
+            raise container.ContainerFormatError(
+                f"corrupt guarantee stream: {e}"
+            ) from e
+        if coeff_q.size != flat.size:
+            raise container.ContainerFormatError(
+                f"coefficient stream ({coeff_q.size}) and index stream "
+                f"({flat.size}) disagree on selection count"
+            )
+        if coeff_q.size and coeff_bin == 0.0:
+            raise container.ContainerFormatError(
+                "zero coefficient bin with a non-empty coefficient stream"
+            )
+        if n_store > d:
+            raise container.ContainerFormatError(
+                f"basis claims {n_store} stored columns for dimension {d}"
+            )
+        if flat.size and (flat.min() < 0 or flat.max() >= n_store):
+            # a well-framed but bit-flipped index payload must not scatter
+            # coefficients into absent basis columns at replay time
+            raise container.ContainerFormatError(
+                f"index stream selects basis column "
+                f"{int(flat.max() if flat.size else 0)} but only "
+                f"{n_store} columns are stored"
+            )
+        return cls(
+            basis=basis.astype(np.float32),
+            coeff_q=coeff_q,
+            index_offsets=offsets,
+            index_flat=flat,
+            coeff_bin=float(coeff_bin),
+            tau=float(tau),
+            _coeff_bytes=len(coeff_stream),
+            _index_bytes=len(index_stream),
+        )
 
 
 def _effective_bin(coeff_bin: float, tau: float, d: int) -> float:

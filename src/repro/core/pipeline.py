@@ -23,14 +23,20 @@ Stages:
      cached per (latent_bin, correction) so sweeping error bounds against
      one fitted model pays it once; decompress replays corrections through
      the same batched kernel path;
-  6. exact byte accounting: latent stream + decoder params + correction
-     params + per-species {coeffs, CSR index bitmap, basis} + metadata,
-     with stream sizes memoized on the artifact so repeated breakdowns
-     (e.g. the benchmark's TARGETS sweep) never recount identical streams.
+  6. serialization through :mod:`repro.codec`: ``artifact.to_bytes()`` emits
+     the versioned container (latent stream + decoder params + correction
+     params + per-species {coeffs, CSR index bitmap, basis} + metadata) and
+     ``byte_breakdown`` is a view over the container's *measured* stream
+     lengths — ``breakdown["total"] == len(blob)`` exactly, no estimates.
 
-All jitted callables (AE encode/decode, correction apply, guarantee
-selection) are constructed once per pipeline instance — compress/decompress
-never re-trace.
+This class is the fit/orchestration layer; the wire format and the
+standalone decode path live in :mod:`repro.codec` (``compress`` returns an
+in-memory report whose artifact serializes via the codec, and
+``decompress`` is a compatibility wrapper over ``codec.reconstruct`` that
+derives decode structure from the *artifact*, not from this pipeline's
+config). All jitted callables (AE encode/decode, correction apply,
+guarantee selection) are constructed once per pipeline instance —
+compress/decompress never re-trace.
 """
 
 from __future__ import annotations
@@ -44,7 +50,7 @@ import numpy as np
 
 from repro.core import autoencoder as ae
 from repro.core import blocking, correction, entropy, gae, metrics
-from repro.core.quantization import dequantize, quantize
+from repro.core.quantization import dequantize, quantize, quantize_params
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,44 +80,59 @@ class CompressedArtifact:
     norm_range: np.ndarray  # (S,)
     shape: tuple[int, int, int, int]
     cfg: PipelineConfig
-    # memoized Huffman size of latent_q (immutable once built)
-    _latent_bytes: Optional[int] = dataclasses.field(
+    # memoized wire streams (immutable once built): the Huffman'd latent
+    # payload, pre-packed (decoder, correction) parameter streams shared
+    # across a sweep's artifacts, and the full serialized container
+    _latent_blob: Optional[bytes] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _param_streams: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _wire: Optional[bytes] = dataclasses.field(
         default=None, repr=False, compare=False
     )
 
+    def latent_blob(self) -> bytes:
+        if self._latent_blob is None:
+            self._latent_blob = entropy.huffman_encode(self.latent_q)
+        return self._latent_blob
+
     def latent_bytes(self) -> int:
-        if self._latent_bytes is None:
-            self._latent_bytes = entropy.huffman_size_bytes(self.latent_q)
-        return self._latent_bytes
+        return len(self.latent_blob())
+
+    def to_bytes(self) -> bytes:
+        """Serialize to the self-describing container (see repro.codec)."""
+        if self._wire is None:
+            from repro import codec
+
+            self._wire = codec.encode(self)
+        return self._wire
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "CompressedArtifact":
+        """Rebuild an artifact from container bytes (repro.codec wire format)."""
+        from repro import codec
+
+        return codec.decode_artifact(blob)
 
     def byte_breakdown(
         self,
-        model: ae.BlockAutoencoder,
-        corr_net: Optional[correction.TensorCorrectionNetwork],
+        model: Optional[ae.BlockAutoencoder] = None,
+        corr_net: Optional[correction.TensorCorrectionNetwork] = None,
     ) -> dict:
-        scale = self.cfg.param_dtype_bytes / 4
-        latent_bytes = self.latent_bytes()
-        decoder_bytes = int(model.decoder_param_bytes(self.ae_params) * scale)
-        corr_bytes = (
-            int(corr_net.param_bytes(self.corr_params) * scale)
-            if (corr_net is not None and self.corr_params is not None)
-            else 0
-        )
-        coeff = sum(g.coeff_bytes() for g in self.species_guarantees)
-        index = sum(g.index_bytes() for g in self.species_guarantees)
-        basis = sum(g.basis_bytes() for g in self.species_guarantees)
-        meta = 8 * len(self.norm_min) + 64
-        return {
-            "latent": latent_bytes,
-            "decoder": decoder_bytes,
-            "correction": corr_bytes,
-            "coeff": coeff,
-            "index": index,
-            "basis": basis,
-            "meta": meta,
-            "total": latent_bytes + decoder_bytes + corr_bytes + coeff + index
-            + basis + meta,
-        }
+        """Measured per-stream byte accounting of the serialized container.
+
+        A view over the container's stream table — every entry is the real
+        on-wire length and ``breakdown["total"] == len(self.to_bytes())``
+        exactly. ``model``/``corr_net`` are accepted for backward
+        compatibility but unused: the container carries the parameter
+        streams itself.
+        """
+        del model, corr_net
+        from repro import codec
+
+        return codec.stream_breakdown(self.to_bytes())
 
 
 @dataclasses.dataclass
@@ -164,6 +185,8 @@ class GBATCPipeline:
         self._norm: Optional[tuple[np.ndarray, np.ndarray]] = None
         # tau-independent guarantee state per (latent_bin, skip_correction)
         self._prepared: dict[tuple, tuple] = {}
+        # packed (decoder, correction) wire streams, constant per fit
+        self._packed_params: Optional[tuple] = None
 
     _PREPARED_CACHE_MAX = 4  # GBATC + GBA at a couple of latent bins
 
@@ -192,6 +215,11 @@ class GBATCPipeline:
             seed=cfg.seed,
             log_every=200 if verbose else 0,
         )
+        # honest sub-fp32 storage: round params through the container's
+        # storage dtype *before* any of them are used, so the latents,
+        # correction fit, and guarantee all see exactly the values the
+        # serialized decoder will replay (fp32 is the identity)
+        params = quantize_params(params, cfg.param_dtype_bytes)
         latents = np.asarray(_batched(self._jit_encode, params, blocks))
 
         corr_params = None
@@ -203,6 +231,7 @@ class GBATCPipeline:
                 self.corr_net, vec_rec, vec_orig,
                 steps=cfg.corr_steps, seed=cfg.seed + 1,
             )
+            corr_params = quantize_params(corr_params, cfg.param_dtype_bytes)
 
         self._ae_params = params
         self._corr_params = corr_params
@@ -212,6 +241,7 @@ class GBATCPipeline:
         self._data = data
         self._norm = (mn, rngs)
         self._prepared.clear()
+        self._packed_params = None
         return {"final_ae_loss": losses[-1] if losses else float("nan")}
 
     # ------------------------------------------------------------------
@@ -239,14 +269,26 @@ class GBATCPipeline:
                                        corr_params=corr_params)
         vecs_rec = blocking.blocks_as_vectors(x_rec)
         prepared = self._gengine.prepare(self._vecs_orig, vecs_rec)
-        latent_bytes = entropy.huffman_size_bytes(lat_q)
-        entry = (prepared, lat_q, lat_bin, corr_params, latent_bytes)
+        latent_blob = entropy.huffman_encode(lat_q)
+        entry = (prepared, lat_q, lat_bin, corr_params, latent_blob)
         # bounded FIFO: each entry pins several (S, NB, D) fp64 tensors, and
         # a latent_bin_rel sweep would otherwise accumulate one per value
         while len(self._prepared) >= self._PREPARED_CACHE_MAX:
             self._prepared.pop(next(iter(self._prepared)))
         self._prepared[key] = entry
         return entry
+
+    def _packed_param_streams(self) -> tuple:
+        """Pre-packed decoder/correction wire streams, cached per fit —
+        a target_nrmse sweep serializes many artifacts off one fitted
+        model, and the parameter streams are identical in all of them."""
+        if self._packed_params is None:
+            from repro import codec
+
+            self._packed_params = codec.pack_artifact_params(
+                self._ae_params, self._corr_params, self.cfg.param_dtype_bytes
+            )
+        return self._packed_params
 
     def compress(
         self,
@@ -269,7 +311,7 @@ class GBATCPipeline:
         data = self._data
         mn, rngs = self._norm
 
-        prepared, lat_q, lat_bin, corr_params, latent_bytes = \
+        prepared, lat_q, lat_bin, corr_params, latent_blob = \
             self._prepare_guarantee(latent_bin_rel, skip_correction)
 
         d = geom.block_size
@@ -286,14 +328,15 @@ class GBATCPipeline:
             norm_range=rngs,
             shape=tuple(data.shape),
             cfg=cfg,
-            _latent_bytes=latent_bytes,
+            _latent_blob=latent_blob,
+            _param_streams=self._packed_param_streams(),
         )
 
         rec_blocks = blocking.vectors_as_blocks(corrected, geom)
         rec_normed = blocking.from_blocks(rec_blocks, data.shape, geom)
         recon = rec_normed * rngs[:, None, None, None] + mn[:, None, None, None]
 
-        bb = artifact.byte_breakdown(self.model, self.corr_net)
+        bb = artifact.byte_breakdown()
         per_species = np.array(
             [metrics.nrmse(data[s], recon[s]) for s in range(self.n_species)]
         )
@@ -313,27 +356,35 @@ class GBATCPipeline:
 
     # ------------------------------------------------------------------
     def decompress(self, artifact: CompressedArtifact) -> np.ndarray:
-        """Replay stored streams only (no access to the original data)."""
-        geom = artifact.cfg.geometry
-        lat = dequantize(artifact.latent_q, artifact.latent_bin)
-        x_rec = np.asarray(_batched(self._jit_decode, artifact.ae_params, lat))
-        if self.corr_net is not None and artifact.corr_params is not None:
-            vecs = correction.blocks_to_pointwise(x_rec)
-            fixed = np.asarray(
-                _batched(self._jit_corr, artifact.corr_params, vecs,
-                         batch=1 << 16)
+        """Replay stored streams only (no access to the original data).
+
+        Compatibility wrapper over ``repro.codec.reconstruct``: the decode
+        structure — geometry, AE shape, whether correction runs — comes
+        from the *artifact*, never from this pipeline's config. An artifact
+        whose structure disagrees with this pipeline raises rather than
+        silently decoding with the wrong networks (the seed would e.g. let
+        a GBA-configured pipeline skip a GBATC artifact's correction); an
+        artifact that only differs in correction presence decodes fine, so
+        GBA reports off a shared encoder keep working.
+        """
+        a, p = artifact.cfg, self.cfg
+        if (
+            a.geometry != p.geometry
+            or a.latent != p.latent
+            or tuple(a.conv_channels) != tuple(p.conv_channels)
+            or len(artifact.norm_min) != self.n_species
+        ):
+            raise ValueError(
+                f"artifact structure (geometry={a.geometry}, latent={a.latent}, "
+                f"conv={tuple(a.conv_channels)}, S={len(artifact.norm_min)}) does "
+                f"not match this pipeline (geometry={p.geometry}, "
+                f"latent={p.latent}, conv={tuple(p.conv_channels)}, "
+                f"S={self.n_species}); use repro.codec.decompress / "
+                f"codec.reconstruct, which derive everything from the artifact"
             )
-            x_rec = correction.pointwise_to_blocks(fixed, x_rec)
-        vecs_rec = blocking.blocks_as_vectors(x_rec)
-        corrected = gae.apply_correction_batched(
-            vecs_rec, artifact.species_guarantees, self._gengine
-        )
-        rec_blocks = blocking.vectors_as_blocks(corrected, geom)
-        rec_normed = blocking.from_blocks(rec_blocks, artifact.shape, geom)
-        return (
-            rec_normed * artifact.norm_range[:, None, None, None]
-            + artifact.norm_min[:, None, None, None]
-        ).astype(np.float32)
+        from repro import codec
+
+        return codec.reconstruct(artifact)
 
 
 def _batched(fn, params, arrays, batch: int = 512):

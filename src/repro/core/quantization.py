@@ -26,6 +26,35 @@ def quantize_roundtrip(x: np.ndarray, bin_size: float) -> tuple[np.ndarray, np.n
     return q, dequantize(q, bin_size)
 
 
+def param_storage_dtype(param_dtype_bytes: int) -> np.dtype:
+    """Numpy dtype for stored network parameters (fp16 or fp32)."""
+    try:
+        return {2: np.dtype("<f2"), 4: np.dtype("<f4")}[int(param_dtype_bytes)]
+    except KeyError:
+        raise ValueError(
+            f"param_dtype_bytes must be 2 or 4, got {param_dtype_bytes}"
+        ) from None
+
+
+def quantize_params(tree, param_dtype_bytes: int):
+    """Round every leaf of a parameter pytree through its storage dtype.
+
+    Run at fit time when parameters are stored below fp32 so the encoder
+    computes latents/corrections/guarantees with *exactly* the values the
+    container will carry — otherwise the serialized decoder drifts from the
+    one the guarantee was computed against and the error bound is fiction.
+    fp32 storage is the identity. Compute dtype stays float32.
+    """
+    import jax
+
+    dtype = param_storage_dtype(param_dtype_bytes)
+    if dtype.itemsize == 4:
+        return tree
+    return jax.tree.map(
+        lambda leaf: np.asarray(leaf).astype(dtype).astype(np.float32), tree
+    )
+
+
 def per_channel_scale(x: np.ndarray, axis: int, n_bits: int = 8) -> np.ndarray:
     """Symmetric per-channel scale for int quantization (KV/grad compression)."""
     amax = np.max(np.abs(x), axis=axis, keepdims=True)

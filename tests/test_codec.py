@@ -1,0 +1,491 @@
+"""Codec / container-format tests: the wire contract.
+
+The acceptance bar for the serialization layer:
+
+* ``decompress(compress(...))`` matches the in-memory reconstruction
+  **bitwise** (not just within tolerance);
+* a container decodes through the standalone module path — no fitted
+  pipeline, no codec instance state;
+* ``len(blob)`` equals the reported byte total exactly (accounting is a
+  view over the stream table, not an estimate);
+* corrupted / truncated / wrong-version blobs raise
+  :class:`ContainerFormatError` with a useful message.
+"""
+
+import numpy as np
+import pytest
+
+from repro import codec
+from repro.core import gae, metrics
+from repro.core.container import (
+    ContainerFormatError,
+    ContainerReader,
+    ContainerWriter,
+)
+from repro.core.pipeline import CompressedArtifact, GBATCPipeline, PipelineConfig
+from repro.data import s3d
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    cfg = s3d.S3DConfig(n_species=8, n_time=8, height=40, width=32, seed=3)
+    return s3d.generate(cfg)["species"]
+
+
+@pytest.fixture(scope="module")
+def fitted_codec(small_data):
+    cfg = PipelineConfig(ae_steps=60, corr_steps=30, conv_channels=(16, 32))
+    return codec.GBATCCodec(cfg).fit(small_data)
+
+
+@pytest.fixture(scope="module")
+def blob_and_report(fitted_codec):
+    return fitted_codec.compress_report(target_nrmse=1e-3)
+
+
+class TestContainer:
+    def test_round_trip(self):
+        w = ContainerWriter()
+        w.add("alpha", b"12345")
+        w.add("beta", b"")
+        w.add("gamma", bytes(range(256)))
+        blob = w.to_bytes()
+        r = ContainerReader(blob)
+        assert r.names == ["alpha", "beta", "gamma"]
+        assert r["alpha"] == b"12345"
+        assert r["beta"] == b""
+        assert r["gamma"] == bytes(range(256))
+        assert r.total_bytes == len(blob)
+        assert r.header_bytes + sum(r.stream_sizes().values()) == len(blob)
+
+    def test_duplicate_stream_rejected(self):
+        w = ContainerWriter()
+        w.add("x", b"1")
+        with pytest.raises(ValueError):
+            w.add("x", b"2")
+
+    def test_missing_stream_raises(self):
+        w = ContainerWriter()
+        w.add("x", b"1")
+        with pytest.raises(ContainerFormatError):
+            ContainerReader(w.to_bytes())["y"]
+
+    @pytest.mark.parametrize("cut", [0, 3, 7, 12, -1])
+    def test_truncation_raises(self, cut):
+        w = ContainerWriter()
+        w.add("stream", b"payload-bytes")
+        blob = w.to_bytes()
+        with pytest.raises(ContainerFormatError):
+            ContainerReader(blob[:cut] if cut >= 0 else blob[: len(blob) - 1])
+
+    def test_trailing_garbage_raises(self):
+        w = ContainerWriter()
+        w.add("stream", b"payload")
+        with pytest.raises(ContainerFormatError, match="trailing"):
+            ContainerReader(w.to_bytes() + b"x")
+
+    def test_bad_magic_raises(self):
+        w = ContainerWriter()
+        w.add("stream", b"payload")
+        blob = w.to_bytes()
+        with pytest.raises(ContainerFormatError, match="magic"):
+            ContainerReader(b"NOPE" + blob[4:])
+
+    def test_unknown_version_raises(self):
+        w = ContainerWriter(version=73)
+        w.add("stream", b"payload")
+        with pytest.raises(ContainerFormatError, match="version"):
+            ContainerReader(w.to_bytes())
+
+
+class TestCodecRoundTrip:
+    def test_bitwise_matches_in_memory_reconstruction(
+        self, fitted_codec, blob_and_report
+    ):
+        blob, rep = blob_and_report
+        dec = codec.decompress(blob)
+        inmem = fitted_codec.pipeline.decompress(rep.artifact)
+        np.testing.assert_array_equal(dec, inmem)
+        assert dec.dtype == np.float32
+
+    def test_standalone_decode_meets_bound(self, small_data, blob_and_report):
+        blob, _ = blob_and_report
+        dec = codec.decompress(blob)
+        per = np.array(
+            [metrics.nrmse(small_data[s], dec[s]) for s in range(small_data.shape[0])]
+        )
+        assert per.max() <= 1e-3 * (1 + 1e-3)
+
+    def test_fresh_codec_instance_decodes(self, blob_and_report):
+        """Decoding needs zero fitted state — a brand-new codec (and the
+        module-level function) must reconstruct the same field."""
+        blob, _ = blob_and_report
+        fresh = codec.GBATCCodec()
+        np.testing.assert_array_equal(fresh.decompress(blob),
+                                      codec.decompress(blob))
+
+    def test_artifact_fields_survive_wire(self, blob_and_report):
+        blob, rep = blob_and_report
+        art = CompressedArtifact.from_bytes(blob)
+        src = rep.artifact
+        np.testing.assert_array_equal(art.latent_q, src.latent_q)
+        assert art.latent_bin == src.latent_bin
+        np.testing.assert_array_equal(art.norm_min, src.norm_min)
+        np.testing.assert_array_equal(art.norm_range, src.norm_range)
+        assert art.shape == src.shape
+        assert art.cfg.geometry == src.cfg.geometry
+        assert art.cfg.latent == src.cfg.latent
+        assert tuple(art.cfg.conv_channels) == tuple(src.cfg.conv_channels)
+        for g_dec, g_src in zip(art.species_guarantees, src.species_guarantees):
+            np.testing.assert_array_equal(g_dec.coeff_q, g_src.coeff_q)
+            np.testing.assert_array_equal(g_dec.index_offsets, g_src.index_offsets)
+            np.testing.assert_array_equal(g_dec.index_flat, g_src.index_flat)
+            np.testing.assert_array_equal(g_dec.basis, g_src.basis)
+            assert g_dec.tau == g_src.tau
+            assert g_dec.coeff_bin == g_src.coeff_bin
+        # decoder params round-trip bitwise (fp32 storage is lossless)
+        dec_keys = sorted(k for k in src.ae_params if k.startswith("dec"))
+        assert sorted(art.ae_params) == dec_keys
+        for k in dec_keys:
+            for leaf_name in sorted(art.ae_params[k]):
+                np.testing.assert_array_equal(
+                    np.asarray(art.ae_params[k][leaf_name]),
+                    np.asarray(src.ae_params[k][leaf_name]),
+                )
+
+    def test_target_sweep_round_trips(self, small_data, fitted_codec):
+        """Property-style sweep: every error bound's container must decode
+        standalone to a bound-satisfying field, bitwise-matching the
+        in-memory replay."""
+        for target in (5e-3, 1e-3, 3e-4):
+            blob, rep = fitted_codec.compress_report(target_nrmse=target)
+            dec = codec.decompress(blob)
+            np.testing.assert_array_equal(
+                dec, fitted_codec.pipeline.decompress(rep.artifact)
+            )
+            per = np.array(
+                [metrics.nrmse(small_data[s], dec[s])
+                 for s in range(small_data.shape[0])]
+            )
+            assert per.max() <= target * (1 + 1e-3)
+            assert len(blob) == rep.bytes_breakdown["total"]
+
+    def test_compress_with_data_fits_first(self, small_data):
+        c = codec.GBATCCodec(
+            PipelineConfig(ae_steps=40, corr_steps=20, conv_channels=(16, 32))
+        )
+        assert not c.fitted
+        blob = c.compress(small_data, target_nrmse=2e-3)
+        assert c.fitted
+        dec = codec.decompress(blob)
+        assert dec.shape == small_data.shape
+
+    def test_unfitted_compress_raises(self):
+        with pytest.raises(RuntimeError):
+            codec.GBATCCodec().compress(target_nrmse=1e-3)
+
+    def test_non_4d_data_raises_clearly(self, fitted_codec):
+        """compress(1e-3) — a float where data goes — must fail with a
+        clear ValueError, not an AttributeError deep inside fit."""
+        with pytest.raises(ValueError, match="expected \\(S, T, H, W\\)"):
+            fitted_codec.compress(1e-3)
+
+    def test_unrepresentable_conv_channels_raise_at_encode(
+        self, blob_and_report
+    ):
+        import dataclasses
+
+        _, rep = blob_and_report
+        bad_cfg = dataclasses.replace(
+            rep.artifact.cfg, conv_channels=(70000, 32)
+        )
+        bad_art = dataclasses.replace(
+            rep.artifact, cfg=bad_cfg, _wire=None
+        )
+        with pytest.raises(ValueError, match="u16"):
+            codec.encode(bad_art)
+        bad_cfg = dataclasses.replace(rep.artifact.cfg, latent=70000)
+        bad_art = dataclasses.replace(rep.artifact, cfg=bad_cfg, _wire=None)
+        with pytest.raises(ValueError, match="u16"):
+            codec.encode(bad_art)
+
+
+class TestByteAccounting:
+    def test_len_equals_reported_total_exactly(self, blob_and_report):
+        blob, rep = blob_and_report
+        bb = rep.bytes_breakdown
+        assert bb["total"] == len(blob)
+        parts = (bb["latent"] + bb["decoder"] + bb["correction"] + bb["coeff"]
+                 + bb["index"] + bb["basis"] + bb["meta"])
+        assert parts == bb["total"]
+
+    def test_breakdown_matches_stream_table(self, blob_and_report):
+        blob, rep = blob_and_report
+        r = ContainerReader(blob)
+        sizes = r.stream_sizes()
+        bb = rep.bytes_breakdown
+        assert bb["latent"] == sizes["latent"]
+        assert bb["decoder"] == sizes["decoder"]
+        assert bb["correction"] == sizes["correction"]
+        # meta is measured framing + metadata, not the seed's 8*S + 64 guess
+        assert bb["meta"] >= r.header_bytes + sizes["meta"]
+
+    def test_gba_container_has_no_correction_stream(self, fitted_codec):
+        blob, rep = fitted_codec.compress_report(
+            target_nrmse=2e-3, skip_correction=True
+        )
+        assert "correction" not in ContainerReader(blob)
+        assert rep.bytes_breakdown["correction"] == 0
+        assert rep.bytes_breakdown["total"] == len(blob)
+        dec = codec.decompress(blob)
+        art = CompressedArtifact.from_bytes(blob)
+        assert art.corr_params is None
+        np.testing.assert_array_equal(dec, codec.reconstruct(art))
+
+
+class TestCorruption:
+    def test_truncated_raises(self, blob_and_report):
+        blob, _ = blob_and_report
+        for cut in (0, 5, len(blob) // 2, len(blob) - 1):
+            with pytest.raises(ContainerFormatError):
+                codec.decompress(blob[:cut])
+
+    def test_wrong_magic_raises(self, blob_and_report):
+        blob, _ = blob_and_report
+        with pytest.raises(ContainerFormatError, match="magic"):
+            codec.decompress(b"ZSTD" + blob[4:])
+
+    def test_wrong_version_raises(self, blob_and_report):
+        blob, _ = blob_and_report
+        bad = blob[:4] + (99).to_bytes(2, "little") + blob[6:]
+        with pytest.raises(ContainerFormatError, match="version"):
+            codec.decompress(bad)
+
+    def test_trailing_garbage_raises(self, blob_and_report):
+        blob, _ = blob_and_report
+        with pytest.raises(ContainerFormatError, match="trailing"):
+            codec.decompress(blob + b"\x00\x01\x02")
+
+    @pytest.mark.parametrize(
+        "offset,value",
+        [
+            (0, 0),    # cleared correction flag with a correction stream present
+            (0, 0xFF), # unknown flag bits set (newer writer or bit flip)
+            (1, 3),    # param_dtype_bytes neither 2 nor 4
+            (4, 0),    # geometry bt == 0 (would ZeroDivide downstream)
+            (10, 0),   # n_conv == 0 (mis-frames the rest of the meta stream)
+            (12, 0),   # conv_channels[0] == 0
+        ],
+    )
+    def test_corrupt_meta_fields_raise(self, blob_and_report, offset, value):
+        """Bit-flipped meta fields must surface as ContainerFormatError, not
+        ZeroDivisionError / model-construction crashes downstream."""
+        blob, _ = blob_and_report
+        r = ContainerReader(blob)
+        w = ContainerWriter()
+        for name in r.names:
+            payload = r[name]
+            if name == "meta":
+                payload = payload[:offset] + bytes([value]) + payload[offset + 1 :]
+            w.add(name, payload)
+        with pytest.raises(ContainerFormatError):
+            codec.decompress(w.to_bytes())
+
+    def _rebuild(self, blob, mutate):
+        """Re-emit the outer container with ``mutate(name, payload)``."""
+        r = ContainerReader(blob)
+        w = ContainerWriter()
+        for name in r.names:
+            res = mutate(name, r[name])
+            if res is not None:
+                w.add(name, res)
+        return w
+
+    def test_truncated_nested_coeff_raises_format_error(self, blob_and_report):
+        """A coeff payload cut inside its Huffman header must raise
+        ContainerFormatError, not leak struct.error."""
+        blob, _ = blob_and_report
+
+        def mutate(name, payload):
+            if name == "guarantee0":
+                sub = ContainerReader(payload)
+                sw = ContainerWriter()
+                for n in sub.names:
+                    sw.add(n, sub[n][:8] if n == "coeff" else sub[n])
+                return sw.to_bytes()
+            return payload
+
+        with pytest.raises(ContainerFormatError):
+            codec.decompress(self._rebuild(blob, mutate).to_bytes())
+
+    def test_stray_stream_raises(self, blob_and_report):
+        """Unknown streams must be rejected — every byte on the wire is
+        accounted for by purpose, nothing rides along silently."""
+        blob, _ = blob_and_report
+        w = self._rebuild(blob, lambda name, payload: payload)
+        w.add("padding", b"\x00" * 1024)
+        with pytest.raises(ContainerFormatError, match="unexpected stream"):
+            codec.decompress(w.to_bytes())
+
+    def test_nan_coeff_bin_raises(self, blob_and_report):
+        """A NaN coefficient bin in a guarantee meta stream must raise, not
+        scatter NaN corrections into the decoded field."""
+        import struct
+
+        blob, _ = blob_and_report
+
+        def mutate(name, payload):
+            if name == "guarantee0":
+                sub = ContainerReader(payload)
+                sw = ContainerWriter()
+                for n in sub.names:
+                    p = sub[n]
+                    if n == "meta":  # <ddII: tau, coeff_bin, D, n_store
+                        p = p[:8] + struct.pack("<d", float("nan")) + p[16:]
+                    sw.add(n, p)
+                return sw.to_bytes()
+            return payload
+
+        with pytest.raises(ContainerFormatError, match="coeff bin"):
+            codec.decompress(self._rebuild(blob, mutate).to_bytes())
+
+    def test_basis_dimension_mismatch_raises(self, blob_and_report):
+        """A guarantee basis whose row dimension disagrees with the block
+        size must fail validation, not crash in the decode replay."""
+        blob, rep = blob_and_report
+        nb = rep.artifact.species_guarantees[0].n_blocks
+        wrong_d = gae.GuaranteeArtifact.empty(nb=nb, d=40, tau=1.0).to_bytes()
+        w = self._rebuild(
+            blob,
+            lambda name, payload: wrong_d if name == "guarantee0" else payload,
+        )
+        with pytest.raises(ContainerFormatError, match="block size"):
+            codec.decompress(w.to_bytes())
+
+    def test_corrupt_nested_guarantee_raises(self, blob_and_report):
+        """Corrupting a nested guarantee container's magic must surface as a
+        ContainerFormatError, not a silent mis-decode."""
+        blob, _ = blob_and_report
+        r = ContainerReader(blob)
+        w = ContainerWriter()
+        for name in r.names:
+            payload = r[name]
+            if name == "guarantee0":
+                payload = b"NOPE" + payload[4:]
+            w.add(name, payload)
+        with pytest.raises(ContainerFormatError):
+            codec.decompress(w.to_bytes())
+
+
+class TestConfigShadowingFix:
+    """decompress must derive structure from the artifact, not the pipeline."""
+
+    def test_gba_pipeline_applies_gbatc_correction(
+        self, small_data, fitted_codec, blob_and_report
+    ):
+        blob, rep = blob_and_report
+        cfg_gba = PipelineConfig(
+            ae_steps=60, corr_steps=30, conv_channels=(16, 32),
+            use_correction=False,
+        )
+        pipe_gba = GBATCPipeline(cfg_gba, n_species=small_data.shape[0])
+        out = pipe_gba.decompress(rep.artifact)  # seed silently skipped corr
+        np.testing.assert_array_equal(out, codec.decompress(blob))
+
+    def test_structural_mismatch_raises(self, small_data, blob_and_report):
+        _, rep = blob_and_report
+        for bad_cfg in (
+            PipelineConfig(conv_channels=(16, 32), latent=20),
+            PipelineConfig(conv_channels=(8, 16)),
+        ):
+            pipe = GBATCPipeline(bad_cfg, n_species=small_data.shape[0])
+            with pytest.raises(ValueError, match="does not match"):
+                pipe.decompress(rep.artifact)
+
+    def test_species_count_mismatch_raises(self, blob_and_report):
+        _, rep = blob_and_report
+        pipe = GBATCPipeline(
+            PipelineConfig(conv_channels=(16, 32)), n_species=3
+        )
+        with pytest.raises(ValueError, match="does not match"):
+            pipe.decompress(rep.artifact)
+
+
+class TestGuaranteeArtifactWire:
+    @pytest.mark.parametrize("tau", [0.2, 0.8])
+    def test_round_trip(self, tau):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(200, 64)).astype(np.float32)
+        x_rec = x + 0.1 * rng.normal(size=x.shape).astype(np.float32)
+        _, art = gae.guarantee(x, x_rec, tau)
+        back = gae.GuaranteeArtifact.from_bytes(art.to_bytes())
+        np.testing.assert_array_equal(back.coeff_q, art.coeff_q)
+        np.testing.assert_array_equal(back.index_offsets, art.index_offsets)
+        np.testing.assert_array_equal(back.index_flat, art.index_flat)
+        np.testing.assert_array_equal(back.basis, art.basis)
+        assert back.tau == art.tau and back.coeff_bin == art.coeff_bin
+        # the replayed correction is bit-identical through the wire
+        np.testing.assert_array_equal(
+            gae.apply_correction(x_rec, back), gae.apply_correction(x_rec, art)
+        )
+
+    def test_empty_artifact_round_trip(self):
+        art = gae.GuaranteeArtifact.empty(nb=37, d=80, tau=1.5)
+        back = gae.GuaranteeArtifact.from_bytes(art.to_bytes())
+        assert back.n_blocks == 37
+        assert back.coeff_q.size == 0 and back.basis.shape == (80, 0)
+        assert back.tau == 1.5
+
+    def test_out_of_range_index_raises(self):
+        """A well-framed index stream whose flat indices exceed the stored
+        basis columns must raise at decode, not silently scatter into
+        zero/absent columns at replay time."""
+        art = gae.GuaranteeArtifact(
+            basis=np.zeros((8, 2), np.float32),
+            coeff_q=np.array([5], np.int64),
+            index_offsets=np.array([0, 1, 1], np.int64),
+            index_flat=np.array([5], np.int64),  # >= n_store == 2
+            coeff_bin=0.1,
+            tau=0.5,
+        )
+        with pytest.raises(ContainerFormatError, match="basis column"):
+            gae.GuaranteeArtifact.from_bytes(art.to_bytes())
+
+    def test_stream_size_memos_match_measured(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(150, 48)).astype(np.float32)
+        x_rec = x + 0.2 * rng.normal(size=x.shape).astype(np.float32)
+        _, art = gae.guarantee(x, x_rec, 0.3)
+        back = gae.GuaranteeArtifact.from_bytes(art.to_bytes())
+        assert back.coeff_bytes() == art.coeff_bytes()
+        assert back.index_bytes() == art.index_bytes()
+
+
+class TestFp16ParamStorage:
+    def test_honest_fp16_container(self, small_data):
+        """fp16 storage halves the parameter streams AND keeps the bound:
+        fit() rounds params through the storage dtype before anything
+        downstream uses them, so the serialized decoder is exactly the one
+        the guarantee was computed against."""
+        mk = lambda pdb: PipelineConfig(
+            ae_steps=40, corr_steps=20, conv_channels=(16, 32),
+            param_dtype_bytes=pdb,
+        )
+        target = 2e-3
+        blob32, _ = codec.GBATCCodec(mk(4)).fit(small_data).compress_report(
+            target_nrmse=target
+        )
+        blob16, rep16 = codec.GBATCCodec(mk(2)).fit(small_data).compress_report(
+            target_nrmse=target
+        )
+        bb32 = codec.stream_breakdown(blob32)
+        bb16 = codec.stream_breakdown(blob16)
+        assert bb16["decoder"] * 2 == bb32["decoder"]
+        assert bb16["correction"] * 2 == bb32["correction"]
+        dec = codec.decompress(blob16)
+        np.testing.assert_array_equal(dec, codec.reconstruct(rep16.artifact))
+        per = np.array(
+            [metrics.nrmse(small_data[s], dec[s])
+             for s in range(small_data.shape[0])]
+        )
+        assert per.max() <= target * (1 + 1e-3)

@@ -119,6 +119,50 @@ class TestHuffman:
         with pytest.raises(ValueError):
             entropy.huffman_decode(blob[: len(blob) // 2])
 
+    @pytest.mark.parametrize("seed", range(5))
+    def test_packed_encoder_parity_with_bitloop(self, seed):
+        """The table-driven batched pack must be bit-identical to the
+        retained per-code-bit reference on every payload, including codes
+        that straddle 64-bit word boundaries."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 150000))
+        vals = np.rint(rng.normal(scale=3.0 ** rng.integers(0, 4),
+                                  size=n)).astype(np.int64)
+        symbols, inverse = np.unique(vals, return_inverse=True)
+        lengths = entropy._code_lengths(np.bincount(inverse))
+        codes = entropy._canonical_codes(lengths)
+        sym_lengths, sym_codes = lengths[inverse], codes[inverse]
+        offsets = np.concatenate(([0], np.cumsum(sym_lengths)[:-1]))
+        total_bits = int(sym_lengths.sum())
+        assert entropy._pack_payload(
+            sym_codes, sym_lengths, offsets, total_bits
+        ) == entropy._pack_payload_bitloop(
+            sym_codes, sym_lengths, offsets, total_bits
+        )
+
+    def test_packed_encoder_parity_long_codes(self):
+        """Fibonacci frequencies push code lengths past 16 bits — the
+        word-spill path of the packed encoder must stay exact."""
+        fib = [1, 1]
+        while len(fib) < 26:
+            fib.append(fib[-1] + fib[-2])
+        vals = np.concatenate(
+            [np.full(f, i, np.int64) for i, f in enumerate(fib)]
+        )
+        np.random.default_rng(3).shuffle(vals)
+        symbols, inverse = np.unique(vals, return_inverse=True)
+        lengths = entropy._code_lengths(np.bincount(inverse))
+        codes = entropy._canonical_codes(lengths)
+        sym_lengths, sym_codes = lengths[inverse], codes[inverse]
+        offsets = np.concatenate(([0], np.cumsum(sym_lengths)[:-1]))
+        total_bits = int(sym_lengths.sum())
+        assert lengths.max() > 16
+        assert entropy._pack_payload(
+            sym_codes, sym_lengths, offsets, total_bits
+        ) == entropy._pack_payload_bitloop(
+            sym_codes, sym_lengths, offsets, total_bits
+        )
+
 
 class TestIndexCoding:
     @pytest.mark.parametrize("seed", range(3))
