@@ -4,7 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract) and
 writes detailed CSVs under results/bench/.
 
   PYTHONPATH=src python -m benchmarks.run           # quick mode (default)
+  PYTHONPATH=src python -m benchmarks.run --quick   # same, explicit
   PYTHONPATH=src python -m benchmarks.run --full    # paper-scale surrogate
+
+Exits nonzero if any benchmark's internal assertion fails — in particular
+the bit-identity gates (fused decompress vs the retained pre-change decode,
+wire decode vs in-memory replay): a broken invariant can never hide behind
+a pretty throughput number.
 """
 
 from __future__ import annotations
@@ -86,6 +92,26 @@ def bench_guarantee_engine(rows):
     ))
 
 
+def bench_throughput_engine(rows, full=False):
+    """Compiled trainer + fused decode vs the retained pre-change paths;
+    emits BENCH_throughput.json. Bit-identity of the fused decode against
+    the reference is asserted inside before any number is reported."""
+    from benchmarks import bench_throughput
+
+    summary = bench_throughput.run(quick=not full)
+    rows.append((
+        "throughput_fit_warm",
+        summary["fit"]["engine_warm_s"] * 1e6,
+        f"speedup={summary['fit']['speedup_warm']:.1f}x",
+    ))
+    rows.append((
+        "throughput_decompress",
+        summary["decompress"]["fused_ms"] * 1e3,
+        f"MBps={summary['decompress']['fused_MBps']:.1f}"
+        f" speedup={summary['decompress']['speedup']:.1f}x",
+    ))
+
+
 def bench_codec_wire(rows, full=False):
     """Container wire format: on-disk-verified ratios + codec throughput;
     emits BENCH_codec.json (harness CSV rows preserved alongside)."""
@@ -124,30 +150,41 @@ def bench_sz(rows):
 
 
 def main() -> None:
-    full = "--full" in sys.argv
+    # --quick (the default) runs the small surrogates; --full paper-scale
+    full = "--full" in sys.argv and "--quick" not in sys.argv
     rows: list[tuple] = []
+    failures: list[str] = []
 
-    bench_kernels(rows)
-    bench_gae(rows)
-    bench_guarantee_engine(rows)
-    bench_codec_wire(rows, full=full)
-    bench_sz(rows)
+    def guarded(name, fn, *args, **kw):
+        """Run one benchmark; a failed bit-identity (or any other)
+        assertion is recorded and turns the whole run nonzero instead of
+        silently dropping the benchmark."""
+        try:
+            fn(*args, **kw)
+        except AssertionError as e:
+            failures.append(f"{name}: {e}")
+            rows.append((name, 0.0, f"ASSERTION FAILED: {e}"))
+
+    guarded("bench_kernels", bench_kernels, rows)
+    guarded("bench_gae", bench_gae, rows)
+    guarded("guarantee_engine", bench_guarantee_engine, rows)
+    guarded("throughput_engine", bench_throughput_engine, rows, full=full)
+    guarded("codec_wire", bench_codec_wire, rows, full=full)
+    guarded("bench_sz", bench_sz, rows)
 
     # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)
     from benchmarks import bench_compression, bench_gradcomp, bench_qoi
 
-    t0 = time.time()
-    comp = bench_compression.run(quick=not full)
-    rows.append(("bench_compression_total", (time.time() - t0) * 1e6,
-                 f"rows={len(comp)}"))
-    t0 = time.time()
-    qrows = bench_qoi.run(quick=not full)
-    rows.append(("bench_qoi_total", (time.time() - t0) * 1e6,
-                 f"rows={len(qrows)}"))
-    t0 = time.time()
-    grows = bench_gradcomp.run(quick=not full)
-    rows.append(("bench_gradcomp_total", (time.time() - t0) * 1e6,
-                 f"rows={len(grows)}"))
+    def timed(name, fn):
+        t0 = time.time()
+        out = fn(quick=not full)
+        rows.append((f"{name}_total", (time.time() - t0) * 1e6,
+                     f"rows={len(out)}"))
+
+    guarded("bench_compression", timed, "bench_compression",
+            bench_compression.run)
+    guarded("bench_qoi", timed, "bench_qoi", bench_qoi.run)
+    guarded("bench_gradcomp", timed, "bench_gradcomp", bench_gradcomp.run)
 
     # roofline summary if dry-run artifacts exist
     try:
@@ -165,6 +202,11 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if failures:
+        print("\nFAILED ASSERTIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Quickstart: compress a CFD snapshot series to *bytes on disk* with the
 GBATC codec, decompress it standalone, and verify the error-bound guarantee —
-the paper's pipeline end to end in ~2 minutes on CPU.
+the paper's pipeline end to end in ~1 minute on CPU.
 
   PYTHONPATH=src python examples/quickstart.py
 
@@ -8,6 +8,18 @@ The codec API is bytes in, bytes out: ``GBATCCodec.compress`` returns a
 self-describing container blob, and ``repro.codec.decompress(blob)``
 reconstructs the field from the blob alone — a fresh process with no fitted
 model can decode the file this script writes.
+
+Performance expectations (2-core CI-class CPU; see BENCH_throughput.json
+for the currently measured numbers): the 500-step fit below runs on the
+compiled mini-batch engine (device-resident data, no per-step host sync)
+at roughly 20+ steps/s — most of a fit's wall clock is now SGD compute,
+and *refitting* the same codec is warm-start fast because the compiled
+training program is cached. Standalone ``decompress`` runs the fused
+device-resident decode (one dispatch for decoder+correction, batched
+guarantee replay). Benchmark both ends against the retained pre-change
+paths with:
+
+  PYTHONPATH=src python -m benchmarks.bench_throughput
 """
 
 import os

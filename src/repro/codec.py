@@ -25,8 +25,19 @@ stream          payload
 Byte accounting is a *view over the container's stream table*
 (:func:`stream_breakdown`), so ``breakdown["total"] == len(blob)`` holds
 exactly — the seed's ``8*S + 64`` metadata guess is gone. Decoding state
-(model instances, jitted callables) is cached per structural signature, so
-repeated ``decompress`` calls never re-trace.
+(model instances, jitted callables, Huffman decode tables) is cached per
+structural signature, so repeated ``decompress`` calls never re-trace.
+
+Decode is organized as a device-resident hot path: the container head
+(meta, latents, parameters) parses first and one fused jit — dequantized
+latents through the AE decoder, pointwise correction, and the
+blocks→vectors layout change — is dispatched asynchronously; the
+per-species guarantee streams entropy-decode (batched lockstep chain
+walks, memoized tables) while it runs, and a single batched Pallas replay
+applies the corrections. The seed's staged orchestration is retained as
+``reconstruct_reference`` / ``decompress_reference`` — the fused path must
+match it **bit for bit** (asserted in tests and gating
+``benchmarks/bench_throughput.py``).
 
 ``GBATCPipeline.compress/decompress`` remain as thin compatibility wrappers
 over this module (see :mod:`repro.core.pipeline`).
@@ -62,8 +73,12 @@ __all__ = [
     "ContainerFormatError",
     "encode",
     "decode_artifact",
+    "decode_artifact_reference",
     "decompress",
+    "decompress_reference",
     "reconstruct",
+    "reconstruct_reference",
+    "make_fused_decode",
     "stream_breakdown",
 ]
 
@@ -256,13 +271,30 @@ def encode(artifact: CompressedArtifact) -> bytes:
     return w.to_bytes()
 
 
-def decode_artifact(blob: bytes) -> CompressedArtifact:
-    """Rebuild a :class:`CompressedArtifact` from a container blob alone.
+@dataclasses.dataclass
+class _DecodedHead:
+    """Everything the NN decode needs, parsed before guarantee streams."""
 
-    The returned artifact carries only what the wire format does: the AE
-    *decoder* parameters (the encoder never ships), the correction network
-    if present, and the per-species guarantee streams.
-    """
+    reader: ContainerReader
+    blob: bytes
+    cfg: PipelineConfig
+    shape: tuple[int, int, int, int]
+    nb: int
+    latent_bin: float
+    norm_min: np.ndarray
+    norm_range: np.ndarray
+    latent_q: np.ndarray
+    latent_stream: bytes
+    ae_params: Any
+    corr_params: Any
+    runtime: _DecodeRuntime
+
+
+def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
+    """Parse/validate the container head: meta, stream set, latents,
+    network parameters — everything except the guarantee streams, so the
+    fused NN decode can be dispatched while those entropy-decode.
+    ``huffman`` overrides the latent decoder (reference path)."""
     r = ContainerReader(blob)
     cfg, shape, latent_bin, norm_min, norm_range = _unpack_meta(r["meta"])
     if cfg.use_correction != ("correction" in r):
@@ -294,9 +326,17 @@ def decode_artifact(blob: bytes) -> CompressedArtifact:
             f"(expected {sorted(expected_streams)})"
         )
 
+    # the runtime cache is the single construction site for the decode
+    # models — decode_artifact and reconstruct cannot drift apart
+    rt = _runtime(cfg, s, cfg.use_correction)
     latent_stream = r["latent"]
     try:
-        latent_q = entropy.huffman_decode(latent_stream)
+        if huffman is None:
+            latent_q = entropy.huffman_decode(
+                latent_stream, table_cache=rt.table_cache
+            )
+        else:
+            latent_q = huffman(latent_stream)
     except (ValueError, struct.error) as e:
         # struct.error: a truncated Huffman header (not a ValueError)
         raise ContainerFormatError(f"corrupt latent stream: {e}") from e
@@ -307,44 +347,112 @@ def decode_artifact(blob: bytes) -> CompressedArtifact:
         )
     latent_q = latent_q.reshape(nb, cfg.latent)
 
-    # the runtime cache is the single construction site for the decode
-    # models — decode_artifact and reconstruct cannot drift apart
-    rt = _runtime(cfg, s, cfg.use_correction)
     ae_params = unpack_params(r["decoder"], _decoder_defs(rt.model),
                               cfg.param_dtype_bytes)
     corr_params = None
     if cfg.use_correction:
         corr_params = unpack_params(r["correction"], rt.corr_net.defs,
                                     cfg.param_dtype_bytes)
+    return _DecodedHead(
+        reader=r, blob=bytes(blob), cfg=cfg, shape=shape, nb=nb,
+        latent_bin=latent_bin, norm_min=norm_min, norm_range=norm_range,
+        latent_q=latent_q, latent_stream=latent_stream,
+        ae_params=ae_params, corr_params=corr_params, runtime=rt,
+    )
+
+
+def _decode_guarantees(head: _DecodedHead, *, huffman=None) -> list:
+    """Entropy-decode the per-species guarantee streams.
+
+    The coefficient streams of all species decode in one lockstep
+    chunk-parallel chain walk (:func:`entropy.huffman_decode_many`) with
+    codebook tables served from the runtime cache; per-species container
+    parsing/validation then consumes the pre-decoded symbols. A stream the
+    batch pre-parse cannot read falls back to the per-species path so the
+    canonical ContainerFormatError surfaces."""
+    from repro.core import container
+
+    r = head.reader
+    s = head.shape[0]
+    geom = head.cfg.geometry
+    cache = head.runtime.table_cache
+    gblobs = [r[f"guarantee{sidx}"] for sidx in range(s)]
+
+    decoders: list = [huffman] * s
+    if huffman is None and s > 1:
+        try:
+            coeff_streams = [
+                container.ContainerReader(g)["coeff"] for g in gblobs
+            ]
+        except (ContainerFormatError, KeyError):
+            coeff_streams = None  # let from_bytes raise the canonical error
+        if coeff_streams is not None:
+            try:
+                coeffs = entropy.huffman_decode_many(
+                    coeff_streams, table_cache=cache
+                )
+            except (ValueError, struct.error) as e:
+                raise ContainerFormatError(
+                    f"corrupt guarantee stream: {e}"
+                ) from e
+            decoders = [lambda _blob, _out=c: _out for c in coeffs]
 
     guarantees = [
-        gae.GuaranteeArtifact.from_bytes(r[f"guarantee{sidx}"])
+        gae.GuaranteeArtifact.from_bytes(
+            gblobs[sidx], table_cache=cache, huffman=decoders[sidx]
+        )
         for sidx in range(s)
     ]
     for sidx, g in enumerate(guarantees):
-        if g.n_blocks != nb:
+        if g.n_blocks != head.nb:
             raise ContainerFormatError(
                 f"guarantee stream {sidx} covers {g.n_blocks} blocks, "
-                f"expected {nb}"
+                f"expected {head.nb}"
             )
         if g.basis.shape[0] != geom.block_size:
             raise ContainerFormatError(
                 f"guarantee stream {sidx} basis has dimension "
                 f"{g.basis.shape[0]}, expected block size {geom.block_size}"
             )
+    return guarantees
 
+
+def _finish_artifact(head: _DecodedHead, *,
+                     huffman=None) -> CompressedArtifact:
     return CompressedArtifact(
-        latent_q=latent_q,
-        latent_bin=latent_bin,
-        ae_params=ae_params,
-        corr_params=corr_params,
-        species_guarantees=guarantees,
-        norm_min=norm_min,
-        norm_range=norm_range,
-        shape=shape,
-        cfg=cfg,
-        _latent_blob=latent_stream,
-        _wire=bytes(blob),
+        latent_q=head.latent_q,
+        latent_bin=head.latent_bin,
+        ae_params=head.ae_params,
+        corr_params=head.corr_params,
+        species_guarantees=_decode_guarantees(head, huffman=huffman),
+        norm_min=head.norm_min,
+        norm_range=head.norm_range,
+        shape=head.shape,
+        cfg=head.cfg,
+        _latent_blob=head.latent_stream,
+        _wire=head.blob,
+    )
+
+
+def decode_artifact(blob: bytes) -> CompressedArtifact:
+    """Rebuild a :class:`CompressedArtifact` from a container blob alone.
+
+    The returned artifact carries only what the wire format does: the AE
+    *decoder* parameters (the encoder never ships), the correction network
+    if present, and the per-species guarantee streams (entropy-decoded
+    species-parallel, decode tables memoized per codebook).
+    """
+    return _finish_artifact(_decode_head(blob))
+
+
+def decode_artifact_reference(blob: bytes) -> CompressedArtifact:
+    """Pre-change deserialize, retained as the throughput baseline:
+    sequential per-species guarantee decode with per-call table builds and
+    the reference per-code-bit window pass. Bitwise the same artifact as
+    :func:`decode_artifact`."""
+    return _finish_artifact(
+        _decode_head(blob, huffman=entropy.huffman_decode_ref),
+        huffman=entropy.huffman_decode_ref,
     )
 
 
@@ -387,9 +495,15 @@ class _DecodeRuntime:
     corr_net: Optional[correction.TensorCorrectionNetwork]
     jit_decode: Any
     jit_corr: Any
+    # fused device-resident hot path: dequantized latents -> AE decode ->
+    # pointwise correction -> (S, NB, D) block vectors, one dispatch
+    jit_fused: Any
+    # per-runtime Huffman decode-table memo (codebooks repeat across calls)
+    table_cache: entropy.DecodeTableCache
 
 
 _RUNTIMES: dict[tuple, _DecodeRuntime] = {}
+_RUNTIMES_REF: dict[tuple, _DecodeRuntime] = {}
 _RUNTIMES_MAX = 8
 
 
@@ -404,14 +518,34 @@ def _runtime_key(cfg: PipelineConfig, n_species: int, has_corr: bool) -> tuple:
     )
 
 
-def _runtime(cfg: PipelineConfig, n_species: int,
-             has_corr: bool) -> _DecodeRuntime:
+def make_fused_decode(model: ae.BlockAutoencoder,
+                      corr_net: Optional[correction.TensorCorrectionNetwork]):
+    """Traceable latents -> corrected (S, NB, D) block vectors.
+
+    The whole NN decode — AE decoder, pointwise tensor correction, and the
+    blocks->vectors layout change — as one function of device arrays, so a
+    single jit dispatch replaces the seed's chunked host round-trips. All
+    reshuffles are pure transposes; per-element arithmetic is identical to
+    the staged path (bit-identity asserted in tests and the benchmark).
+    """
+    s = model.cfg.n_species
+
+    def fused(dec_params, corr_params, lat):
+        x = model.decode(dec_params, lat)  # (NB, S, bt, ph, pw)
+        nb = x.shape[0]
+        if corr_net is not None:
+            vec = x.reshape(nb, s, -1).transpose(0, 2, 1).reshape(-1, s)
+            vec = corr_net(corr_params, vec)
+            x = vec.reshape(nb, -1, s).transpose(0, 2, 1).reshape(x.shape)
+        return x.reshape(nb, s, -1).transpose(1, 0, 2)  # (S, NB, D)
+
+    return fused
+
+
+def _build_runtime(cfg: PipelineConfig, n_species: int, has_corr: bool,
+                   conv_impl: str) -> _DecodeRuntime:
     import jax
 
-    key = _runtime_key(cfg, n_species, has_corr)
-    hit = _RUNTIMES.get(key)
-    if hit is not None:
-        return hit
     geom = cfg.geometry
     model = ae.BlockAutoencoder(
         ae.AEConfig(
@@ -419,6 +553,7 @@ def _runtime(cfg: PipelineConfig, n_species: int,
             block=(geom.bt, geom.ph, geom.pw),
             latent=cfg.latent,
             conv_channels=cfg.conv_channels,
+            conv_impl=conv_impl,
         )
     )
     corr_net = (
@@ -428,16 +563,122 @@ def _runtime(cfg: PipelineConfig, n_species: int,
         if has_corr
         else None
     )
-    rt = _DecodeRuntime(
+    return _DecodeRuntime(
         model=model,
         corr_net=corr_net,
         jit_decode=jax.jit(model.decode),
         jit_corr=jax.jit(corr_net.__call__) if corr_net is not None else None,
+        jit_fused=jax.jit(make_fused_decode(model, corr_net)),
+        table_cache=entropy.DecodeTableCache(),
     )
-    while len(_RUNTIMES) >= _RUNTIMES_MAX:
-        _RUNTIMES.pop(next(iter(_RUNTIMES)))
-    _RUNTIMES[key] = rt
+
+
+def _cached_runtime(cache: dict, cfg: PipelineConfig, n_species: int,
+                    has_corr: bool, conv_impl: str) -> _DecodeRuntime:
+    key = _runtime_key(cfg, n_species, has_corr)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    rt = _build_runtime(cfg, n_species, has_corr, conv_impl)
+    while len(cache) >= _RUNTIMES_MAX:
+        cache.pop(next(iter(cache)))
+    cache[key] = rt
     return rt
+
+
+def _runtime(cfg: PipelineConfig, n_species: int,
+             has_corr: bool) -> _DecodeRuntime:
+    return _cached_runtime(_RUNTIMES, cfg, n_species, has_corr, "2d")
+
+
+def _runtime_reference(cfg: PipelineConfig, n_species: int,
+                       has_corr: bool) -> _DecodeRuntime:
+    """Runtime for the retained pre-change decode path: XLA conv impl,
+    staged host-chunked orchestration (see :func:`reconstruct_reference`)."""
+    return _cached_runtime(_RUNTIMES_REF, cfg, n_species, has_corr, "xla")
+
+
+def _finalize_field(corrected: np.ndarray, artifact: CompressedArtifact
+                    ) -> np.ndarray:
+    """(S, NB, D) corrected vectors -> denormalized (S, T, H, W) field.
+
+    Host numpy in both the fused and the reference path: the multiply/add
+    stays un-fused (no FMA contraction), keeping the two paths bit-identical.
+    """
+    geom = artifact.cfg.geometry
+    rec_blocks = blocking.vectors_as_blocks(corrected, geom)
+    rec_normed = blocking.from_blocks(rec_blocks, artifact.shape, geom)
+    return (
+        rec_normed * artifact.norm_range[:, None, None, None]
+        + artifact.norm_min[:, None, None, None]
+    ).astype(np.float32)
+
+
+def _latents32(artifact) -> np.ndarray:
+    """f64 dequantize then one f32 round — exactly the cast the staged path
+    performs when the f64 latents enter the jitted decoder. Accepts any
+    object with ``latent_q``/``latent_bin`` (artifact or decoded head)."""
+    return dequantize(artifact.latent_q, artifact.latent_bin).astype(np.float32)
+
+
+_FUSED_CHUNK = 4096  # blocks per fused-decode dispatch: bounds peak
+# activation memory at paper scale (the quick surrogates fit in one chunk)
+# without re-tracing — the tail chunk is padded to the fixed shape
+
+
+def _fused_vecs(rt: _DecodeRuntime, ae_params, corr_params,
+                lat32: np.ndarray):
+    """Run the fused NN decode over fixed-size block chunks.
+
+    Dispatches are asynchronous, so callers can overlap host work with the
+    whole chunk sequence; results are concatenated on device. Chunking is
+    row-wise and therefore bit-transparent.
+    """
+    import jax.numpy as jnp
+
+    n = lat32.shape[0]
+    if n <= _FUSED_CHUNK:
+        return rt.jit_fused(ae_params, corr_params, lat32)
+    outs = []
+    for i in range(0, n, _FUSED_CHUNK):
+        chunk = lat32[i : i + _FUSED_CHUNK]
+        pad = _FUSED_CHUNK - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], pad, axis=0)]
+            )
+        out = rt.jit_fused(ae_params, corr_params, chunk)
+        outs.append(out[:, : out.shape[1] - pad] if pad else out)
+    return jnp.concatenate(outs, axis=1)  # (S, NB, D) along blocks
+
+
+def _apply_guarantees_and_finalize(vecs_dev, artifact: CompressedArtifact
+                                   ) -> np.ndarray:
+    """Post-dispatch tail of the fused decode: batched guarantee replay on
+    the (possibly still in-flight) NN-decoded vectors, then host
+    finalization. The single implementation behind both ``reconstruct``
+    and ``decompress``."""
+    import jax.numpy as jnp
+
+    engine = gae.default_engine()
+    arts = artifact.species_guarantees
+    if any(a.coeff_q.size for a in arts):
+        s, nb, d = vecs_dev.shape
+        # host-side CSR scatter overlaps the in-flight async NN decode
+        dense, basis = engine.dense_corrections(arts, (s, nb, d))
+        vecs_dev = engine.apply_device(
+            vecs_dev, jnp.asarray(dense), jnp.asarray(basis)
+        )
+    return _finalize_field(np.asarray(vecs_dev), artifact)
+
+
+def _fused_reconstruct(rt: _DecodeRuntime,
+                       artifact: CompressedArtifact) -> np.ndarray:
+    """The device-resident decode hot path (see :func:`decompress`)."""
+    vecs_dev = _fused_vecs(
+        rt, artifact.ae_params, artifact.corr_params, _latents32(artifact)
+    )
+    return _apply_guarantees_and_finalize(vecs_dev, artifact)
 
 
 def reconstruct(artifact: CompressedArtifact) -> np.ndarray:
@@ -445,12 +686,36 @@ def reconstruct(artifact: CompressedArtifact) -> np.ndarray:
 
     Derives every structural decision — geometry, AE shape, whether the
     tensor-correction network runs — from the artifact itself, never from
-    ambient pipeline state (the seed's config-shadowing hazard).
+    ambient pipeline state (the seed's config-shadowing hazard). Runs the
+    fused device-resident hot path; :func:`reconstruct_reference` retains
+    the staged pre-change orchestration as the bit-identity oracle.
     """
     cfg = artifact.cfg
-    geom = cfg.geometry
     has_corr = artifact.corr_params is not None
     rt = _runtime(cfg, len(artifact.norm_min), has_corr)
+    return _fused_reconstruct(rt, artifact)
+
+
+def reconstruct_reference(artifact: CompressedArtifact,
+                          conv_impl: str = "2d") -> np.ndarray:
+    """The seed's decode *orchestration*, retained as baseline and oracle:
+    host-chunked ``_batched`` stages with a numpy round-trip between
+    dequantize, decoder, correction, and guarantee replay.
+
+    With the default ``conv_impl="2d"`` the staged path shares the fused
+    path's layer implementations, and ``reconstruct`` must match it **bit
+    for bit** — the gate asserted by the test suite and by
+    ``benchmarks/bench_throughput.py`` before any number is reported (it
+    proves the hot-path reorganization is semantically transparent).
+    ``conv_impl="xla"`` additionally retains the seed's convolution
+    lowering — the true pre-change cost profile used as the benchmark's
+    timing baseline; its output differs from the 2d formulation only by
+    float-summation reassociation inside the convolutions (ulp-level,
+    bound-checked in the benchmark)."""
+    cfg = artifact.cfg
+    has_corr = artifact.corr_params is not None
+    builder = _runtime if conv_impl == "2d" else _runtime_reference
+    rt = builder(cfg, len(artifact.norm_min), has_corr)
     lat = dequantize(artifact.latent_q, artifact.latent_bin)
     x_rec = _batched(rt.jit_decode, artifact.ae_params, lat)
     if has_corr:
@@ -461,12 +726,7 @@ def reconstruct(artifact: CompressedArtifact) -> np.ndarray:
     corrected = gae.apply_correction_batched(
         vecs_rec, artifact.species_guarantees
     )
-    rec_blocks = blocking.vectors_as_blocks(corrected, geom)
-    rec_normed = blocking.from_blocks(rec_blocks, artifact.shape, geom)
-    return (
-        rec_normed * artifact.norm_range[:, None, None, None]
-        + artifact.norm_min[:, None, None, None]
-    ).astype(np.float32)
+    return _finalize_field(corrected, artifact)
 
 
 def decompress(blob: bytes) -> np.ndarray:
@@ -475,8 +735,29 @@ def decompress(blob: bytes) -> np.ndarray:
     Needs no codec instance and no fitted model — everything is
     reconstructed from the blob (the acceptance contract for the wire
     format). Raises :class:`ContainerFormatError` on malformed input.
+
+    Hot-path organization: the container head (meta, latents, parameters)
+    is parsed first and the fused NN decode dispatched asynchronously;
+    the per-species guarantee streams then entropy-decode species-parallel
+    on the host while the decode runs, and one replay dispatch applies the
+    corrections.
     """
-    return reconstruct(decode_artifact(blob))
+    head = _decode_head(blob)
+    vecs_dev = _fused_vecs(
+        head.runtime, head.ae_params, head.corr_params, _latents32(head)
+    )
+    # the guarantee streams entropy-decode while the dispatched NN runs
+    artifact = _finish_artifact(head)
+    return _apply_guarantees_and_finalize(vecs_dev, artifact)
+
+
+def decompress_reference(blob: bytes, conv_impl: str = "2d") -> np.ndarray:
+    """Retained pre-change standalone decode: sequential per-species
+    deserialize with per-call Huffman table builds, then the staged
+    host-chunked reconstruct. With the default ``conv_impl="2d"`` this is
+    the fused path's bit-identity oracle; with ``"xla"`` it is the seed's
+    full cost profile (the throughput benchmark's timing baseline)."""
+    return reconstruct_reference(decode_artifact_reference(blob), conv_impl)
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,7 @@ close (the paper's "adjusts the reconstructed data" reading).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,7 @@ import numpy as np
 from repro.nn import layers as L
 from repro.nn.module import init_tree
 from repro.train import optimizer as opt
+from repro.train import train_loop
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +79,13 @@ def pointwise_to_blocks(vecs: np.ndarray, like: np.ndarray) -> np.ndarray:
     )
 
 
+def _corr_loss(net: TensorCorrectionNetwork):
+    def loss_fn(p, a, b):
+        return jnp.mean(jnp.square(net(p, a) - b))
+
+    return loss_fn
+
+
 def fit(
     net: TensorCorrectionNetwork,
     x_rec: np.ndarray,
@@ -87,18 +95,52 @@ def fit(
     batch_size: int = 4096,
     lr: float = 1e-3,
     seed: int = 1,
-) -> Any:
-    """Train the correction net on (reconstructed -> original) species vectors."""
+    log_every: int = 0,
+    mode: Optional[str] = None,
+) -> tuple[Any, np.ndarray]:
+    """Train the correction net on (reconstructed -> original) species
+    vectors through the compiled mini-batch engine. Returns
+    (params, loss_history); the trainer is cached on the network, so
+    refitting never re-traces."""
+    params = net.init(jax.random.PRNGKey(seed))
+    cache = net.__dict__.setdefault("_trainers", {})
+    key = (lr, steps, mode)
+    trainer = cache.get(key)
+    if trainer is None:
+        trainer = train_loop.MiniBatchTrainer(
+            _corr_loss(net),
+            train_loop.adamw_cfg(lr, steps),
+            mode=mode,
+            log_fn=lambda t, loss: print(f"[corr] step {t} loss {loss:.3e}"),
+        )
+        cache[key] = trainer
+    return trainer.fit(
+        params, (x_rec, x_orig), steps=steps, batch_size=batch_size,
+        seed=seed, log_every=log_every,
+    )
+
+
+def fit_reference(
+    net: TensorCorrectionNetwork,
+    x_rec: np.ndarray,
+    x_orig: np.ndarray,
+    *,
+    steps: int = 300,
+    batch_size: int = 4096,
+    lr: float = 1e-3,
+    seed: int = 1,
+) -> tuple[Any, np.ndarray]:
+    """The seed's correction trainer (per-fit jit, host loop, per-step
+    sync), retained as baseline/oracle; batch indices follow the engine's
+    law so trajectories are comparable."""
     key = jax.random.PRNGKey(seed)
     params = net.init(key)
-    cfg = opt.AdamWConfig(lr=lr, total_steps=steps, warmup_steps=min(20, steps // 10))
+    cfg = train_loop.adamw_cfg(lr, steps)
     state = opt.init_state(params)
     xr = jnp.asarray(x_rec)
     xo = jnp.asarray(x_orig)
     n = xr.shape[0]
-
-    def loss_fn(p, a, b):
-        return jnp.mean(jnp.square(net(p, a) - b))
+    loss_fn = _corr_loss(net)
 
     @jax.jit
     def step_fn(p, s, a, b):
@@ -106,8 +148,9 @@ def fit(
         p, s, _ = opt.update(cfg, grads, s, p)
         return p, s, loss
 
-    rng = np.random.default_rng(seed)
-    for _ in range(steps):
-        idx = rng.integers(0, n, size=min(batch_size, n))
-        params, state, _ = step_fn(params, state, xr[idx], xo[idx])
-    return params
+    losses = []
+    idxs = train_loop.all_batch_indices(seed, steps, n, min(batch_size, n))
+    for i in range(steps):
+        params, state, loss = step_fn(params, state, xr[idxs[i]], xo[idxs[i]])
+        losses.append(float(loss))
+    return params, np.asarray(losses, dtype=np.float32)

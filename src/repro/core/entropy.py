@@ -4,10 +4,15 @@ The Huffman path is the paper's coder: quantized integer streams are
 frequency-counted, a canonical Huffman code is built, and the stream is
 bit-packed with a self-describing header (symbol table + code lengths).
 Encoding is vectorized in numpy (loop over code-bit position, not symbols);
-decoding batches the k-bit table lookups over every bit position and walks
-the sequential codeword chain speculatively chunk-by-chunk (exact, with a
-scalar fallback only for chunks that never self-synchronize); codes longer
-than the table are resolved by a vectorized prefix match.
+decoding batches the k-bit table lookups over every bit position (a
+byte-parallel window pass — constant sweeps, not one per code bit) and
+walks the sequential codeword chain speculatively chunk-by-chunk (exact,
+with a scalar fallback only for chunks that never self-synchronize); codes
+longer than the table are resolved by a vectorized prefix match. Decode
+tables memoize per codebook signature (:class:`DecodeTableCache`),
+independent streams decode in one lockstep multi-stream chain walk
+(:func:`huffman_decode_many`), and the pre-throughput-engine path is
+retained as :func:`huffman_decode_ref` (parity-asserted baseline).
 
 ``zstd_bytes`` exposes the zstandard backend used as the final lossless
 stage of the SZ baseline (matching SZ3's use of zstd). When the
@@ -21,7 +26,9 @@ from __future__ import annotations
 import heapq
 import io
 import struct
+import threading
 import zlib
+from typing import Optional
 
 import numpy as np
 
@@ -32,6 +39,7 @@ except ImportError:  # pragma: no cover - depends on environment
 
 _MAGIC = b"HUF1"
 _MAX_CODE_LEN = 32
+_CHAIN_BPC = 128  # chain-walk chunk bits: best vector-width/round-count balance
 
 
 def _code_lengths(freqs: np.ndarray) -> np.ndarray:
@@ -176,11 +184,41 @@ def _decode_table(lengths: np.ndarray, codes: np.ndarray):
     return table_bits, table_sym, table_len, long_codes
 
 
-def _window_values(bit_arr: np.ndarray, width: int) -> np.ndarray:
-    """Big-endian integer value of ``bit_arr[p : p + width]`` for every p.
+class DecodeTableCache:
+    """Bounded memo of canonical decode tables keyed by codebook signature.
 
-    One vectorized shift-or pass per code bit — the batched table lookup
-    that replaces the per-symbol interpreter loop.
+    The lookup table (and the long-code map) depend only on the code-length
+    vector — canonical codes are a pure function of it, and table entries
+    are symbol *indices* — so the key is ``lengths.tobytes()``. Deserialize
+    previously rebuilt the table per species per call; a decode runtime
+    holding one of these pays table construction once per codebook.
+    Thread-safe (coeff streams decode species-parallel).
+    """
+
+    def __init__(self, max_entries: int = 64):
+        self._max = max_entries
+        self._tables: dict[bytes, tuple] = {}
+        self._lock = threading.Lock()
+
+    def get(self, lengths: np.ndarray):
+        key = lengths.tobytes()
+        with self._lock:
+            hit = self._tables.get(key)
+        if hit is not None:
+            return hit
+        table = _decode_table(lengths, _canonical_codes(lengths))
+        with self._lock:
+            while len(self._tables) >= self._max:
+                self._tables.pop(next(iter(self._tables)))
+            self._tables[key] = table
+        return table
+
+
+def _window_values_ref(bit_arr: np.ndarray, width: int) -> np.ndarray:
+    """Reference window extractor: one shift-or pass per code bit.
+
+    Retained as the parity oracle for :func:`_window_values` (and as part
+    of the pre-change deserialize baseline, :func:`huffman_decode_ref`).
     """
     w = len(bit_arr) - width
     vals = np.zeros(w, dtype=np.int32)
@@ -188,6 +226,32 @@ def _window_values(bit_arr: np.ndarray, width: int) -> np.ndarray:
         np.left_shift(vals, 1, out=vals)
         np.bitwise_or(vals, bit_arr[j : j + w], out=vals)
     return vals
+
+
+def _window_values(bit_arr: np.ndarray, width: int) -> np.ndarray:
+    """Big-endian integer value of ``bit_arr[p : p + width]`` for every p.
+
+    Byte-parallel: repack the (zero-padded) bits into bytes, build one
+    32-bit big-endian window per *byte* position, then every bit position p
+    reads word ``p // 8`` shifted by its phase — a constant number of
+    full-width passes instead of one per code bit (``width`` is up to 16).
+    Bit-identical to :func:`_window_values_ref` (asserted in the suite).
+    """
+    n_out = len(bit_arr) - width
+    if n_out <= 0:
+        return np.zeros(max(n_out, 0), dtype=np.int32)
+    b = np.packbits(bit_arr)
+    n_bytes = (n_out + 7) >> 3
+    bp = np.zeros(n_bytes + 3, dtype=np.uint32)
+    m = min(len(b), n_bytes + 3)
+    bp[:m] = b[:m]
+    words = (bp[:n_bytes] << 24) | (bp[1 : n_bytes + 1] << 16) \
+        | (bp[2 : n_bytes + 2] << 8) | bp[3 : n_bytes + 3]
+    rep = np.repeat(words, 8)[:n_out]
+    phase = np.tile(np.arange(8, dtype=np.uint32), n_bytes)[:n_out]
+    rep >>= np.uint32(32 - width) - phase
+    rep &= np.uint32((1 << width) - 1)
+    return rep.astype(np.int32)
 
 
 def _resolve_long_codes(bit_arr, sym_at, len_at, long_codes):
@@ -219,29 +283,69 @@ def _resolve_long_codes(bit_arr, sym_at, len_at, long_codes):
 
 
 def _chain_positions(len_at: np.ndarray, n: int) -> np.ndarray:
-    """Bit positions of the first ``n`` codewords: p_{i+1} = p_i + len[p_i].
+    """Bit positions of the first ``n`` codewords of one stream
+    (see :func:`_chain_positions_multi`)."""
+    return _chain_positions_multi([(len_at, n)])[0]
+
+
+def _chain_positions_multi(
+    streams: "list[tuple[np.ndarray, int]]",
+) -> "list[np.ndarray]":
+    """Codeword bit positions, ``p_{i+1} = p_i + len[p_i]``, for one *or
+    many independent streams* walked in lockstep.
 
     The position chain is inherently sequential, so it is decoded
     speculatively in three vectorized phases:
 
-    1. cut the bitstream into small chunks and walk every chunk from its
-       boundary in lockstep (one vectorized step per round), recording
-       positions and each walk's exit into the next chunk;
+    1. cut each bitstream into small chunks and walk every chunk (across
+       all streams at once) from its boundary in lockstep — one vectorized
+       step per round, recording positions and each walk's exit into the
+       next chunk;
     2. walk every chunk again in lockstep from its *candidate true entry* —
-       the previous chunk's speculative exit — until it joins that chunk's
-       phase-1 walk (Huffman streams self-synchronize, so this takes a few
+       the previous chunk's speculative exit (each stream's first chunk
+       starts from its true origin) — until it joins that chunk's phase-1
+       walk (Huffman streams self-synchronize, so this takes a few
        codewords at most);
-    3. assemble prefix + joined tail per chunk with two ragged scatters.
+    3. assemble prefix + joined tail per chunk with two ragged scatters
+       and split the result back per stream.
 
     Chunks that never self-synchronize invalidate their successor's entry;
     those successors (rare) are re-walked scalar, cascading only until a
-    walk re-joins the speculative chain. The result is always exact.
+    walk re-joins the speculative chain — never across a stream boundary.
+    The result is always exact. Batching streams multiplies the lockstep
+    vector width instead of the (python-level) round count, which is what
+    makes multi-species coefficient decode fast.
     """
+    bpc = _CHAIN_BPC  # codewords (<=32 bits) never span a chunk
+    sizes = [len(la) for la, _ in streams]
+    bases = np.zeros(len(streams), dtype=np.int64)
+    np.cumsum(sizes[:-1], out=bases[1:])
+    len_at = (
+        streams[0][0] if len(streams) == 1
+        else np.concatenate([la for la, _ in streams])
+    )
     b = len(len_at)
-    bpc = 256  # best vector-width/round-count balance; codewords (<=32b) never span a chunk
-    n_chunks = -(-b // bpc)
-    starts = np.arange(n_chunks, dtype=np.int64) * bpc
-    ends = np.minimum(starts + bpc, b)
+    chunk_counts = [-(-size // bpc) for size in sizes]
+    starts = np.concatenate([
+        base + np.arange(c, dtype=np.int64) * bpc
+        for base, c in zip(bases, chunk_counts)
+    ])
+    ends = np.concatenate([
+        np.minimum(base + np.arange(1, c + 1, dtype=np.int64) * bpc,
+                   base + size)
+        for base, c, size in zip(bases, chunk_counts, sizes)
+    ])
+    n_chunks = len(starts)
+    if n_chunks == 0:
+        if any(n for _, n in streams):
+            raise ValueError("corrupt Huffman stream")
+        return [np.zeros(0, np.int64) for _ in streams]
+    first_chunk = np.zeros(len(streams) + 1, dtype=np.int64)
+    np.cumsum(chunk_counts, out=first_chunk[1:])
+    is_first = np.zeros(n_chunks, dtype=bool)
+    is_first[first_chunk[:-1]] = True
+    is_last = np.zeros(n_chunks, dtype=bool)
+    is_last[first_chunk[1:] - 1] = True
     if not (len_at > 0).all():
         # only possible with unresolved long-code windows; the chain must
         # never step on one, so guard each round below
@@ -286,7 +390,11 @@ def _chain_positions(len_at: np.ndarray, n: int) -> np.ndarray:
     )[valid]
 
     # -- phase 2: lockstep resync from candidate true entries ----------
-    entry0 = np.concatenate([[0], exits[:-1]])
+    # each stream's first chunk enters at its true origin; later chunks at
+    # the previous chunk's speculative exit
+    entry0 = np.empty(n_chunks, dtype=np.int64)
+    entry0[1:] = exits[:-1]
+    entry0[is_first] = starts[is_first]
     walking = entry0 < ends
     cur = np.where(walking, entry0, 0)
     walk_end = entry0.copy()  # walk-off position per chunk (for repair)
@@ -317,15 +425,17 @@ def _chain_positions(len_at: np.ndarray, n: int) -> np.ndarray:
     )
 
     # -- repair: successors of chunks that never joined ----------------
+    # a stream's last chunk has no successor — its walk-off never feeds
+    # another chunk, and repair must not cascade across stream boundaries
     repaired: dict[int, np.ndarray] = {}
-    if n_chunks > 1 and not joined[:-1].all():
+    if n_chunks > 1 and not joined[~is_last].all():
         repair_end: dict[int, int] = {}
-        for c in np.flatnonzero(~joined[:-1]).tolist():
+        for c in np.flatnonzero(~joined & ~is_last).tolist():
             nxt_c = c + 1
             entry = repair_end.get(c, int(walk_end[c]))
             if nxt_c in repaired:
                 continue
-            while nxt_c < n_chunks:
+            while nxt_c < n_chunks and not is_first[nxt_c]:
                 if nxt_c not in repaired and entry == int(entry0[nxt_c]):
                     break  # speculative entry was right after all
                 prefix = []
@@ -359,8 +469,6 @@ def _chain_positions(len_at: np.ndarray, n: int) -> np.ndarray:
     lengths = pre_counts + tail_counts
     off = np.zeros(n_chunks + 1, dtype=np.int64)
     np.cumsum(lengths, out=off[1:])
-    if off[-1] < n:
-        raise ValueError("corrupt Huffman stream")
     out = np.empty(off[-1], dtype=np.int64)
     if pre.size:
         rows = np.arange(pre.shape[0], dtype=np.int64)[:, None]
@@ -375,25 +483,44 @@ def _chain_positions(len_at: np.ndarray, n: int) -> np.ndarray:
         out[dest[mask]] = rec[mask]
     for c, prefix in repaired.items():
         out[off[c] : off[c] + len(prefix)] = prefix
-    return out[:n]
+    # split chunk-contiguous positions back per stream (rebased to 0)
+    results: list[np.ndarray] = []
+    for i, (_, n) in enumerate(streams):
+        lo = off[first_chunk[i]]
+        hi = off[first_chunk[i + 1]]
+        if hi - lo < n:
+            raise ValueError("corrupt Huffman stream")
+        results.append(out[lo : lo + n] - bases[i])
+    return results
 
 
-def huffman_decode(blob: bytes) -> np.ndarray:
+def _parse_header(blob: bytes):
     if blob[:4] != _MAGIC:
         raise ValueError("bad magic")
     n, k = struct.unpack_from("<QI", blob, 4)
-    if n == 0:
-        return np.zeros(0, dtype=np.int64)
     off = 4 + 12
     symbols = np.frombuffer(blob, dtype="<i8", count=k, offset=off).copy()
     off += 8 * k
     lengths = np.frombuffer(blob, dtype="<u1", count=k, offset=off).astype(np.int64)
     off += k
-    codes = _canonical_codes(lengths)
-    table_bits, table_sym, table_len, long_codes = _decode_table(lengths, codes)
+    return n, symbols, lengths, off
+
+
+def _prepare_stream(blob: bytes, table_cache: Optional[DecodeTableCache]):
+    """Header/table/window phase of decode: everything except the
+    (sequential) codeword chain. Returns (n, symbols, sym_at, len_at)."""
+    n, symbols, lengths, off = _parse_header(blob)
+    if n == 0:
+        return 0, symbols, None, None
+    if table_cache is not None:
+        table_bits, table_sym, table_len, long_codes = table_cache.get(lengths)
+    else:
+        table_bits, table_sym, table_len, long_codes = _decode_table(
+            lengths, _canonical_codes(lengths)
+        )
 
     bit_arr = np.unpackbits(np.frombuffer(blob, dtype=np.uint8, offset=off))
-    # pad so windowed reads never go OOB; stays uint8 — the shift-or and
+    # pad so windowed reads never go OOB; stays uint8 — the window and
     # long-code passes upcast on the fly, so per-bit memory stays 1 byte
     bit_arr = np.concatenate(
         [bit_arr, np.zeros(_MAX_CODE_LEN + table_bits, np.uint8)]
@@ -404,7 +531,96 @@ def huffman_decode(blob: bytes) -> np.ndarray:
     len_at = table_len[win]
     if long_codes:
         _resolve_long_codes(bit_arr, sym_at, len_at, long_codes)
+    return int(n), symbols, sym_at, len_at
 
+
+def huffman_decode(
+    blob: bytes, *, table_cache: Optional[DecodeTableCache] = None
+) -> np.ndarray:
+    """Decode a self-describing Huffman stream.
+
+    ``table_cache`` memoizes decode-table construction across calls that
+    share a codebook (a decode runtime's steady state); ``None`` builds the
+    table per call.
+    """
+    n, symbols, sym_at, len_at = _prepare_stream(blob, table_cache)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    pos = _chain_positions(len_at, n)
+    sym_idx = sym_at[pos]
+    if (sym_idx < 0).any():
+        raise ValueError("corrupt Huffman stream")
+    return symbols[sym_idx]
+
+
+def huffman_decode_many(
+    blobs: "list[bytes]",
+    *,
+    table_cache: Optional[DecodeTableCache] = None,
+) -> "list[np.ndarray]":
+    """Decode independent Huffman streams together.
+
+    The per-stream phases (header, tables, windows, symbol lookups) are
+    vectorized already; the sequential codeword chains — the python-round
+    bound part — run as lockstep multi-stream walks
+    (:func:`_chain_positions_multi`), so decoding S species' coefficient
+    streams costs ~the round count of the longest one, not the sum.
+    Grouping is adaptive: batching pays while the combined walk state stays
+    cache-resident (many small streams — the high-compression regime);
+    past that the walk goes bandwidth-bound and big streams run alone.
+    """
+    prepped = [_prepare_stream(b, table_cache) for b in blobs]
+    live = [i for i, (n, _, _, _) in enumerate(prepped) if n > 0]
+    out: list[np.ndarray] = [
+        np.zeros(0, dtype=np.int64) for _ in blobs
+    ]
+    if not live:
+        return out
+    max_group_chunks = 4096  # ~bpc * 4096 bits of lockstep walk state
+    groups: list[list[int]] = [[]]
+    budget = max_group_chunks
+    for i in live:
+        chunks = -(-len(prepped[i][3]) // _CHAIN_BPC)
+        if groups[-1] and chunks > budget:
+            groups.append([])
+            budget = max_group_chunks
+        groups[-1].append(i)
+        budget -= chunks
+    positions_by_idx: dict[int, np.ndarray] = {}
+    for group in groups:
+        pos_list = _chain_positions_multi(
+            [(prepped[i][3], prepped[i][0]) for i in group]
+        )
+        positions_by_idx.update(zip(group, pos_list))
+    positions = [positions_by_idx[i] for i in live]
+    for i, pos in zip(live, positions):
+        n, symbols, sym_at, _ = prepped[i]
+        sym_idx = sym_at[pos]
+        if (sym_idx < 0).any():
+            raise ValueError("corrupt Huffman stream")
+        out[i] = symbols[sym_idx]
+    return out
+
+
+def huffman_decode_ref(blob: bytes) -> np.ndarray:
+    """The pre-throughput-engine decode path, retained as baseline/oracle:
+    decode tables rebuilt per call, reference per-code-bit window pass.
+    Output is bit-identical to :func:`huffman_decode`."""
+    n, symbols, lengths, off = _parse_header(blob)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    table_bits, table_sym, table_len, long_codes = _decode_table(
+        lengths, _canonical_codes(lengths)
+    )
+    bit_arr = np.unpackbits(np.frombuffer(blob, dtype=np.uint8, offset=off))
+    bit_arr = np.concatenate(
+        [bit_arr, np.zeros(_MAX_CODE_LEN + table_bits, np.uint8)]
+    )
+    win = _window_values_ref(bit_arr, table_bits)
+    sym_at = table_sym[win]
+    len_at = table_len[win]
+    if long_codes:
+        _resolve_long_codes(bit_arr, sym_at, len_at, long_codes)
     pos = _chain_positions(len_at, int(n))
     sym_idx = sym_at[pos]
     if (sym_idx < 0).any():

@@ -144,10 +144,23 @@ class GuaranteeArtifact:
         return w.to_bytes()
 
     @classmethod
-    def from_bytes(cls, blob: bytes) -> "GuaranteeArtifact":
+    def from_bytes(
+        cls,
+        blob: bytes,
+        *,
+        table_cache: Optional[entropy.DecodeTableCache] = None,
+        huffman=None,
+    ) -> "GuaranteeArtifact":
         """Inverse of :func:`to_bytes`; raises ContainerFormatError on a
         malformed blob. Stream-size memos are seeded from the measured
-        payload lengths (they are exact by construction)."""
+        payload lengths (they are exact by construction).
+
+        ``table_cache`` memoizes Huffman decode tables across calls sharing
+        a codebook; ``huffman`` overrides the coefficient decoder (the
+        codec benchmark passes :func:`entropy.huffman_decode_ref` to time
+        the retained pre-change deserialize path)."""
+        if huffman is None:
+            huffman = entropy.huffman_decode
         r = container.ContainerReader(blob)
         meta = r["meta"]
         if len(meta) != cls._META.size:
@@ -170,7 +183,10 @@ class GuaranteeArtifact:
         coeff_stream = r["coeff"]
         index_stream = r["index"]
         try:
-            coeff_q = entropy.huffman_decode(coeff_stream)
+            if huffman is entropy.huffman_decode:
+                coeff_q = huffman(coeff_stream, table_cache=table_cache)
+            else:
+                coeff_q = huffman(coeff_stream)
             offsets, flat = index_coding.decode_indices(index_stream)
         except (ValueError, struct.error) as e:
             # struct.error: truncated Huffman/index headers (not a ValueError)
@@ -255,6 +271,7 @@ class PreparedGuarantee:
     """Tau-independent guarantee state (see GuaranteeEngine.prepare)."""
 
     shape: tuple[int, int, int]  # (S, NB, D)
+    x_ref: np.ndarray  # the originals this state was computed against
     x_rec32: np.ndarray  # (S, NB, D) float32 host copy (fast no-fix path)
     norms2: np.ndarray  # (S, NB) float64 residual energies (host)
     basis: np.ndarray  # (S, D, D) float64 PCA bases (host, oracle-bitwise)
@@ -381,8 +398,26 @@ class GuaranteeEngine:
         self._apply_jit = jax.jit(apply_fn)
 
     # -- tau-independent stage -----------------------------------------
-    def prepare(self, x: np.ndarray, x_rec: np.ndarray) -> PreparedGuarantee:
-        """Factor out everything that does not depend on the error bound."""
+    def prepare(
+        self,
+        x: np.ndarray,
+        x_rec: np.ndarray,
+        reuse: Optional[PreparedGuarantee] = None,
+    ) -> PreparedGuarantee:
+        """Factor out everything that does not depend on the error bound.
+
+        ``reuse`` starts the ROADMAP's shared-residual incremental prepare:
+        given a previous :class:`PreparedGuarantee` over the *same original
+        vectors* ``x``, any species whose reconstruction is bitwise
+        unchanged reuses its residual norms, PCA basis, projection, and
+        energy ordering wholesale; only changed species recompute. The
+        recomputed slices go through the same batched gram/eigh/projection
+        /sort path as a cold prepare (per-species arithmetic is slice-pure),
+        so the result is bit-identical to a cold ``prepare(x, x_rec)`` —
+        asserted by the parity suite. Reuse is keyed on values, not
+        provenance: a stale ``reuse`` from different ``x`` is rejected by
+        the caller contract (pipeline passes its one fitted ``vecs_orig``).
+        """
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
@@ -392,26 +427,68 @@ class GuaranteeEngine:
         x = np.asarray(x)
         x_rec32 = np.asarray(x_rec, dtype=np.float32)
         s, nb, d = x.shape
+
+        stale = np.arange(s)
+        # staleness is judged on the f32 mirror, which is only sound when
+        # the reconstruction IS f32 (the pipeline's case); a float64 x_rec
+        # could differ below f32 precision, so it never reuses. The
+        # originals must also be the ones the reuse state was computed
+        # against — identity for the common case, value equality otherwise
+        can_reuse = (
+            reuse is not None
+            and reuse.shape == (s, nb, d)
+            and np.asarray(x_rec).dtype == np.float32
+            and (reuse.x_ref is x or np.array_equal(reuse.x_ref, x))
+        )
+        if can_reuse:
+            stale = np.array(
+                [
+                    sidx
+                    for sidx in range(s)
+                    if not np.array_equal(x_rec32[sidx], reuse.x_rec32[sidx])
+                ],
+                dtype=np.int64,
+            )
+            if len(stale) == 0:
+                return reuse
+
         # residual in the caller's precision (matches the oracle's
         # float64 contract even for float64 reconstructions); only the
         # correction kernel input and fast-path output are float32
-        residual = x.astype(np.float64) - np.asarray(x_rec, dtype=np.float64)
-        norms2 = np.sum(residual**2, axis=2)
+        full = len(stale) == s
+        x_rec_arr = np.asarray(x_rec)
+        residual = (x if full else x[stale]).astype(np.float64)
+        residual -= (x_rec_arr if full else x_rec_arr[stale]).astype(np.float64)
+        norms2_stale = np.sum(residual**2, axis=2)
         # PCA on host numpy: the D x D eigh is tiny, and sharing the exact
         # gram/eigh path with the numpy oracle is what makes the engine's
         # byte accounting bit-identical to it.
-        basis, _ = pca.pca_basis_stack(residual, executor=_pool())
+        basis_stale, _ = pca.pca_basis_stack(residual, executor=_pool())
 
         with enable_x64():
             residual_dev = jnp.asarray(residual)
-            basis_dev = jnp.asarray(basis)
-            coeffs_dev = self._project_jit(residual_dev, basis_dev)
+            basis_dev = jnp.asarray(basis_stale)
+            coeffs_stale_dev = self._project_jit(residual_dev, basis_dev)
             # np.array, not asarray: a zero-copy view of the jax buffer has
             # pathological ufunc throughput (unaligned); copy once here
-            coeffs = np.array(coeffs_dev)
+            coeffs_stale = np.array(coeffs_stale_dev)
 
-        coeffs_sorted = np.empty_like(coeffs)
-        inv_rank = np.empty((s, nb, d), np.int32)
+        if not can_reuse or len(stale) == s:
+            norms2, basis, coeffs = norms2_stale, basis_stale, coeffs_stale
+            coeffs_sorted = np.empty_like(coeffs)
+            inv_rank = np.empty((s, nb, d), np.int32)
+            fresh = range(s)
+        else:
+            norms2 = reuse.norms2.copy()
+            norms2[stale] = norms2_stale
+            basis = reuse.basis.copy()
+            basis[stale] = basis_stale
+            coeffs = reuse.coeffs.copy()
+            coeffs[stale] = coeffs_stale
+            coeffs_sorted = reuse.coeffs_sorted.copy()
+            inv_rank = reuse.inv_rank.copy()
+            fresh = stale.tolist()
+
         iota = np.arange(d, dtype=np.int32)
 
         def order_work(sidx):
@@ -421,11 +498,13 @@ class GuaranteeEngine:
                 inv_rank[sidx], order, np.broadcast_to(iota, order.shape), axis=-1
             )
 
-        list(_pool().map(order_work, range(s)))
+        list(_pool().map(order_work, fresh))
         jit_backend = self.select_backend == "jit"
+        full_recompute = coeffs is coeffs_stale
         with enable_x64():
             prepared = PreparedGuarantee(
                 shape=(s, nb, d),
+                x_ref=x,
                 x_rec32=x_rec32,
                 norms2=norms2,
                 basis=basis,
@@ -433,8 +512,15 @@ class GuaranteeEngine:
                 coeffs=coeffs,
                 coeffs_sorted=coeffs_sorted,
                 # the host backend reads the host mirror only; keeping the
-                # device projection alive would pin S*NB*D fp64 for nothing
-                coeffs_dev=coeffs_dev if jit_backend else None,
+                # device projection alive would pin S*NB*D fp64 for nothing.
+                # On a full recompute the projection is already device
+                # resident — re-uploading the host copy would waste a
+                # S*NB*D fp64 transfer on the accelerator path
+                coeffs_dev=(
+                    (coeffs_stale_dev if full_recompute
+                     else jnp.asarray(coeffs))
+                    if jit_backend else None
+                ),
                 coeffs_sorted_dev=(
                     jnp.asarray(coeffs_sorted) if jit_backend else None
                 ),
@@ -582,20 +668,16 @@ class GuaranteeEngine:
         return list(_pool().map(work, range(s)))
 
     # -- decode path ----------------------------------------------------
-    def apply_batched(
-        self, x_rec: np.ndarray, arts: list[GuaranteeArtifact]
-    ) -> np.ndarray:
-        """Replay stored corrections for all species in one dispatch."""
-        import jax.numpy as jnp
+    def dense_corrections(
+        self, arts: list[GuaranteeArtifact], shape: tuple[int, int, int]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Scatter CSR artifacts into the kernel inputs (dense, basis_pad).
 
-        if self._apply_jit is None:
-            self._build_jits()
-        x_rec = np.asarray(x_rec, dtype=np.float32)
-        s, nb, d = x_rec.shape
-        if all(art.coeff_q.size == 0 for art in arts):
-            return x_rec.copy()
-        # per-species flat scatter: CSR row ids come from one repeat over
-        # the per-block counts; species slices are disjoint (thread pool)
+        Per-species flat scatter: CSR row ids come from one repeat over the
+        per-block counts; species slices are disjoint (thread pool). Host
+        work only — callers overlap it with in-flight device decode.
+        """
+        s, nb, d = shape
         dense = np.zeros((s, nb, d), np.float32)
         basis_pad = np.zeros((s, d, d), np.float32)
 
@@ -612,6 +694,26 @@ class GuaranteeEngine:
             basis_pad[sidx, :, : art.basis.shape[1]] = art.basis
 
         list(_pool().map(work, range(s)))
+        return dense, basis_pad
+
+    def apply_device(self, x_rec_dev, dense, basis):
+        """Replay on device-resident reconstructions without a host sync."""
+        if self._apply_jit is None:
+            self._build_jits()
+        return self._apply_jit(x_rec_dev, dense, basis)
+
+    def apply_batched(
+        self, x_rec: np.ndarray, arts: list[GuaranteeArtifact]
+    ) -> np.ndarray:
+        """Replay stored corrections for all species in one dispatch."""
+        import jax.numpy as jnp
+
+        if self._apply_jit is None:
+            self._build_jits()
+        x_rec = np.asarray(x_rec, dtype=np.float32)
+        if all(art.coeff_q.size == 0 for art in arts):
+            return x_rec.copy()
+        dense, basis_pad = self.dense_corrections(arts, x_rec.shape)
         out = self._apply_jit(
             jnp.asarray(x_rec), jnp.asarray(dense), jnp.asarray(basis_pad)
         )

@@ -34,9 +34,13 @@ standalone decode path live in :mod:`repro.codec` (``compress`` returns an
 in-memory report whose artifact serializes via the codec, and
 ``decompress`` is a compatibility wrapper over ``codec.reconstruct`` that
 derives decode structure from the *artifact*, not from this pipeline's
-config). All jitted callables (AE encode/decode, correction apply,
-guarantee selection) are constructed once per pipeline instance —
-compress/decompress never re-trace.
+config). Training runs on the compiled mini-batch engine
+(:mod:`repro.train.train_loop` — device-resident data, cached programs, no
+per-step host sync), and every decode — including the one feeding the
+guarantee prep — goes through the codec's shared fused runtime, so the
+reconstruction the guarantee is computed against is bit-identical to the
+one ``codec.decompress`` replays. Nothing re-traces across fit/compress/
+decompress calls.
 """
 
 from __future__ import annotations
@@ -170,10 +174,6 @@ class GBATCPipeline:
         # jitted once per instance: rebuilding jax.jit(...) per call would
         # re-trace (and re-compile) on every compress/decompress
         self._jit_encode = jax.jit(self.model.encode)
-        self._jit_decode = jax.jit(self.model.decode)
-        self._jit_corr = (
-            jax.jit(self.corr_net.__call__) if self.corr_net is not None else None
-        )
         self._gengine = gae.default_engine()
         # populated by fit()
         self._ae_params: Any = None
@@ -185,6 +185,9 @@ class GBATCPipeline:
         self._norm: Optional[tuple[np.ndarray, np.ndarray]] = None
         # tau-independent guarantee state per (latent_bin, skip_correction)
         self._prepared: dict[tuple, tuple] = {}
+        # most recent PreparedGuarantee — seed for the engine's
+        # shared-residual incremental prepare on the next sweep key
+        self._last_prepared: Optional[gae.PreparedGuarantee] = None
         # packed (decoder, correction) wire streams, constant per fit
         self._packed_params: Optional[tuple] = None
 
@@ -224,10 +227,14 @@ class GBATCPipeline:
 
         corr_params = None
         if self.corr_net is not None:
-            x_rec = np.asarray(_batched(self._jit_decode, params, latents))
-            vec_rec = correction.blocks_to_pointwise(x_rec)
+            # decode through the shared fused runtime (one dispatch, no
+            # chunked host round-trips); pointwise vecs are a transpose away
+            ae_vecs = self._decode_vecs(params, latents, None)
+            vec_rec = np.ascontiguousarray(
+                ae_vecs.transpose(1, 2, 0).reshape(-1, self.n_species)
+            )
             vec_orig = correction.blocks_to_pointwise(blocks)
-            corr_params = correction.fit(
+            corr_params, _ = correction.fit(
                 self.corr_net, vec_rec, vec_orig,
                 steps=cfg.corr_steps, seed=cfg.seed + 1,
             )
@@ -241,23 +248,30 @@ class GBATCPipeline:
         self._data = data
         self._norm = (mn, rngs)
         self._prepared.clear()
+        self._last_prepared = None
         self._packed_params = None
-        return {"final_ae_loss": losses[-1] if losses else float("nan")}
+        return {"final_ae_loss": losses[-1] if len(losses) else float("nan")}
 
     # ------------------------------------------------------------------
-    def _decode_corrected(self, latent_deq: np.ndarray,
-                          corr_params=None) -> np.ndarray:
-        x_rec = np.asarray(_batched(self._jit_decode, self._ae_params, latent_deq))
-        if self.corr_net is not None and corr_params is not None:
-            vecs = correction.blocks_to_pointwise(x_rec)
-            fixed = np.asarray(
-                _batched(self._jit_corr, corr_params, vecs, batch=1 << 16)
-            )
-            x_rec = correction.pointwise_to_blocks(fixed, x_rec)
-        return x_rec
+    def _decode_vecs(self, ae_params, latents: np.ndarray,
+                     corr_params=None) -> np.ndarray:
+        """Latents -> corrected (S, NB, D) vectors via the shared fused
+        decode runtime (the same compiled program ``codec.decompress``
+        replays, so encode-side guarantees see bit-identical x_rec)."""
+        from repro import codec
+
+        rt = codec._runtime(self.cfg, self.n_species,
+                            corr_params is not None)
+        lat32 = np.ascontiguousarray(np.asarray(latents, dtype=np.float32))
+        return np.asarray(codec._fused_vecs(rt, ae_params, corr_params, lat32))
 
     def _prepare_guarantee(self, latent_bin_rel: float, skip_correction: bool):
-        """Decode + tau-independent guarantee prep, cached per sweep key."""
+        """Decode + tau-independent guarantee prep, cached per sweep key.
+
+        Cold keys seed the engine's shared-residual incremental prepare
+        with the most recent prepared state: species whose reconstruction
+        is unchanged (e.g. toggling ``skip_correction`` on a pipeline with
+        no correction net) reuse their PCA/projection/energy-ordering."""
         lat_bin = float(latent_bin_rel * max(self._latents.std(), 1e-12))
         key = (lat_bin, bool(skip_correction))
         hit = self._prepared.get(key)
@@ -265,10 +279,13 @@ class GBATCPipeline:
             return hit
         lat_q = quantize(self._latents, lat_bin)
         corr_params = None if skip_correction else self._corr_params
-        x_rec = self._decode_corrected(dequantize(lat_q, lat_bin),
-                                       corr_params=corr_params)
-        vecs_rec = blocking.blocks_as_vectors(x_rec)
-        prepared = self._gengine.prepare(self._vecs_orig, vecs_rec)
+        vecs_rec = self._decode_vecs(
+            self._ae_params, dequantize(lat_q, lat_bin), corr_params
+        )
+        prepared = self._gengine.prepare(
+            self._vecs_orig, vecs_rec, reuse=self._last_prepared
+        )
+        self._last_prepared = prepared
         latent_blob = entropy.huffman_encode(lat_q)
         entry = (prepared, lat_q, lat_bin, corr_params, latent_blob)
         # bounded FIFO: each entry pins several (S, NB, D) fp64 tensors, and
@@ -388,9 +405,26 @@ class GBATCPipeline:
 
 
 def _batched(fn, params, arrays, batch: int = 512):
-    """Apply an already-jitted (params, x) callable over leading-axis chunks."""
-    outs = [
-        np.asarray(fn(params, jnp.asarray(arrays[i : i + batch])))
-        for i in range(0, arrays.shape[0], batch)
-    ]
+    """Apply an already-jitted (params, x) callable over leading-axis chunks.
+
+    Chunk shapes are kept fixed: a ragged last chunk is padded (edge-row
+    repeat) to the full batch size and the padding sliced off the result.
+    The seed dispatched the remainder at its own shape, re-tracing and
+    re-compiling the callable once per distinct tail length — the
+    trace-count regression test pins this to one trace per leading shape.
+    """
+    n = arrays.shape[0]
+    if n <= batch:
+        return np.asarray(fn(params, jnp.asarray(arrays)))
+    outs = []
+    for i in range(0, n, batch):
+        chunk = arrays[i : i + batch]
+        pad = batch - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate(
+                [np.asarray(chunk),
+                 np.repeat(np.asarray(chunk[-1:]), pad, axis=0)]
+            )
+        out = np.asarray(fn(params, jnp.asarray(chunk)))
+        outs.append(out[: batch - pad] if pad else out)
     return np.concatenate(outs, axis=0)

@@ -102,6 +102,52 @@ def _conv_kernel_init(kernel_shape):
     return init
 
 
+def _fast_conv_applicable(kernel, stride, padding) -> bool:
+    return (
+        padding == "SAME"
+        and tuple(stride) == (1, 1, 1)
+        and all(k % 2 == 1 for k in kernel)
+    )
+
+
+def _decomposed_conv3d(x, w, kernel):
+    """Stride-1 SAME 3D conv as a depth-shifted sum of 2D convolutions.
+
+    XLA:CPU lowers 3D (transposed) convolutions — and especially their
+    gradients — through a slow generic path, while 2D NHWC f32 convolutions
+    hit the tuned Eigen spatial kernels. A kd x kh x kw stride-1 SAME conv
+    is exactly the sum over the kd depth taps of a 2D SAME conv with that
+    tap's kh x kw kernel, the depth axis folded into the batch and the tap
+    outputs depth-shifted. Equal to ``conv_general_dilated`` up to the
+    reassociation of the depth-tap sum (ulp-level on f32; asserted in the
+    unit suite) and ~3x faster on CPU for this repo's block shapes.
+    """
+    n, d, h, ww, ci = x.shape
+    kd, kh, kw = kernel
+    co = w.shape[-1]
+    dn2 = jax.lax.conv_dimension_numbers(
+        (1, 1, 1, ci), (kh, kw, ci, co), ("NHWC", "HWIO", "NHWC")
+    )
+    # every tap convolves the SAME (un-shifted, contiguous) input view and
+    # the depth shift moves to the tap *outputs* — shifting the (usually
+    # narrower) CO-channel tensors instead of copying strided CI-channel
+    # input slices; zero-padded shifts reproduce the SAME-conv boundary
+    xs = x.reshape(n * d, h, ww, ci)
+    half = kd // 2
+    y = None
+    for dz in range(kd):
+        c = jax.lax.conv_general_dilated(
+            xs, w[dz], (1, 1), "SAME", dimension_numbers=dn2
+        ).reshape(n, d, h, ww, co)
+        s = half - dz
+        if s > 0:
+            c = jnp.pad(c, ((0, 0), (s, 0), (0, 0), (0, 0), (0, 0)))[:, :d]
+        elif s < 0:
+            c = jnp.pad(c, ((0, 0), (0, -s), (0, 0), (0, 0), (0, 0)))[:, -d:]
+        y = c if y is None else y + c
+    return y
+
+
 def conv3d(
     in_ch: int,
     out_ch: int,
@@ -111,7 +157,14 @@ def conv3d(
     padding: str = "SAME",
     use_bias: bool = True,
     dtype=jnp.float32,
+    impl: str = "2d",
 ) -> Layer:
+    """3D convolution. ``impl="2d"`` (default) uses the depth-decomposed
+    2D-conv formulation where it applies (stride 1, SAME, odd kernel) and
+    falls back to the XLA 3D convolution otherwise; ``impl="xla"`` always
+    uses the XLA convolution (retained as the numerics/perf reference)."""
+    if impl not in ("2d", "xla"):
+        raise ValueError(f"unknown conv impl {impl!r}")
     kshape = kernel + (in_ch, out_ch)
     defs = {"w": Param(kshape, dtype, _conv_kernel_init(kshape), (None,) * 5)}
     if use_bias:
@@ -120,13 +173,17 @@ def conv3d(
     dn = jax.lax.conv_dimension_numbers(
         (1, 1, 1, 1, in_ch), kshape, ("NDHWC", "DHWIO", "NDHWC")
     )
+    use_fast = impl == "2d" and _fast_conv_applicable(kernel, stride, padding)
 
     def apply(params, x):
         # x: (N, D, H, W, C)
-        y = jax.lax.conv_general_dilated(
-            x, params["w"], window_strides=stride, padding=padding,
-            dimension_numbers=dn,
-        )
+        if use_fast:
+            y = _decomposed_conv3d(x, params["w"], kernel)
+        else:
+            y = jax.lax.conv_general_dilated(
+                x, params["w"], window_strides=stride, padding=padding,
+                dimension_numbers=dn,
+            )
         if use_bias:
             y = y + params["b"]
         return y
@@ -143,7 +200,14 @@ def conv3d_transpose(
     padding: str = "SAME",
     use_bias: bool = True,
     dtype=jnp.float32,
+    impl: str = "2d",
 ) -> Layer:
+    """Transposed 3D convolution. With stride 1, SAME padding, and an odd
+    kernel, ``lax.conv_transpose`` degenerates to the plain convolution with
+    the same (unflipped) DHWIO kernel — its adjusted padding is exactly the
+    SAME padding — so the default impl reuses :func:`_decomposed_conv3d`."""
+    if impl not in ("2d", "xla"):
+        raise ValueError(f"unknown conv impl {impl!r}")
     kshape = kernel + (in_ch, out_ch)
     defs = {"w": Param(kshape, dtype, _conv_kernel_init(kshape), (None,) * 5)}
     if use_bias:
@@ -152,12 +216,16 @@ def conv3d_transpose(
     dn = jax.lax.conv_dimension_numbers(
         (1, 1, 1, 1, in_ch), kshape, ("NDHWC", "DHWIO", "NDHWC")
     )
+    use_fast = impl == "2d" and _fast_conv_applicable(kernel, stride, padding)
 
     def apply(params, x):
-        y = jax.lax.conv_transpose(
-            x, params["w"], strides=stride, padding=padding,
-            dimension_numbers=dn,
-        )
+        if use_fast:
+            y = _decomposed_conv3d(x, params["w"], kernel)
+        else:
+            y = jax.lax.conv_transpose(
+                x, params["w"], strides=stride, padding=padding,
+                dimension_numbers=dn,
+            )
         if use_bias:
             y = y + params["b"]
         return y

@@ -69,7 +69,13 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 def update(cfg: AdamWConfig, grads, state, params):
-    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    Pure pytree -> pytree: (params, state) round-trip with identical
+    structure and dtypes, so the pair is a valid ``lax.scan`` carry (and a
+    donatable argument) for the compiled training engine in
+    :mod:`repro.train.train_loop`.
+    """
     step = state["step"] + 1
     if cfg.grad_clip is not None:
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
@@ -92,13 +98,9 @@ def update(cfg: AdamWConfig, grads, state, params):
         p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
         return p_new, m_new, v_new
 
-    flat_p, treedef = jax.tree.flatten(params)
-    flat_g = treedef.flatten_up_to(grads)
-    flat_m = treedef.flatten_up_to(state["m"])
-    flat_v = treedef.flatten_up_to(state["v"])
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
-    new_params = treedef.unflatten([o[0] for o in out])
-    new_m = treedef.unflatten([o[1] for o in out])
-    new_v = treedef.unflatten([o[2] for o in out])
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params, new_m, new_v = jax.tree.transpose(
+        jax.tree.structure(params), jax.tree.structure((0, 0, 0)), out
+    )
     new_state = {"m": new_m, "v": new_v, "step": step}
     return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

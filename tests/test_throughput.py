@@ -1,0 +1,372 @@
+"""Throughput-engine tests: compiled trainers (determinism + trajectory
+equivalence), the fused device-resident decode path (bit-identity against
+the retained pre-change path), `_batched` retrace regression, Huffman
+decode-table caching, and the incremental guarantee `prepare`."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import codec
+from repro.core import autoencoder as ae
+from repro.core import correction, entropy, gae
+from repro.core.pipeline import GBATCPipeline, PipelineConfig, _batched
+from repro.data import s3d
+from repro.train import train_loop
+
+
+# ---------------------------------------------------------------------------
+# satellite: _batched must not retrace on a ragged last chunk
+# ---------------------------------------------------------------------------
+class TestBatchedRetrace:
+    def test_ragged_tail_is_padded_not_retraced(self):
+        shapes = []
+
+        def raw(params, x):
+            shapes.append(x.shape)  # side effect fires once per trace
+            return x * params
+
+        fn = jax.jit(raw)
+        arr = np.arange(1200 * 3, dtype=np.float32).reshape(1200, 3)
+        out = _batched(fn, 2.0, arr, batch=512)
+        np.testing.assert_array_equal(out, arr * 2.0)
+        # 512 + 512 + 176: the tail is padded to 512 -> exactly one trace
+        assert shapes == [(512, 3)]
+
+    def test_small_input_single_trace(self):
+        shapes = []
+        fn = jax.jit(lambda p, x: (shapes.append(x.shape), x + p)[1])
+        arr = np.ones((100, 2), np.float32)
+        out = _batched(fn, 1.0, arr, batch=512)
+        np.testing.assert_array_equal(out, arr + 1.0)
+        assert shapes == [(100, 2)]
+
+    def test_exact_multiple_unpadded(self):
+        fn = jax.jit(lambda p, x: x - p)
+        arr = np.ones((1024, 2), np.float32)
+        out = _batched(fn, 1.0, arr, batch=512)
+        np.testing.assert_array_equal(out, arr - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: Huffman decode-table cache + fast window pass
+# ---------------------------------------------------------------------------
+class TestHuffmanDecodeCache:
+    def test_window_values_match_reference(self):
+        rng = np.random.default_rng(0)
+        for n in (1, 7, 64, 1000, 4097):
+            bits = rng.integers(0, 2, size=n + 48).astype(np.uint8)
+            for width in (1, 5, 8, 13, 16):
+                np.testing.assert_array_equal(
+                    entropy._window_values(bits, width),
+                    entropy._window_values_ref(bits, width),
+                )
+
+    def test_decode_paths_agree(self):
+        rng = np.random.default_rng(1)
+        for vals in (
+            np.rint(rng.normal(0, 30, size=20000)).astype(np.int64),
+            rng.zipf(1.6, 5000),  # long codes exercise the fallback
+            np.array([7]),
+            np.zeros(100, np.int64),
+        ):
+            blob = entropy.huffman_encode(vals)
+            cache = entropy.DecodeTableCache()
+            plain = entropy.huffman_decode(blob)
+            ref = entropy.huffman_decode_ref(blob)
+            cached = entropy.huffman_decode(blob, table_cache=cache)
+            cached2 = entropy.huffman_decode(blob, table_cache=cache)
+            np.testing.assert_array_equal(plain, vals.ravel())
+            np.testing.assert_array_equal(plain, ref)
+            np.testing.assert_array_equal(plain, cached)
+            np.testing.assert_array_equal(plain, cached2)
+
+    def test_cache_hits_by_codebook_signature(self):
+        rng = np.random.default_rng(2)
+        vals = rng.integers(-8, 8, size=5000)
+        cache = entropy.DecodeTableCache()
+        entropy.huffman_decode(entropy.huffman_encode(vals), table_cache=cache)
+        assert len(cache._tables) == 1
+        # same distribution -> same code lengths -> cache hit, no new entry
+        entropy.huffman_decode(entropy.huffman_encode(vals), table_cache=cache)
+        assert len(cache._tables) == 1
+        # different alphabet -> new table
+        entropy.huffman_decode(
+            entropy.huffman_encode(rng.zipf(1.7, 4000)), table_cache=cache
+        )
+        assert len(cache._tables) == 2
+
+    def test_cache_is_bounded(self):
+        rng = np.random.default_rng(3)
+        cache = entropy.DecodeTableCache(max_entries=2)
+        for k in (2, 3, 4, 5):
+            vals = rng.integers(0, k, size=1000)
+            entropy.huffman_decode(
+                entropy.huffman_encode(vals), table_cache=cache
+            )
+        assert len(cache._tables) <= 2
+
+
+# ---------------------------------------------------------------------------
+# trainer engine: determinism + trajectory equivalence
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_blocks():
+    # low-rank structure so a dozen SGD steps measurably reduce the loss
+    rng = np.random.default_rng(0)
+    basis = rng.normal(size=(3, 4, 4, 5, 4)).astype(np.float32)
+    coef = rng.normal(size=(96, 3)).astype(np.float32)
+    return 0.1 * np.einsum("nk,kcdhw->ncdhw", coef, basis)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    return ae.BlockAutoencoder(
+        ae.AEConfig(n_species=4, block=(4, 5, 4), latent=8,
+                    conv_channels=(4, 8))
+    )
+
+
+def _leaves_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(fa) == len(fb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(fa, fb)
+    )
+
+
+class TestTrainerEngine:
+    STEPS = 12
+
+    def _fit(self, model, blocks, mode, seed=0):
+        return ae.fit(model, blocks, steps=self.STEPS, batch_size=16,
+                      lr=1e-3, seed=seed, mode=mode)
+
+    def test_stream_same_seed_bit_identical(self, tiny_model, tiny_blocks):
+        p1, l1 = self._fit(tiny_model, tiny_blocks, "stream")
+        p2, l2 = self._fit(tiny_model, tiny_blocks, "stream")
+        assert _leaves_equal(p1, p2)
+        np.testing.assert_array_equal(l1, l2)
+
+    def test_scan_same_seed_bit_identical(self, tiny_model, tiny_blocks):
+        p1, l1 = self._fit(tiny_model, tiny_blocks, "scan")
+        p2, l2 = self._fit(tiny_model, tiny_blocks, "scan")
+        assert _leaves_equal(p1, p2)
+        np.testing.assert_array_equal(l1, l2)
+
+    def test_scan_stream_reference_trajectories_agree(
+        self, tiny_model, tiny_blocks
+    ):
+        _, l_scan = self._fit(tiny_model, tiny_blocks, "scan")
+        _, l_stream = self._fit(tiny_model, tiny_blocks, "stream")
+        _, l_ref = ae.fit_reference(
+            tiny_model, tiny_blocks, steps=self.STEPS, batch_size=16,
+            lr=1e-3, seed=0,
+        )
+        # identical batch streams + identical step math; only program
+        # fusion differs across the three compilations
+        np.testing.assert_allclose(l_scan, l_stream, rtol=1e-4, atol=1e-7)
+        np.testing.assert_allclose(l_scan, l_ref, rtol=1e-4, atol=1e-7)
+
+    def test_seed_changes_trajectory(self, tiny_model, tiny_blocks):
+        _, l0 = self._fit(tiny_model, tiny_blocks, "stream", seed=0)
+        _, l1 = self._fit(tiny_model, tiny_blocks, "stream", seed=7)
+        assert not np.array_equal(l0, l1)
+
+    def test_ae_loss_history_shape_and_finiteness(
+        self, tiny_model, tiny_blocks
+    ):
+        _, losses = self._fit(tiny_model, tiny_blocks, None)
+        assert losses.shape == (self.STEPS,)
+        assert np.isfinite(losses).all()
+        # training decreases loss on average
+        assert losses[-3:].mean() < losses[:3].mean()
+
+    def test_correction_trainer_history_and_determinism(self):
+        rng = np.random.default_rng(1)
+        net = correction.TensorCorrectionNetwork(
+            correction.CorrectionConfig(n_species=4)
+        )
+        x_orig = rng.normal(size=(512, 4)).astype(np.float32)
+        x_rec = x_orig + 0.05 * rng.normal(size=(512, 4)).astype(np.float32)
+        p1, l1 = correction.fit(net, x_rec, x_orig, steps=10, batch_size=64)
+        p2, l2 = correction.fit(net, x_rec, x_orig, steps=10, batch_size=64)
+        assert _leaves_equal(p1, p2)
+        np.testing.assert_array_equal(l1, l2)
+        assert l1.shape == (10,)
+        assert np.isfinite(l1).all()
+        _, l_ref = correction.fit_reference(
+            net, x_rec, x_orig, steps=10, batch_size=64
+        )
+        np.testing.assert_allclose(l1, l_ref, rtol=1e-4, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# conv impl parity (the fused decode's bit-identity rests on it)
+# ---------------------------------------------------------------------------
+class TestConvImplParity:
+    def test_2d_and_xla_models_agree(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(16, 4, 4, 5, 4)).astype(np.float32)
+        outs = {}
+        for impl in ("2d", "xla"):
+            model = ae.BlockAutoencoder(
+                ae.AEConfig(n_species=4, block=(4, 5, 4), latent=8,
+                            conv_channels=(4, 8), conv_impl=impl)
+            )
+            params = model.init(jax.random.PRNGKey(0))
+            outs[impl] = np.asarray(model(params, x))
+        # the depth-decomposed 2D formulation reassociates the kernel-depth
+        # sum, so agreement with the XLA conv is ulp-level, not bitwise
+        # (the decode bit-identity gate therefore compares orchestration
+        # at a fixed conv impl, not conv impls against each other)
+        np.testing.assert_allclose(outs["2d"], outs["xla"],
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused decode: bit-identity against the retained pre-change path
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fitted_blob():
+    data = s3d.generate(
+        s3d.S3DConfig(n_species=6, n_time=8, height=40, width=32, seed=5)
+    )["species"]
+    cfg = PipelineConfig(ae_steps=40, corr_steps=20, conv_channels=(8, 16))
+    pipe = GBATCPipeline(cfg, n_species=6)
+    pipe.fit(data)
+    rep = pipe.compress(target_nrmse=1e-3)
+    return data, pipe, rep, rep.artifact.to_bytes()
+
+
+class TestFusedDecode:
+    def test_decompress_bit_identical_to_reference(self, fitted_blob):
+        _, _, _, blob = fitted_blob
+        fused = codec.decompress(blob)
+        ref = codec.decompress_reference(blob)
+        np.testing.assert_array_equal(fused, ref)
+
+    def test_reconstruct_matches_reference_paths(self, fitted_blob):
+        _, pipe, rep, blob = fitted_blob
+        art = codec.decode_artifact(blob)
+        np.testing.assert_array_equal(
+            codec.reconstruct(art), codec.reconstruct_reference(art)
+        )
+        np.testing.assert_array_equal(
+            pipe.decompress(rep.artifact), codec.decompress(blob)
+        )
+
+    def test_reference_and_fast_deserialize_agree(self, fitted_blob):
+        _, _, _, blob = fitted_blob
+        a = codec.decode_artifact(blob)
+        b = codec.decode_artifact_reference(blob)
+        np.testing.assert_array_equal(a.latent_q, b.latent_q)
+        for ga, gb in zip(a.species_guarantees, b.species_guarantees):
+            np.testing.assert_array_equal(ga.coeff_q, gb.coeff_q)
+            np.testing.assert_array_equal(ga.index_flat, gb.index_flat)
+            np.testing.assert_array_equal(ga.index_offsets, gb.index_offsets)
+            np.testing.assert_array_equal(ga.basis, gb.basis)
+
+    def test_chunked_fused_decode_is_bit_transparent(self, fitted_blob,
+                                                     monkeypatch):
+        """The fused NN decode chunks at _FUSED_CHUNK blocks to bound peak
+        activation memory at paper scale; chunking (including the padded
+        ragged tail) must not change a single bit."""
+        _, _, _, blob = fitted_blob
+        full = codec.decompress(blob)
+        monkeypatch.setattr(codec, "_FUSED_CHUNK", 48)
+        np.testing.assert_array_equal(codec.decompress(blob), full)
+
+    def test_decompressed_meets_bound(self, fitted_blob):
+        data, _, _, blob = fitted_blob
+        from repro.core import metrics
+
+        dec = codec.decompress(blob)
+        per = np.array(
+            [metrics.nrmse(data[s], dec[s]) for s in range(data.shape[0])]
+        )
+        assert per.max() <= 1e-3 * (1 + 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# satellite: shared-residual incremental prepare
+# ---------------------------------------------------------------------------
+class TestIncrementalPrepare:
+    def _problem(self):
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(3, 160, 40)).astype(np.float32)
+        xr = (x + 0.05 * rng.normal(size=x.shape)).astype(np.float32)
+        return x, xr, rng
+
+    def test_partial_reuse_bitwise_matches_cold(self):
+        x, xr1, rng = self._problem()
+        engine = gae.GuaranteeEngine()
+        prep1 = engine.prepare(x, xr1)
+        xr2 = xr1.copy()
+        xr2[1] += 0.01 * rng.normal(size=xr2[1].shape).astype(np.float32)
+        cold = engine.prepare(x, xr2)
+        warm = engine.prepare(x, xr2, reuse=prep1)
+        np.testing.assert_array_equal(warm.norms2, cold.norms2)
+        np.testing.assert_array_equal(warm.basis, cold.basis)
+        np.testing.assert_array_equal(warm.coeffs, cold.coeffs)
+        np.testing.assert_array_equal(warm.coeffs_sorted, cold.coeffs_sorted)
+        np.testing.assert_array_equal(warm.inv_rank, cold.inv_rank)
+        np.testing.assert_array_equal(warm.x_rec32, cold.x_rec32)
+        # the per-error-bound pass over both states is byte-identical
+        tau = 0.4 * float(np.sqrt(x.shape[2]))
+        corr_cold, arts_cold = engine.select(cold, tau)
+        corr_warm, arts_warm = engine.select(warm, tau)
+        np.testing.assert_array_equal(corr_cold, corr_warm)
+        for a, b in zip(arts_cold, arts_warm):
+            assert a.to_bytes() == b.to_bytes()
+
+    def test_full_reuse_returns_same_state(self):
+        x, xr, _ = self._problem()
+        engine = gae.GuaranteeEngine()
+        prep = engine.prepare(x, xr)
+        again = engine.prepare(x, xr, reuse=prep)
+        assert again is prep
+
+    def test_mismatched_shape_ignores_reuse(self):
+        x, xr, rng = self._problem()
+        engine = gae.GuaranteeEngine()
+        prep = engine.prepare(x, xr)
+        x2 = rng.normal(size=(2, 80, 40)).astype(np.float32)
+        xr2 = (x2 + 0.1 * rng.normal(size=x2.shape)).astype(np.float32)
+        out = engine.prepare(x2, xr2, reuse=prep)
+        cold = engine.prepare(x2, xr2)
+        np.testing.assert_array_equal(out.coeffs, cold.coeffs)
+
+    def test_pipeline_gba_sweep_hits_reuse(self):
+        """A pipeline without a correction net decodes identical x_rec for
+        both skip_correction settings — the second prepare must be the
+        reused object, not a recomputation."""
+        data = s3d.generate(
+            s3d.S3DConfig(n_species=4, n_time=8, height=20, width=16, seed=6)
+        )["species"]
+        cfg = PipelineConfig(ae_steps=15, corr_steps=5, use_correction=False,
+                             conv_channels=(4, 8))
+        pipe = GBATCPipeline(cfg, n_species=4)
+        pipe.fit(data)
+        rep_a = pipe.compress(target_nrmse=2e-3, skip_correction=False)
+        prep_a = pipe._prepared[next(iter(pipe._prepared))][0]
+        rep_b = pipe.compress(target_nrmse=2e-3, skip_correction=True)
+        keys = list(pipe._prepared)
+        assert len(keys) == 2
+        prep_b = pipe._prepared[keys[-1]][0]
+        assert prep_b is prep_a  # full bitwise reuse
+        np.testing.assert_array_equal(rep_a.recon, rep_b.recon)
+
+
+# ---------------------------------------------------------------------------
+# engine batch-index law is shared across modes
+# ---------------------------------------------------------------------------
+class TestBatchIndexLaw:
+    def test_all_batch_indices_matches_per_step(self):
+        idxs = train_loop.all_batch_indices(3, 5, 100, 8)
+        bkey = train_loop.batch_key(3)
+        for t in range(5):
+            np.testing.assert_array_equal(
+                idxs[t], np.asarray(train_loop.batch_indices(bkey, t, 100, 8))
+            )
+        assert idxs.shape == (5, 8)
+        assert (idxs >= 0).all() and (idxs < 100).all()
