@@ -134,6 +134,27 @@ def bench_codec_wire(rows, full=False):
     ))
 
 
+def bench_partial_decode(rows, full=False):
+    """Selective (per-species / time-window) decode vs full decode; emits
+    BENCH_partial.json. Bitwise equivalence of every selective decode with
+    the sliced full decode (and v1 container back-compat) is asserted
+    inside before any number is reported."""
+    from benchmarks import bench_partial
+
+    summary = bench_partial.run(quick=not full)
+    rows.append((
+        "partial_decode_1_species",
+        summary["decode_1_species_ms"] * 1e3,
+        f"speedup={summary['speedup_1_species']:.1f}x"
+        f" bytes={summary['bytes_parsed_fraction']:.0%}",
+    ))
+    rows.append((
+        "partial_decode_1_species_window",
+        summary["decode_1_species_window_ms"] * 1e3,
+        f"speedup={summary['speedup_1_species_window']:.1f}x",
+    ))
+
+
 def bench_sz(rows):
     from repro.core import sz
     from repro.data import s3d
@@ -170,6 +191,7 @@ def main() -> None:
     guarded("guarantee_engine", bench_guarantee_engine, rows)
     guarded("throughput_engine", bench_throughput_engine, rows, full=full)
     guarded("codec_wire", bench_codec_wire, rows, full=full)
+    guarded("partial_decode", bench_partial_decode, rows, full=full)
     guarded("bench_sz", bench_sz, rows)
 
     # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)

@@ -17,10 +17,28 @@ stream          payload
 ``decoder``     AE decoder parameters, packed fp32/fp16 little-endian
                 in deterministic (sorted-path) leaf order
 ``correction``  tensor-correction network parameters (GBATC only)
-``guarantee<s>``  per-species :class:`~repro.core.gae.GuaranteeArtifact`
-                as a nested container: Huffman'd quantized coefficients,
-                Fig. 2 CSR index bitmap, trimmed fp32 PCA basis, tau/bin
+``guarantee``   (container v2) ONE combined CSR-of-CSR stream for all
+                species: a fixed-layout directory (per species: tau,
+                coeff bin, basis dims, and the byte lengths of its
+                coeff/index/basis payloads) followed by the
+                type-grouped payloads. Every species' byte extent is
+                addressable from the directory alone — the basis of
+                the random-access decode path.
+``guarantee<s>``  (container v1, still read) per-species
+                :class:`~repro.core.gae.GuaranteeArtifact` as a nested
+                container: Huffman'd quantized coefficients, Fig. 2
+                CSR index bitmap, trimmed fp32 PCA basis, tau/bin
 ==============  ====================================================
+
+Selective decode: ``decompress(blob, species=..., time_range=...)`` (or a
+reusable :class:`PartialDecoder`) parses only the header plus the
+requested streams — the selected species' coefficient streams
+entropy-decode in one lockstep walk, the fused jit decode runs on only
+the block rows covering the time window, and only the selected species'
+corrections replay through the Pallas kernel. The selective output is
+bitwise equal to slicing the full decode, v1 blobs decode through the
+same entry points unchanged, and a full-field v2 decode equals the v1
+decode byte for byte.
 
 Byte accounting is a *view over the container's stream table*
 (:func:`stream_breakdown`), so ``breakdown["total"] == len(blob)`` holds
@@ -53,6 +71,7 @@ import numpy as np
 
 from repro.core import autoencoder as ae
 from repro.core import blocking, correction, entropy, gae
+from repro.core import container as container_format
 from repro.core.container import (
     ContainerFormatError,
     ContainerReader,
@@ -71,7 +90,10 @@ from repro.nn import module as nn_module
 __all__ = [
     "GBATCCodec",
     "ContainerFormatError",
+    "GuaranteeDirectory",
+    "PartialDecoder",
     "encode",
+    "pack_guarantee_stream",
     "decode_artifact",
     "decode_artifact_reference",
     "decompress",
@@ -250,12 +272,131 @@ def _unpack_meta(buf: bytes):
 
 
 # ---------------------------------------------------------------------------
+# combined guarantee stream (container v2): CSR-of-CSR over species
+# ---------------------------------------------------------------------------
+_GDIR_HEAD = struct.Struct("<I")  # species count
+# per species: tau f64, coeff_bin f64, D u32, n_store u32,
+#              coeff_len u64, index_len u64, basis_len u64
+_GDIR_REC = struct.Struct("<ddIIQQQ")
+
+
+def pack_guarantee_stream(arts) -> bytes:
+    """Pack all species' guarantee artifacts into ONE combined stream.
+
+    Layout: ``S u32 | S x directory record | coeff payloads | index
+    payloads | basis payloads`` — the outer offset table (directory) over
+    species plus type-grouped sub-streams. Per-species framing collapses
+    from a nested container (~60 bytes of magic/table per species) to one
+    fixed 48-byte record, and every species' byte extents follow from the
+    directory by prefix sums, so a reader can slice one species without
+    parsing any sibling payload.
+    """
+    parts = [_GDIR_HEAD.pack(len(arts))]
+    coeffs: list[bytes] = []
+    indexes: list[bytes] = []
+    bases: list[bytes] = []
+    for g in arts:
+        c, i, b = g.wire_parts()
+        parts.append(
+            _GDIR_REC.pack(g.tau, g.coeff_bin, *g.basis.shape,
+                           len(c), len(i), len(b))
+        )
+        coeffs.append(c)
+        indexes.append(i)
+        bases.append(b)
+    return b"".join(parts + coeffs + indexes + bases)
+
+
+class GuaranteeDirectory:
+    """Parsed directory of a combined v2 ``guarantee`` stream.
+
+    Holds the per-species metadata and byte extents; payload access is
+    pure slicing — no sibling species' stream is ever parsed to reach
+    another's. Raises :class:`ContainerFormatError` when the directory
+    and the payload bytes disagree.
+    """
+
+    def __init__(self, payload: bytes):
+        payload = bytes(payload)
+        if len(payload) < _GDIR_HEAD.size:
+            raise ContainerFormatError(
+                "guarantee stream truncated: no species directory"
+            )
+        (s,) = _GDIR_HEAD.unpack_from(payload, 0)
+        dir_end = _GDIR_HEAD.size + s * _GDIR_REC.size
+        if len(payload) < dir_end:
+            raise ContainerFormatError(
+                f"guarantee directory truncated: {len(payload)} bytes "
+                f"cannot hold {s} species records"
+            )
+        recs = list(_GDIR_REC.iter_unpack(payload[_GDIR_HEAD.size:dir_end]))
+        self._meta = [(r[0], r[1], r[2], r[3]) for r in recs]
+        coeff_lens = [r[4] for r in recs]
+        index_lens = [r[5] for r in recs]
+        basis_lens = [r[6] for r in recs]
+        # per-type payload offsets by prefix sum (python ints: a corrupt
+        # u64 length must overflow into a clean mismatch, not wrap)
+        off = dir_end
+        self._extents: list[list[tuple[int, int]]] = []
+        for lens in (coeff_lens, index_lens, basis_lens):
+            spans = []
+            for ln in lens:
+                spans.append((off, off + ln))
+                off += ln
+            self._extents.append(spans)
+        if off != len(payload):
+            raise ContainerFormatError(
+                f"guarantee stream is {len(payload)} bytes but its "
+                f"directory declares {off}"
+            )
+        self.dir_bytes = dir_end
+        self.coeff_total = sum(coeff_lens)
+        self.index_total = sum(index_lens)
+        self.basis_total = sum(basis_lens)
+        self._payload = payload
+
+    @property
+    def n_species(self) -> int:
+        return len(self._meta)
+
+    def _slice(self, kind: int, sidx: int) -> bytes:
+        lo, hi = self._extents[kind][sidx]
+        return self._payload[lo:hi]
+
+    def coeff_stream(self, sidx: int) -> bytes:
+        return self._slice(0, sidx)
+
+    def coeff_len(self, sidx: int) -> int:
+        lo, hi = self._extents[0][sidx]
+        return hi - lo
+
+    def species_parts(self, sidx: int):
+        """(tau, coeff_bin, d, n_store, coeff, index, basis) for one species."""
+        return (*self._meta[sidx], self._slice(0, sidx),
+                self._slice(1, sidx), self._slice(2, sidx))
+
+    def species_extent_bytes(self, sidx: int) -> int:
+        """Payload bytes one species' decode touches (coeff+index+basis)."""
+        return sum(hi - lo for lo, hi in
+                   (self._extents[k][sidx] for k in range(3)))
+
+
+# ---------------------------------------------------------------------------
 # encode / decode
 # ---------------------------------------------------------------------------
-def encode(artifact: CompressedArtifact) -> bytes:
-    """Serialize a :class:`CompressedArtifact` into a container blob."""
+def encode(artifact: CompressedArtifact,
+           version: int = container_format.FORMAT_VERSION_SELECTIVE) -> bytes:
+    """Serialize a :class:`CompressedArtifact` into a container blob.
+
+    ``version`` selects the guarantee layout: 2 (default) writes the
+    combined CSR-of-CSR ``guarantee`` stream; 1 writes the original
+    per-species nested containers (byte-stable with earlier releases —
+    kept so back-compat round-trips stay testable).
+    """
     cfg = artifact.cfg
-    w = ContainerWriter()
+    if version not in container_format.SUPPORTED_VERSIONS:
+        raise ValueError(f"unknown container version {version}")
+    w = ContainerWriter(version=version)
     w.add("meta", _pack_meta(artifact))
     w.add("latent", artifact.latent_blob())
     packed = artifact._param_streams
@@ -266,8 +407,11 @@ def encode(artifact: CompressedArtifact) -> bytes:
     w.add("decoder", packed[0])
     if artifact.corr_params is not None:
         w.add("correction", packed[1])
-    for sidx, g in enumerate(artifact.species_guarantees):
-        w.add(f"guarantee{sidx}", g.to_bytes())
+    if version == container_format.FORMAT_VERSION_SELECTIVE:
+        w.add("guarantee", pack_guarantee_stream(artifact.species_guarantees))
+    else:
+        for sidx, g in enumerate(artifact.species_guarantees):
+            w.add(f"guarantee{sidx}", g.to_bytes())
     return w.to_bytes()
 
 
@@ -288,6 +432,13 @@ class _DecodedHead:
     ae_params: Any
     corr_params: Any
     runtime: _DecodeRuntime
+    version: int = container_format.FORMAT_VERSION
+    # lazily parsed v2 guarantee directory (see _gdir)
+    gdir: Optional[GuaranteeDirectory] = None
+    # memoized artifact-wide "any species has corrections" bit (see
+    # _any_corrections; a pure function of the blob, v1 recompute copies
+    # every species' payload)
+    any_corrections: Optional[bool] = None
 
 
 def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
@@ -317,7 +468,10 @@ def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
     expected_streams = {"meta", "latent", "decoder"}
     if cfg.use_correction:
         expected_streams.add("correction")
-    expected_streams.update(f"guarantee{sidx}" for sidx in range(s))
+    if r.version == container_format.FORMAT_VERSION_SELECTIVE:
+        expected_streams.add("guarantee")
+    else:
+        expected_streams.update(f"guarantee{sidx}" for sidx in range(s))
     if set(r.names) != expected_streams:
         # strictness: every stream must be accounted for by purpose — no
         # stray payloads hiding in the blob, no silently absent streams
@@ -358,63 +512,115 @@ def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
         latent_bin=latent_bin, norm_min=norm_min, norm_range=norm_range,
         latent_q=latent_q, latent_stream=latent_stream,
         ae_params=ae_params, corr_params=corr_params, runtime=rt,
+        version=r.version,
     )
 
 
-def _decode_guarantees(head: _DecodedHead, *, huffman=None) -> list:
-    """Entropy-decode the per-species guarantee streams.
+def _gdir(head: _DecodedHead) -> GuaranteeDirectory:
+    """Parse (once) the combined v2 guarantee stream's directory."""
+    if head.gdir is None:
+        gdir = GuaranteeDirectory(head.reader["guarantee"])
+        if gdir.n_species != head.shape[0]:
+            raise ContainerFormatError(
+                f"guarantee directory covers {gdir.n_species} species, "
+                f"meta stream declares {head.shape[0]}"
+            )
+        head.gdir = gdir
+    return head.gdir
 
-    The coefficient streams of all species decode in one lockstep
-    chunk-parallel chain walk (:func:`entropy.huffman_decode_many`) with
-    codebook tables served from the runtime cache; per-species container
-    parsing/validation then consumes the pre-decoded symbols. A stream the
-    batch pre-parse cannot read falls back to the per-species path so the
-    canonical ContainerFormatError surfaces."""
-    from repro.core import container
 
-    r = head.reader
-    s = head.shape[0]
-    geom = head.cfg.geometry
+def _coeff_streams(head: _DecodedHead, indices) -> "Optional[list[bytes]]":
+    """Selected species' coefficient payloads, sliced without parsing any
+    sibling payload; ``None`` when the per-species framing cannot be
+    pre-parsed (the per-species path then surfaces the canonical error)."""
+    if head.version == container_format.FORMAT_VERSION_SELECTIVE:
+        gdir = _gdir(head)
+        return [gdir.coeff_stream(sidx) for sidx in indices]
+    try:
+        return [
+            ContainerReader(head.reader[f"guarantee{sidx}"])["coeff"]
+            for sidx in indices
+        ]
+    except (ContainerFormatError, KeyError):
+        return None
+
+
+def _species_guarantee(
+    head: _DecodedHead, sidx: int, *, huffman=None, coeff_q=None
+) -> gae.GuaranteeArtifact:
+    """Parse + validate ONE species' guarantee artifact (either layout).
+
+    Touches only that species' streams, so a corrupt sibling cannot poison
+    it; errors carry the species index. ``coeff_q`` injects pre-decoded
+    coefficient symbols from the batched lockstep walk."""
     cache = head.runtime.table_cache
-    gblobs = [r[f"guarantee{sidx}"] for sidx in range(s)]
+    try:
+        if head.version == container_format.FORMAT_VERSION_SELECTIVE:
+            tau, coeff_bin, d, n_store, coeff, index, basis = \
+                _gdir(head).species_parts(sidx)
+            g = gae.GuaranteeArtifact.from_parts(
+                tau, coeff_bin, d, n_store, coeff, index, basis,
+                table_cache=cache, huffman=huffman, coeff_q=coeff_q,
+            )
+        else:
+            if coeff_q is not None:
+                huffman = lambda _blob, _out=coeff_q: _out  # noqa: E731
+            g = gae.GuaranteeArtifact.from_bytes(
+                head.reader[f"guarantee{sidx}"],
+                table_cache=cache, huffman=huffman,
+            )
+    except ContainerFormatError as e:
+        raise ContainerFormatError(f"guarantee stream {sidx}: {e}") from e
+    if g.n_blocks != head.nb:
+        raise ContainerFormatError(
+            f"guarantee stream {sidx} covers {g.n_blocks} blocks, "
+            f"expected {head.nb}"
+        )
+    if g.basis.shape[0] != head.cfg.geometry.block_size:
+        raise ContainerFormatError(
+            f"guarantee stream {sidx} basis has dimension "
+            f"{g.basis.shape[0]}, expected block size "
+            f"{head.cfg.geometry.block_size}"
+        )
+    return g
 
-    decoders: list = [huffman] * s
-    if huffman is None and s > 1:
-        try:
-            coeff_streams = [
-                container.ContainerReader(g)["coeff"] for g in gblobs
-            ]
-        except (ContainerFormatError, KeyError):
-            coeff_streams = None  # let from_bytes raise the canonical error
-        if coeff_streams is not None:
+
+def _decode_species_guarantees(
+    head: _DecodedHead, indices: "list[int]", *, huffman=None
+) -> list:
+    """Entropy-decode the guarantee streams of ``indices`` only.
+
+    The selected coefficient streams decode in one lockstep chunk-parallel
+    chain walk (:func:`entropy.huffman_decode_many`) with codebook tables
+    served from the runtime cache; per-species parsing/validation then
+    consumes the pre-decoded symbols. When the batch walk cannot read a
+    stream, every species re-parses individually so the canonical
+    per-species ContainerFormatError surfaces (and healthy siblings are
+    still decodable)."""
+    coeffs: "Optional[list]" = None
+    if huffman is None and len(indices) > 1:
+        streams = _coeff_streams(head, indices)
+        if streams is not None:
             try:
                 coeffs = entropy.huffman_decode_many(
-                    coeff_streams, table_cache=cache
+                    streams, table_cache=head.runtime.table_cache
                 )
-            except (ValueError, struct.error) as e:
-                raise ContainerFormatError(
-                    f"corrupt guarantee stream: {e}"
-                ) from e
-            decoders = [lambda _blob, _out=c: _out for c in coeffs]
-
-    guarantees = [
-        gae.GuaranteeArtifact.from_bytes(
-            gblobs[sidx], table_cache=cache, huffman=decoders[sidx]
+            except (ValueError, struct.error):
+                coeffs = None  # per-species path raises the canonical error
+    return [
+        _species_guarantee(
+            head, sidx, huffman=huffman,
+            coeff_q=None if coeffs is None else coeffs[k],
         )
-        for sidx in range(s)
+        for k, sidx in enumerate(indices)
     ]
-    for sidx, g in enumerate(guarantees):
-        if g.n_blocks != head.nb:
-            raise ContainerFormatError(
-                f"guarantee stream {sidx} covers {g.n_blocks} blocks, "
-                f"expected {head.nb}"
-            )
-        if g.basis.shape[0] != geom.block_size:
-            raise ContainerFormatError(
-                f"guarantee stream {sidx} basis has dimension "
-                f"{g.basis.shape[0]}, expected block size {geom.block_size}"
-            )
-    return guarantees
+
+
+def _decode_guarantees(head: _DecodedHead, *, huffman=None) -> list:
+    """Entropy-decode every species' guarantee stream (full decode)."""
+    return _decode_species_guarantees(
+        head, list(range(head.shape[0])), huffman=huffman
+    )
 
 
 def _finish_artifact(head: _DecodedHead, *,
@@ -467,12 +673,19 @@ def stream_breakdown(blob: bytes) -> dict:
     r = ContainerReader(blob)
     sizes = r.stream_sizes()
     coeff = index = basis = 0
-    for name in sizes:
-        if name.startswith("guarantee"):
-            sub = ContainerReader(r[name]).stream_sizes()
-            coeff += sub.get("coeff", 0)
-            index += sub.get("index", 0)
-            basis += sub.get("basis", 0)
+    if r.version == container_format.FORMAT_VERSION_SELECTIVE:
+        if "guarantee" in r:
+            gdir = GuaranteeDirectory(r["guarantee"])
+            coeff, index, basis = (
+                gdir.coeff_total, gdir.index_total, gdir.basis_total
+            )
+    else:
+        for name in sizes:
+            if name.startswith("guarantee"):
+                sub = ContainerReader(r[name]).stream_sizes()
+                coeff += sub.get("coeff", 0)
+                index += sub.get("index", 0)
+                basis += sub.get("basis", 0)
     out = {
         "latent": sizes.get("latent", 0),
         "decoder": sizes.get("decoder", 0),
@@ -729,19 +942,33 @@ def reconstruct_reference(artifact: CompressedArtifact,
     return _finalize_field(corrected, artifact)
 
 
-def decompress(blob: bytes) -> np.ndarray:
+def decompress(blob: bytes, *, species=None, time_range=None) -> np.ndarray:
     """Standalone decode: container bytes -> (S, T, H, W) float32 field.
 
     Needs no codec instance and no fitted model — everything is
     reconstructed from the blob (the acceptance contract for the wire
     format). Raises :class:`ContainerFormatError` on malformed input.
 
-    Hot-path organization: the container head (meta, latents, parameters)
-    is parsed first and the fused NN decode dispatched asynchronously;
-    the per-species guarantee streams then entropy-decode species-parallel
-    on the host while the decode runs, and one replay dispatch applies the
-    corrections.
+    ``species`` (an index or a sequence of indices) and/or ``time_range``
+    (a half-open ``(t0, t1)`` frame window) select a slice to decode
+    randomly-accessed: only the requested guarantee streams are parsed and
+    entropy-decoded, the fused NN decode covers only the block rows of the
+    window, and the result is bitwise equal to slicing a full decode —
+    ``decompress(b, species=s, time_range=(t0, t1))
+    == decompress(b)[s, t0:t1]``. An integer ``species`` drops the species
+    axis, like numpy indexing. Repeated slicing of one blob is cheaper
+    through a reused :class:`PartialDecoder`.
+
+    Hot-path organization (full decode): the container head (meta,
+    latents, parameters) is parsed first and the fused NN decode
+    dispatched asynchronously; the per-species guarantee streams then
+    entropy-decode species-parallel on the host while the decode runs, and
+    one replay dispatch applies the corrections.
     """
+    if species is not None or time_range is not None:
+        return PartialDecoder(blob).decode(
+            species=species, time_range=time_range
+        )
     head = _decode_head(blob)
     vecs_dev = _fused_vecs(
         head.runtime, head.ae_params, head.corr_params, _latents32(head)
@@ -758,6 +985,221 @@ def decompress_reference(blob: bytes, conv_impl: str = "2d") -> np.ndarray:
     the fused path's bit-identity oracle; with ``"xla"`` it is the seed's
     full cost profile (the throughput benchmark's timing baseline)."""
     return reconstruct_reference(decode_artifact_reference(blob), conv_impl)
+
+
+# ---------------------------------------------------------------------------
+# selective decode: random access by species / time window
+# ---------------------------------------------------------------------------
+def _normalize_species(species, s: int) -> tuple[list, bool]:
+    """Selection -> (index list, squeeze-species-axis?)."""
+    if species is None:
+        return list(range(s)), False
+    if isinstance(species, (int, np.integer)):
+        species, squeeze = [int(species)], True
+    else:
+        species, squeeze = [int(x) for x in species], False
+    if not species:
+        raise ValueError("empty species selection")
+    idx = []
+    for x in species:
+        if not -s <= x < s:
+            raise ValueError(
+                f"species index {x} out of range for {s} species"
+            )
+        idx.append(x % s)
+    if len(set(idx)) != len(idx):
+        raise ValueError(f"duplicate species in selection {species}")
+    return idx, squeeze
+
+
+def _normalize_time_range(time_range, t: int) -> tuple[int, int]:
+    if time_range is None:
+        return 0, t
+    t0, t1 = (int(time_range[0]), int(time_range[1]))
+    if not 0 <= t0 < t1 <= t:
+        raise ValueError(
+            f"time_range {time_range!r} is not a half-open window "
+            f"inside [0, {t})"
+        )
+    return t0, t1
+
+
+# an empty coefficient stream is exactly the self-describing Huffman
+# header; any stream with >= 1 symbol is strictly longer (header grows by
+# 9 bytes per codebook symbol before any payload bit)
+_EMPTY_HUFFMAN_LEN = len(entropy.huffman_encode(np.zeros(0, np.int64)))
+
+
+def _any_corrections(head: _DecodedHead) -> bool:
+    """Does ANY species of the artifact carry stored corrections?
+
+    The full decode runs the correction-replay kernel over all species
+    whenever any one of them has corrections — so the selective path must
+    gate its replay on the same artifact-wide bit (not just the selected
+    species') to stay byte-identical to slicing the full decode. Decided
+    at the wire level without entropy-decoding anything: a species is
+    empty iff its coefficient stream is the bare Huffman header. Memoized
+    on the head — the v1 recompute would copy every species' payload per
+    query.
+    """
+    if head.any_corrections is not None:
+        return head.any_corrections
+    if head.version == container_format.FORMAT_VERSION_SELECTIVE:
+        gdir = _gdir(head)
+        result = any(
+            gdir.coeff_len(sidx) > _EMPTY_HUFFMAN_LEN
+            for sidx in range(gdir.n_species)
+        )
+    else:
+        result = False
+        for sidx in range(head.shape[0]):
+            try:
+                sizes = ContainerReader(
+                    head.reader[f"guarantee{sidx}"]
+                ).stream_sizes()
+            except ContainerFormatError:
+                # corrupt sibling: the full decode raises on this blob, so
+                # there is no full-decode output to match — skip it here
+                # and let the selected species' own parse decide
+                continue
+            if sizes.get("coeff", 0) > _EMPTY_HUFFMAN_LEN:
+                result = True
+                break
+    head.any_corrections = result
+    return result
+
+
+class PartialDecoder:
+    """Random-access decoder over one GBATC container blob.
+
+    Parses the container head exactly once (meta, latent stream, network
+    parameters — everything selection-independent), then serves
+    species/time-window slices on demand:
+
+    * only the **requested species'** guarantee streams are parsed and
+      entropy-decoded (lockstep-batched when several are requested at
+      once, memoized across ``decode`` calls);
+    * the fused NN decode runs on only the **block rows covering the
+      requested time window** (species cannot shrink this stage — the AE
+      decodes the species stack jointly per block);
+    * only the requested species' corrections replay through the batched
+      Pallas kernel, scattered from the CSR extents of the window alone.
+
+    Every slice is bitwise equal to slicing the corresponding full
+    decode. Works on v1 and v2 containers; the v2 combined guarantee
+    stream makes each species' byte extent addressable from its directory
+    alone, which is what makes :meth:`bytes_parsed` shrink with the
+    selection. A corrupt species stream raises
+    :class:`ContainerFormatError` naming it, and does not poison sibling
+    species requested in later calls.
+    """
+
+    def __init__(self, blob: bytes):
+        self._head = _decode_head(blob)
+        self._arts: dict[int, gae.GuaranteeArtifact] = {}
+
+    @property
+    def shape(self) -> tuple[int, int, int, int]:
+        """(S, T, H, W) of the encoded field."""
+        return self._head.shape
+
+    @property
+    def n_species(self) -> int:
+        return self._head.shape[0]
+
+    @property
+    def version(self) -> int:
+        return self._head.version
+
+    def _artifacts(self, idx: "list[int]") -> list:
+        missing = [s for s in idx if s not in self._arts]
+        if missing:
+            arts = _decode_species_guarantees(self._head, missing)
+            self._arts.update(zip(missing, arts))
+        return [self._arts[s] for s in idx]
+
+    def bytes_parsed(self, species=None) -> int:
+        """Container bytes a ``decode(species=...)`` call touches.
+
+        Counts the outer header/table, the selection-independent head
+        streams (meta, latent, decoder, correction), the guarantee
+        directory, and the selected species' coeff/index/basis extents.
+        With ``species=None`` this equals ``len(blob)`` on a v2 container
+        — every byte is then accounted to a purpose. Time windows reduce
+        compute, not bytes: the latent stream is a single sequential
+        entropy stream shared by all blocks.
+        """
+        head = self._head
+        idx, _ = _normalize_species(species, head.shape[0])
+        sizes = head.reader.stream_sizes()
+        n = (
+            head.reader.header_bytes
+            + sizes["meta"]
+            + sizes["latent"]
+            + sizes["decoder"]
+            + sizes.get("correction", 0)
+        )
+        if head.version == container_format.FORMAT_VERSION_SELECTIVE:
+            gdir = _gdir(head)
+            n += gdir.dir_bytes
+            n += sum(gdir.species_extent_bytes(s) for s in idx)
+        else:
+            n += sum(sizes[f"guarantee{s}"] for s in idx)
+        return n
+
+    def decode(self, species=None, time_range=None) -> np.ndarray:
+        """Decode a (species, time-window) slice of the stored field.
+
+        Returns ``(len(species), t1 - t0, H, W)`` float32 (the species
+        axis squeezed when ``species`` is a single integer), bitwise equal
+        to the same slice of the full decode.
+        """
+        head = self._head
+        s, t, h, w = head.shape
+        idx, squeeze = _normalize_species(species, s)
+        t0, t1 = _normalize_time_range(time_range, t)
+        geom = head.cfg.geometry
+        per_frame = (h // geom.ph) * (w // geom.pw)
+        tg0, tg1 = t0 // geom.bt, -(-t1 // geom.bt)
+        b0, b1 = tg0 * per_frame, tg1 * per_frame
+
+        # fused NN decode over the window's block rows only (async
+        # dispatch; rows are independent, so the slice is bit-transparent)
+        lat32 = dequantize(
+            head.latent_q[b0:b1], head.latent_bin
+        ).astype(np.float32)
+        vecs_dev = _fused_vecs(
+            head.runtime, head.ae_params, head.corr_params, lat32
+        )
+        # requested species' guarantee streams entropy-decode while the
+        # dispatched NN decode runs
+        arts = self._artifacts(idx)
+
+        import jax.numpy as jnp
+
+        vecs_sel = jnp.asarray(vecs_dev)[np.asarray(idx)]
+        # gate on the artifact-wide corrections bit, not the selection's:
+        # the full decode replays (x + C@U^T, C possibly all-zero) over
+        # every species whenever any species has corrections, and the
+        # selective output must be byte-identical to its slice
+        if _any_corrections(head):
+            engine = gae.default_engine()
+            dense, basis = engine.dense_corrections(
+                arts, (len(idx), b1 - b0, geom.block_size),
+                block_range=(b0, b1),
+            )
+            vecs_sel = engine.apply_device(
+                vecs_sel, jnp.asarray(dense), jnp.asarray(basis)
+            )
+        rec_blocks = blocking.vectors_as_blocks(np.asarray(vecs_sel), geom)
+        sub_shape = (len(idx), (tg1 - tg0) * geom.bt, h, w)
+        rec_normed = blocking.from_blocks(rec_blocks, sub_shape, geom)
+        out = (
+            rec_normed * head.norm_range[idx][:, None, None, None]
+            + head.norm_min[idx][:, None, None, None]
+        ).astype(np.float32)
+        out = out[:, t0 - tg0 * geom.bt : t1 - tg0 * geom.bt]
+        return out[0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -828,6 +1270,9 @@ class GBATCCodec:
         return rep.artifact.to_bytes(), rep
 
     @staticmethod
-    def decompress(blob: bytes) -> np.ndarray:
-        """Decode a container blob (stateless; see module :func:`decompress`)."""
-        return decompress(blob)
+    def decompress(blob: bytes, *, species=None, time_range=None) -> np.ndarray:
+        """Decode a container blob (stateless; see module :func:`decompress`).
+
+        ``species``/``time_range`` select a slice to decode
+        randomly-accessed, bitwise equal to slicing the full decode."""
+        return decompress(blob, species=species, time_range=time_range)

@@ -19,6 +19,18 @@ Containers nest: a stream's payload may itself be a container (the codec
 stores each species' guarantee artifact that way), and the framing overhead
 of every level is measurable, so "metadata bytes" in the breakdown is a
 real number rather than a ``8*S + 64`` guess.
+
+Two versions share this byte layout; the version field declares the
+*schema of the stream set* so readers pick the right interpretation:
+
+* version 1 — the original GBATC layout: one nested ``guarantee<s>``
+  container per species;
+* version 2 — the selective-decode layout: a single combined ``guarantee``
+  stream (CSR-of-CSR directory over species; see ``repro.codec``) whose
+  per-species byte extents are addressable from the directory alone.
+
+:class:`ContainerReader` accepts both and exposes ``.version``; anything
+else raises :class:`ContainerFormatError`.
 """
 
 from __future__ import annotations
@@ -27,6 +39,8 @@ import struct
 
 MAGIC = b"GBTC"
 FORMAT_VERSION = 1
+FORMAT_VERSION_SELECTIVE = 2
+SUPPORTED_VERSIONS = (FORMAT_VERSION, FORMAT_VERSION_SELECTIVE)
 
 _HEAD = struct.Struct("<4sHH")  # magic, version, n_streams
 _LEN = struct.Struct("<Q")
@@ -76,10 +90,10 @@ class ContainerReader:
         magic, version, n_streams = _HEAD.unpack_from(blob, 0)
         if magic != MAGIC:
             raise ContainerFormatError(f"bad magic {magic!r} (expected {MAGIC!r})")
-        if version != FORMAT_VERSION:
+        if version not in SUPPORTED_VERSIONS:
             raise ContainerFormatError(
                 f"unsupported container version {version} "
-                f"(this reader speaks version {FORMAT_VERSION})"
+                f"(this reader speaks versions {SUPPORTED_VERSIONS})"
             )
         off = _HEAD.size
         names: list[str] = []

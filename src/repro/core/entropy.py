@@ -506,12 +506,36 @@ def _parse_header(blob: bytes):
     return n, symbols, lengths, off
 
 
+def _check_payload_length(pos, len_at, payload_nbytes: int) -> None:
+    """The decoded chain must consume the payload *exactly*.
+
+    The encoder emits ``ceil(total_bits / 8)`` payload bytes; a stream
+    sliced short decodes into the zero padding and a stream sliced long
+    carries bytes no symbol accounts for. Both used to pass silently —
+    with length-framed sub-streams (the selective-decode container) either
+    one means the framing is corrupt, so fail here rather than hand back
+    plausible-looking symbols.
+    """
+    end_bits = int(pos[-1] + len_at[pos[-1]])
+    if (end_bits + 7) // 8 != payload_nbytes:
+        raise ValueError(
+            f"corrupt Huffman stream: {payload_nbytes} payload bytes on the "
+            f"wire but the symbol chain spans {end_bits} bits"
+        )
+
+
 def _prepare_stream(blob: bytes, table_cache: Optional[DecodeTableCache]):
     """Header/table/window phase of decode: everything except the
-    (sequential) codeword chain. Returns (n, symbols, sym_at, len_at)."""
+    (sequential) codeword chain. Returns
+    (n, symbols, sym_at, len_at, payload_nbytes)."""
     n, symbols, lengths, off = _parse_header(blob)
     if n == 0:
-        return 0, symbols, None, None
+        if len(blob) != off:
+            raise ValueError(
+                f"corrupt Huffman stream: empty stream carries "
+                f"{len(blob) - off} trailing payload bytes"
+            )
+        return 0, symbols, None, None, 0
     if table_cache is not None:
         table_bits, table_sym, table_len, long_codes = table_cache.get(lengths)
     else:
@@ -531,7 +555,7 @@ def _prepare_stream(blob: bytes, table_cache: Optional[DecodeTableCache]):
     len_at = table_len[win]
     if long_codes:
         _resolve_long_codes(bit_arr, sym_at, len_at, long_codes)
-    return int(n), symbols, sym_at, len_at
+    return int(n), symbols, sym_at, len_at, len(blob) - off
 
 
 def huffman_decode(
@@ -541,15 +565,19 @@ def huffman_decode(
 
     ``table_cache`` memoizes decode-table construction across calls that
     share a codebook (a decode runtime's steady state); ``None`` builds the
-    table per call.
+    table per call. The symbol chain must account for the payload length
+    exactly — truncated or over-long payloads raise rather than decode.
     """
-    n, symbols, sym_at, len_at = _prepare_stream(blob, table_cache)
+    n, symbols, sym_at, len_at, payload_nbytes = _prepare_stream(
+        blob, table_cache
+    )
     if n == 0:
         return np.zeros(0, dtype=np.int64)
     pos = _chain_positions(len_at, n)
     sym_idx = sym_at[pos]
     if (sym_idx < 0).any():
         raise ValueError("corrupt Huffman stream")
+    _check_payload_length(pos, len_at, payload_nbytes)
     return symbols[sym_idx]
 
 
@@ -570,7 +598,7 @@ def huffman_decode_many(
     past that the walk goes bandwidth-bound and big streams run alone.
     """
     prepped = [_prepare_stream(b, table_cache) for b in blobs]
-    live = [i for i, (n, _, _, _) in enumerate(prepped) if n > 0]
+    live = [i for i, (n, _, _, _, _) in enumerate(prepped) if n > 0]
     out: list[np.ndarray] = [
         np.zeros(0, dtype=np.int64) for _ in blobs
     ]
@@ -594,10 +622,11 @@ def huffman_decode_many(
         positions_by_idx.update(zip(group, pos_list))
     positions = [positions_by_idx[i] for i in live]
     for i, pos in zip(live, positions):
-        n, symbols, sym_at, _ = prepped[i]
+        n, symbols, sym_at, len_at, payload_nbytes = prepped[i]
         sym_idx = sym_at[pos]
         if (sym_idx < 0).any():
             raise ValueError("corrupt Huffman stream")
+        _check_payload_length(pos, len_at, payload_nbytes)
         out[i] = symbols[sym_idx]
     return out
 

@@ -130,15 +130,26 @@ class GuaranteeArtifact:
     # --- wire format ---------------------------------------------------
     _META = struct.Struct("<ddII")  # tau, coeff_bin, D, n_store
 
+    def wire_parts(self) -> tuple[bytes, bytes, bytes]:
+        """The (coeff, index, basis) payload streams — the single encode
+        site shared by the v1 nested container (:meth:`to_bytes`) and the
+        v2 combined guarantee stream (``repro.codec``)."""
+        return (
+            entropy.huffman_encode(self.coeff_q),
+            index_coding.encode_indices(self.index_offsets, self.index_flat),
+            np.ascontiguousarray(
+                self.basis.astype("<f4", copy=False)).tobytes(),
+        )
+
     def to_bytes(self) -> bytes:
         """Serialize to a nested container: coeff (Huffman), index (Fig. 2
-        bitmap), basis (raw little-endian float32), meta (tau/bin/dims)."""
+        bitmap), basis (raw little-endian float32), meta (tau/bin/dims) —
+        the container-v1 per-species layout, byte-stable across PRs."""
+        coeff, index, basis = self.wire_parts()
         w = container.ContainerWriter()
-        w.add("coeff", entropy.huffman_encode(self.coeff_q))
-        w.add("index", index_coding.encode_indices(self.index_offsets,
-                                                   self.index_flat))
-        w.add("basis", np.ascontiguousarray(
-            self.basis.astype("<f4", copy=False)).tobytes())
+        w.add("coeff", coeff)
+        w.add("index", index)
+        w.add("basis", basis)
         w.add("meta", self._META.pack(self.tau, self.coeff_bin,
                                       *self.basis.shape))
         return w.to_bytes()
@@ -159,8 +170,6 @@ class GuaranteeArtifact:
         a codebook; ``huffman`` overrides the coefficient decoder (the
         codec benchmark passes :func:`entropy.huffman_decode_ref` to time
         the retained pre-change deserialize path)."""
-        if huffman is None:
-            huffman = entropy.huffman_decode
         r = container.ContainerReader(blob)
         meta = r["meta"]
         if len(meta) != cls._META.size:
@@ -169,24 +178,52 @@ class GuaranteeArtifact:
                 f"expected {cls._META.size}"
             )
         tau, coeff_bin, d, n_store = cls._META.unpack(meta)
+        return cls.from_parts(
+            tau, coeff_bin, d, n_store, r["coeff"], r["index"], r["basis"],
+            table_cache=table_cache, huffman=huffman,
+        )
+
+    @classmethod
+    def from_parts(
+        cls,
+        tau: float,
+        coeff_bin: float,
+        d: int,
+        n_store: int,
+        coeff_stream: bytes,
+        index_stream: bytes,
+        raw_basis: bytes,
+        *,
+        table_cache: Optional[entropy.DecodeTableCache] = None,
+        huffman=None,
+        coeff_q: Optional[np.ndarray] = None,
+    ) -> "GuaranteeArtifact":
+        """Assemble + validate an artifact from its wire streams.
+
+        The single decode/validation site behind :meth:`from_bytes` (v1
+        nested containers) and the codec's v2 combined guarantee stream —
+        a malformed stream raises :class:`ContainerFormatError` here no
+        matter which framing delivered it. ``coeff_q`` supplies
+        pre-decoded coefficient symbols (the batched lockstep decode path)
+        and skips the per-stream Huffman walk."""
+        if huffman is None:
+            huffman = entropy.huffman_decode
         if not (np.isfinite(tau) and tau >= 0):
             raise container.ContainerFormatError(f"bad tau {tau!r}")
         if not (np.isfinite(coeff_bin) and coeff_bin >= 0):
             raise container.ContainerFormatError(f"bad coeff bin {coeff_bin!r}")
-        raw_basis = r["basis"]
         if len(raw_basis) != 4 * d * n_store:
             raise container.ContainerFormatError(
                 f"basis stream is {len(raw_basis)} bytes, "
                 f"expected {4 * d * n_store} for shape ({d}, {n_store})"
             )
         basis = np.frombuffer(raw_basis, dtype="<f4").reshape(d, n_store)
-        coeff_stream = r["coeff"]
-        index_stream = r["index"]
         try:
-            if huffman is entropy.huffman_decode:
-                coeff_q = huffman(coeff_stream, table_cache=table_cache)
-            else:
-                coeff_q = huffman(coeff_stream)
+            if coeff_q is None:
+                if huffman is entropy.huffman_decode:
+                    coeff_q = huffman(coeff_stream, table_cache=table_cache)
+                else:
+                    coeff_q = huffman(coeff_stream)
             offsets, flat = index_coding.decode_indices(index_stream)
         except (ValueError, struct.error) as e:
             # struct.error: truncated Huffman/index headers (not a ValueError)
@@ -669,15 +706,26 @@ class GuaranteeEngine:
 
     # -- decode path ----------------------------------------------------
     def dense_corrections(
-        self, arts: list[GuaranteeArtifact], shape: tuple[int, int, int]
+        self,
+        arts: list[GuaranteeArtifact],
+        shape: tuple[int, int, int],
+        block_range: Optional[tuple[int, int]] = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Scatter CSR artifacts into the kernel inputs (dense, basis_pad).
 
         Per-species flat scatter: CSR row ids come from one repeat over the
         per-block counts; species slices are disjoint (thread pool). Host
         work only — callers overlap it with in-flight device decode.
+
+        ``block_range=(b0, b1)`` scatters only that window of block rows
+        (``shape[1] == b1 - b0``): the CSR offsets address the window's
+        coefficient/index spans directly, so the cost scales with the
+        window's selection count, not the artifact's. Values are sliced
+        from the same streams the full scatter reads — per-element
+        arithmetic, hence bitwise equal to slicing a full scatter.
         """
         s, nb, d = shape
+        b0, b1 = (0, nb) if block_range is None else block_range
         dense = np.zeros((s, nb, d), np.float32)
         basis_pad = np.zeros((s, d, d), np.float32)
 
@@ -685,12 +733,17 @@ class GuaranteeEngine:
             art = arts[sidx]
             if art.coeff_q.size == 0:
                 return
-            rows = np.repeat(
-                np.arange(nb, dtype=np.int64), np.diff(art.index_offsets)
-            )
-            dense[sidx].reshape(-1)[rows * d + art.index_flat] = dequantize(
-                art.coeff_q, art.coeff_bin
-            ).astype(np.float32)
+            off = art.index_offsets
+            lo, hi = int(off[b0]), int(off[b1])
+            if hi > lo:
+                rows = np.repeat(
+                    np.arange(nb, dtype=np.int64), np.diff(off[b0 : b1 + 1])
+                )
+                dense[sidx].reshape(-1)[
+                    rows * d + art.index_flat[lo:hi]
+                ] = dequantize(
+                    art.coeff_q[lo:hi], art.coeff_bin
+                ).astype(np.float32)
             basis_pad[sidx, :, : art.basis.shape[1]] = art.basis
 
         list(_pool().map(work, range(s)))

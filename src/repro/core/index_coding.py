@@ -63,11 +63,21 @@ def encode_indices(offsets: np.ndarray, flat: np.ndarray) -> bytes:
 
 
 def decode_indices(blob: bytes) -> tuple[np.ndarray, np.ndarray]:
-    """Inverse of :func:`encode_indices`; returns (offsets, flat)."""
+    """Inverse of :func:`encode_indices`; returns (offsets, flat).
+
+    The payload must be exactly the ``ceil(total_bits / 8)`` bytes the
+    encoder emits — a length-framed slice that is short or long means the
+    framing (not just the content) is corrupt, and raises.
+    """
     n = int(np.frombuffer(blob, dtype="<u4", count=1)[0])
     lengths = np.frombuffer(blob, dtype="<u2", count=n, offset=4).astype(np.int64)
     payload = np.frombuffer(blob, dtype=np.uint8, offset=4 + 2 * n)
     total = int(lengths.sum())
+    if payload.size != (total + 7) // 8:
+        raise ValueError(
+            f"corrupt index stream: bitmap is {payload.size} bytes, "
+            f"lengths declare {(total + 7) // 8}"
+        )
     bits = np.unpackbits(payload, count=total) if total else np.zeros(0, np.uint8)
     ends = np.cumsum(lengths)
     starts = ends - lengths

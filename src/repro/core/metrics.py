@@ -24,12 +24,19 @@ def mean_nrmse(x: np.ndarray, x_rec: np.ndarray, species_axis: int = 0) -> float
 
 
 def psnr(x: np.ndarray, x_rec: np.ndarray) -> float:
+    """Range-referenced PSNR; the zero-range and zero-error cases are
+    handled explicitly (like :func:`nrmse`) instead of leaking a
+    ``log10(0)`` RuntimeWarning and a surprise ``-inf``/``nan``."""
     x = np.asarray(x, dtype=np.float64)
     x_rec = np.asarray(x_rec, dtype=np.float64)
     rng = float(x.max() - x.min())
     mse = float(np.mean((x - x_rec) ** 2))
     if mse == 0.0:
         return float("inf")
+    if rng == 0.0:
+        # constant-range reference with nonzero error: no finite dB value
+        # is meaningful, and log10(rng) would warn-and-return -inf
+        return float("-inf")
     return 20.0 * np.log10(rng) - 10.0 * np.log10(mse)
 
 

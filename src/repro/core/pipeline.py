@@ -25,9 +25,15 @@ Stages:
      the same batched kernel path;
   6. serialization through :mod:`repro.codec`: ``artifact.to_bytes()`` emits
      the versioned container (latent stream + decoder params + correction
-     params + per-species {coeffs, CSR index bitmap, basis} + metadata) and
+     params + ONE combined guarantee stream — a CSR-of-CSR directory over
+     species fronting the {coeff, CSR index bitmap, basis} sub-streams,
+     container v2; v1's per-species nested containers still decode) and
      ``byte_breakdown`` is a view over the container's *measured* stream
      lengths — ``breakdown["total"] == len(blob)`` exactly, no estimates.
+     Consumers that want one species or a time window decode the blob
+     randomly-accessed via ``repro.codec.decompress(blob, species=...,
+     time_range=...)`` / ``repro.codec.PartialDecoder`` — bitwise equal to
+     slicing the full decode, without parsing unselected streams.
 
 This class is the fit/orchestration layer; the wire format and the
 standalone decode path live in :mod:`repro.codec` (``compress`` returns an

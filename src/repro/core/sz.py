@@ -15,6 +15,8 @@ half-stride grid are predicted *from already-reconstructed* coarser points
 from __future__ import annotations
 
 import dataclasses
+import struct
+from typing import Optional
 
 import numpy as np
 
@@ -25,22 +27,89 @@ _QUANT_RADIUS = 1 << 20  # outliers beyond this are stored raw
 
 @dataclasses.dataclass
 class SZArtifact:
-    recon: np.ndarray
+    recon: Optional[np.ndarray]  # encoder-side reconstruction (not on the wire)
     quant_stream: np.ndarray  # concatenated per-pass quantizer indices
     outlier_values: np.ndarray
     anchor_values: np.ndarray
     abs_eb: float
     shape: tuple[int, ...]
 
-    def payload_bytes(self) -> int:
+    # header: shape (3 x u32), abs_eb f64, n_quant u64, n_outliers u32
+    _WIRE_HEAD = struct.Struct("<IIIdQI")
+
+    def wire_streams(self) -> dict[str, bytes]:
+        """The exact byte streams a standalone decoder replays.
+
+        Outlier *positions* are not stored: the decoder recovers them from
+        the quantizer stream (``q == radius + 1`` marks an outlier), so the
+        outlier stream carries only the values — lossless float64, because
+        the decode path replays them verbatim into the reconstruction.
+        """
         huff = entropy.huffman_encode(self.quant_stream)
-        body = entropy.zstd_bytes(huff)
-        return (
-            len(body)
-            + self.outlier_values.size * 8  # value f32 + position u32
-            + self.anchor_values.size * 8  # anchors stored lossless (f64)
-            + 32  # header: shape, eb, counts
+        return {
+            "header": self._WIRE_HEAD.pack(
+                *self.shape, self.abs_eb, self.quant_stream.size,
+                self.outlier_values.size,
+            ),
+            "quant": entropy.zstd_bytes(huff),
+            "outliers": np.ascontiguousarray(
+                self.outlier_values.astype("<f8", copy=False)).tobytes(),
+            "anchors": np.ascontiguousarray(
+                self.anchor_values.astype("<f8", copy=False)).tobytes(),
+        }
+
+    def to_bytes(self) -> bytes:
+        """Serialize the replayable streams (``payload_bytes`` == length)."""
+        return b"".join(self.wire_streams().values())
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "SZArtifact":
+        """Inverse of :func:`to_bytes` (``recon`` is decode-side ``None``)."""
+        head = cls._WIRE_HEAD
+        if len(blob) < head.size:
+            raise ValueError(f"SZ blob truncated: {len(blob)} bytes")
+        t, h, w, abs_eb, n_quant, n_out = head.unpack_from(blob, 0)
+        shape = (t, h, w)
+        n_anchor = int(np.prod([-(-dim // _anchor_stride(shape))
+                                for dim in shape]))
+        tail = 8 * (n_out + n_anchor)
+        if len(blob) < head.size + tail:
+            raise ValueError("SZ blob truncated: outlier/anchor streams")
+        try:
+            quant = entropy.huffman_decode(
+                entropy.zstd_unbytes(blob[head.size : len(blob) - tail])
+            )
+        except ValueError:
+            raise
+        except Exception as e:  # zlib.error / zstd errors are backend types
+            raise ValueError(f"corrupt SZ quantizer stream: {e}") from e
+        if quant.size != n_quant:
+            raise ValueError(
+                f"SZ quantizer stream decodes to {quant.size} symbols, "
+                f"expected {n_quant}"
+            )
+        off = len(blob) - tail
+        outliers = np.frombuffer(blob, dtype="<f8", count=n_out, offset=off)
+        anchors = np.frombuffer(
+            blob, dtype="<f8", count=n_anchor, offset=off + 8 * n_out
         )
+        return cls(
+            recon=None,
+            quant_stream=quant,
+            outlier_values=outliers.copy(),
+            anchor_values=anchors.copy(),
+            abs_eb=float(abs_eb),
+            shape=shape,
+        )
+
+    def payload_bytes(self) -> int:
+        """Measured size of the replayable wire streams (== ``len(to_bytes())``).
+
+        Each outlier costs its lossless float64 value (8 bytes); positions
+        are derived from the quantizer stream at decode time, so charging
+        them here would double-count bytes the decoder never reads.
+        """
+        return sum(len(s) for s in self.wire_streams().values())
 
 
 def _interp_pass(
@@ -133,6 +202,11 @@ class _StreamReader:
         return out
 
 
+def _anchor_stride(shape: tuple[int, ...]) -> int:
+    """Anchor-grid stride, shared by compress/decompress/deserialize."""
+    return 1 << max(1, int(np.floor(np.log2(max(2, min(shape))))))
+
+
 def _sweep(recon, orig, abs_eb, decode_stream=None):
     """Shared compress/decompress level sweep (decompressor-consistent)."""
     shape = recon.shape
@@ -159,8 +233,7 @@ def compress(data: np.ndarray, abs_eb: float) -> SZArtifact:
     assert data.ndim == 3, "SZ baseline operates on (T, H, W) fields"
     orig = data.astype(np.float64)
     recon = np.zeros_like(orig)
-    max_level = max(1, int(np.floor(np.log2(max(2, min(orig.shape))))))
-    stride = 1 << max_level
+    stride = _anchor_stride(orig.shape)
     anchors = orig[::stride, ::stride, ::stride].copy()
     recon[::stride, ::stride, ::stride] = anchors  # anchors stored lossless
     quant_chunks, outliers, _ = _sweep(recon, orig, abs_eb)
@@ -180,8 +253,7 @@ def compress(data: np.ndarray, abs_eb: float) -> SZArtifact:
 
 def decompress(art: SZArtifact) -> np.ndarray:
     recon = np.zeros(art.shape, dtype=np.float64)
-    max_level = max(1, int(np.floor(np.log2(max(2, min(art.shape))))))
-    stride = 1 << max_level
+    stride = _anchor_stride(art.shape)
     anchor_shape = recon[::stride, ::stride, ::stride].shape
     recon[::stride, ::stride, ::stride] = art.anchor_values.reshape(anchor_shape)
     reader = _StreamReader(art.quant_stream, art.outlier_values)
@@ -192,8 +264,15 @@ def decompress(art: SZArtifact) -> np.ndarray:
 def compress_species(
     data: np.ndarray, abs_eb_per_species: np.ndarray
 ) -> tuple[np.ndarray, int]:
-    """Compress (S, T, H, W) per species; returns (recon, total_bytes)."""
-    recon = np.empty_like(data, dtype=np.float32)
+    """Compress (S, T, H, W) per species; returns (recon, total_bytes).
+
+    The reconstruction stays float64: the per-point |x - recon| <= eb
+    guarantee is established in float64, and a float32 cast adds up to half
+    a float32 ulp of the field's magnitude — on large-offset fields that
+    alone exceeds a tight bound (measured: max err 1.14e-3 > eb 6.97e-4),
+    which would make the SZ baseline report bounds it does not honor.
+    """
+    recon = np.empty(data.shape, dtype=np.float64)
     total = 0
     for sidx in range(data.shape[0]):
         art = compress(data[sidx], float(abs_eb_per_species[sidx]))

@@ -43,6 +43,31 @@ def blob_and_report(fitted_codec):
     return fitted_codec.compress_report(target_nrmse=1e-3)
 
 
+def _truncate_species_coeff(payload: bytes, sidx: int, keep: int) -> bytes:
+    """Rebuild a combined (v2) guarantee stream with species ``sidx``'s
+    coeff payload cut to ``keep`` bytes, directory record updated to match
+    — the framing stays valid, only that one stream is corrupt."""
+    head, rec = codec._GDIR_HEAD, codec._GDIR_REC
+    (s,) = head.unpack_from(payload, 0)
+    recs = [
+        list(r)
+        for r in rec.iter_unpack(payload[head.size : head.size + s * rec.size])
+    ]
+    off = head.size + s * rec.size
+    parts: dict[int, list[bytes]] = {0: [], 1: [], 2: []}
+    for kind in range(3):
+        for i in range(s):
+            ln = recs[i][4 + kind]
+            parts[kind].append(payload[off : off + ln])
+            off += ln
+    parts[0][sidx] = parts[0][sidx][:keep]
+    recs[sidx][4] = keep
+    return b"".join(
+        [head.pack(s)] + [rec.pack(*r) for r in recs]
+        + parts[0] + parts[1] + parts[2]
+    )
+
+
 class TestContainer:
     def test_round_trip(self):
         w = ContainerWriter()
@@ -170,6 +195,24 @@ class TestCodecRoundTrip:
             assert per.max() <= target * (1 + 1e-3)
             assert len(blob) == rep.bytes_breakdown["total"]
 
+    def test_v1_container_back_compat(self, blob_and_report):
+        """A v1 (per-species nested guarantee) container must decode
+        bit-identically to the v2 combined layout through the same entry
+        point, and shave framing bytes in v2."""
+        blob, rep = blob_and_report
+        blob_v1 = codec.encode(rep.artifact, version=1)
+        assert ContainerReader(blob_v1).version == 1
+        assert ContainerReader(blob).version == 2
+        assert len(blob) < len(blob_v1)  # combined layout shaves framing
+        np.testing.assert_array_equal(
+            codec.decompress(blob_v1), codec.decompress(blob)
+        )
+        bb1, bb2 = codec.stream_breakdown(blob_v1), codec.stream_breakdown(blob)
+        for key in ("latent", "decoder", "correction", "coeff", "index",
+                    "basis"):
+            assert bb1[key] == bb2[key]
+        assert bb1["total"] == len(blob_v1) and bb2["total"] == len(blob)
+
     def test_compress_with_data_fits_first(self, small_data):
         c = codec.GBATCCodec(
             PipelineConfig(ae_steps=40, corr_steps=20, conv_channels=(16, 32))
@@ -282,7 +325,7 @@ class TestCorruption:
         ZeroDivisionError / model-construction crashes downstream."""
         blob, _ = blob_and_report
         r = ContainerReader(blob)
-        w = ContainerWriter()
+        w = ContainerWriter(version=r.version)
         for name in r.names:
             payload = r[name]
             if name == "meta":
@@ -294,7 +337,7 @@ class TestCorruption:
     def _rebuild(self, blob, mutate):
         """Re-emit the outer container with ``mutate(name, payload)``."""
         r = ContainerReader(blob)
-        w = ContainerWriter()
+        w = ContainerWriter(version=r.version)
         for name in r.names:
             res = mutate(name, r[name])
             if res is not None:
@@ -303,16 +346,13 @@ class TestCorruption:
 
     def test_truncated_nested_coeff_raises_format_error(self, blob_and_report):
         """A coeff payload cut inside its Huffman header must raise
-        ContainerFormatError, not leak struct.error."""
+        ContainerFormatError, not leak struct.error (v2: the species'
+        directory record is shrunk to match, so only that stream is bad)."""
         blob, _ = blob_and_report
 
         def mutate(name, payload):
-            if name == "guarantee0":
-                sub = ContainerReader(payload)
-                sw = ContainerWriter()
-                for n in sub.names:
-                    sw.add(n, sub[n][:8] if n == "coeff" else sub[n])
-                return sw.to_bytes()
+            if name == "guarantee":
+                return _truncate_species_coeff(payload, sidx=0, keep=8)
             return payload
 
         with pytest.raises(ContainerFormatError):
@@ -328,22 +368,18 @@ class TestCorruption:
             codec.decompress(w.to_bytes())
 
     def test_nan_coeff_bin_raises(self, blob_and_report):
-        """A NaN coefficient bin in a guarantee meta stream must raise, not
-        scatter NaN corrections into the decoded field."""
+        """A NaN coefficient bin in a guarantee directory record must
+        raise, not scatter NaN corrections into the decoded field."""
         import struct
 
         blob, _ = blob_and_report
 
         def mutate(name, payload):
-            if name == "guarantee0":
-                sub = ContainerReader(payload)
-                sw = ContainerWriter()
-                for n in sub.names:
-                    p = sub[n]
-                    if n == "meta":  # <ddII: tau, coeff_bin, D, n_store
-                        p = p[:8] + struct.pack("<d", float("nan")) + p[16:]
-                    sw.add(n, p)
-                return sw.to_bytes()
+            if name == "guarantee":
+                # record 0 starts after the u32 species count: <ddII...>
+                off = 4 + 8  # skip count + tau
+                return (payload[:off] + struct.pack("<d", float("nan"))
+                        + payload[off + 8:])
             return payload
 
         with pytest.raises(ContainerFormatError, match="coeff bin"):
@@ -353,21 +389,41 @@ class TestCorruption:
         """A guarantee basis whose row dimension disagrees with the block
         size must fail validation, not crash in the decode replay."""
         blob, rep = blob_and_report
-        nb = rep.artifact.species_guarantees[0].n_blocks
-        wrong_d = gae.GuaranteeArtifact.empty(nb=nb, d=40, tau=1.0).to_bytes()
+        arts = rep.artifact.species_guarantees
+        nb = arts[0].n_blocks
+        wrong_d = codec.pack_guarantee_stream(
+            [gae.GuaranteeArtifact.empty(nb=nb, d=40, tau=1.0)
+             for _ in arts]
+        )
         w = self._rebuild(
             blob,
-            lambda name, payload: wrong_d if name == "guarantee0" else payload,
+            lambda name, payload: wrong_d if name == "guarantee" else payload,
         )
         with pytest.raises(ContainerFormatError, match="block size"):
             codec.decompress(w.to_bytes())
 
-    def test_corrupt_nested_guarantee_raises(self, blob_and_report):
-        """Corrupting a nested guarantee container's magic must surface as a
-        ContainerFormatError, not a silent mis-decode."""
+    def test_corrupt_guarantee_directory_raises(self, blob_and_report):
+        """A guarantee stream whose directory disagrees with its payload
+        bytes must surface as ContainerFormatError, not a mis-slice."""
         blob, _ = blob_and_report
         r = ContainerReader(blob)
-        w = ContainerWriter()
+        w = ContainerWriter(version=r.version)
+        for name in r.names:
+            payload = r[name]
+            if name == "guarantee":
+                # inflate the species count: directory now overruns
+                payload = (99).to_bytes(4, "little") + payload[4:]
+            w.add(name, payload)
+        with pytest.raises(ContainerFormatError):
+            codec.decompress(w.to_bytes())
+
+    def test_corrupt_nested_guarantee_raises_v1(self, blob_and_report):
+        """v1 layout: corrupting a nested guarantee container's magic must
+        surface as a ContainerFormatError through the same entry point."""
+        _, rep = blob_and_report
+        blob = codec.encode(rep.artifact, version=1)
+        r = ContainerReader(blob)
+        w = ContainerWriter(version=r.version)
         for name in r.names:
             payload = r[name]
             if name == "guarantee0":

@@ -227,7 +227,12 @@ class TestPCA:
         assert np.allclose(c @ u.T, r, atol=1e-10)
 
 
+@pytest.mark.filterwarnings("error")
 class TestMetrics:
+    """Runs with warnings-as-errors: the next silent ``log10(0)`` /
+    divide-by-zero in a metric fails loudly instead of leaking ``-inf``
+    with a RuntimeWarning into a benchmark table."""
+
     def test_nrmse_zero(self):
         x = np.random.default_rng(0).normal(size=(4, 5))
         assert metrics.nrmse(x, x) == 0.0
@@ -240,12 +245,28 @@ class TestMetrics:
         b = metrics.nrmse(1e6 * x, 1e6 * (x + noise))
         assert np.isclose(a, b, rtol=1e-6)
 
+    def test_nrmse_constant_field(self):
+        x = np.full((6, 7), 2.5)
+        assert metrics.nrmse(x, x.copy()) == 0.0
+        assert metrics.nrmse(x, x + 1.0) == float("inf")
+
     def test_psnr_monotone(self):
         rng = np.random.default_rng(2)
         x = rng.normal(size=(64, 64))
         small = x + 1e-4 * rng.normal(size=x.shape)
         big = x + 1e-2 * rng.normal(size=x.shape)
         assert metrics.psnr(x, small) > metrics.psnr(x, big)
+
+    def test_psnr_constant_field(self):
+        """rng == 0 with nonzero MSE must be handled explicitly (like
+        nrmse), not reach log10(0) and warn its way to -inf."""
+        x = np.full((8, 8), 3.0)
+        assert metrics.psnr(x, x.copy()) == float("inf")
+        assert metrics.psnr(x, x + 0.5) == float("-inf")
+
+    def test_psnr_exact_match_any_range(self):
+        x = np.random.default_rng(4).normal(size=(16, 16))
+        assert metrics.psnr(x, x.copy()) == float("inf")
 
     def test_ssim_identity_and_noise(self):
         rng = np.random.default_rng(3)

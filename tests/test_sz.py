@@ -66,3 +66,69 @@ class TestSZ:
         art = sz.compress(data, eb)
         assert np.abs(art.recon.astype(np.float64) - data).max() <= eb * (1 + 1e-9)
         np.testing.assert_allclose(sz.decompress(art), art.recon, atol=1e-12)
+
+
+class TestSZBoundDtype:
+    """Regression: the per-species wrapper must not weaken the bound."""
+
+    def test_large_offset_tight_bound_held(self):
+        """fp32-casting the reconstruction used to break the pointwise
+        bound on large-offset fields (measured on a large-offset field:
+        max err 1.14e-3 > eb 6.97e-4) — the reconstruction must stay in a
+        bound-honoring dtype."""
+        data = (_smooth_field(7, (8, 24, 24)) + 4096.0).astype(np.float32)
+        eb = 2e-4
+        recon, total = sz.compress_species(data[None], np.array([eb]))
+        assert recon.dtype == np.float64
+        err = np.abs(recon[0] - data.astype(np.float64)).max()
+        assert err <= eb * (1 + 1e-9)
+        assert total > 0
+
+    def test_fp32_cast_alone_breaks_this_bound(self):
+        """Documents the original bug: on this field, rounding the valid
+        reconstruction to fp32 already exceeds the bound."""
+        data = (_smooth_field(7, (8, 24, 24)) + 4096.0).astype(np.float32)
+        eb = 2e-4
+        recon, _ = sz.compress_species(data[None], np.array([eb]))
+        cast_err = np.abs(
+            recon.astype(np.float32)[0].astype(np.float64)
+            - data.astype(np.float64)
+        ).max()
+        assert cast_err > eb
+
+
+class TestSZAccounting:
+    """payload_bytes must equal the replayable wire-stream size exactly."""
+
+    def test_accounting_equals_wire_length(self):
+        data = _smooth_field(4, (8, 16, 16))
+        data[3, 7, 9] = 1e9  # force the outlier path into the accounting
+        art = sz.compress(data, 1e-7)
+        assert art.outlier_values.size >= 1
+        wire = art.to_bytes()
+        assert len(wire) == art.payload_bytes()
+        streams = art.wire_streams()
+        assert len(streams["outliers"]) == 8 * art.outlier_values.size
+        assert sum(map(len, streams.values())) == art.payload_bytes()
+
+    def test_wire_round_trip_replays(self):
+        """A decoder holding only the wire bytes reproduces the encoder's
+        reconstruction — proof the counted streams are the replayable
+        ones (outlier positions derive from the quantizer stream)."""
+        data = _smooth_field(4, (8, 16, 16))
+        data[2, 3, 5] = -1e8
+        art = sz.compress(data, 1e-6)
+        back = sz.SZArtifact.from_bytes(art.to_bytes())
+        assert back.recon is None
+        np.testing.assert_array_equal(back.quant_stream, art.quant_stream)
+        np.testing.assert_array_equal(back.outlier_values, art.outlier_values)
+        np.testing.assert_array_equal(back.anchor_values, art.anchor_values)
+        np.testing.assert_array_equal(sz.decompress(back), sz.decompress(art))
+        np.testing.assert_allclose(sz.decompress(back), art.recon, atol=1e-12)
+
+    def test_truncated_wire_raises(self):
+        art = sz.compress(_smooth_field(5, (8, 12, 10)), 1e-3)
+        wire = art.to_bytes()
+        for cut in (16, len(wire) - 4):
+            with pytest.raises(ValueError):
+                sz.SZArtifact.from_bytes(wire[:cut])
