@@ -100,7 +100,11 @@ def run(quick: bool = True, seed: int = 1):
             )
         )
         # -- deserialize: parse + entropy decode + NN decode + replay ------
-        deserialize_s = _time(lambda: codec.decompress(blob))
+        # (head memo cleared per call: this times the cold wire decode,
+        # not the digest-cache-served steady state)
+        deserialize_s = _time(
+            lambda: (codec.clear_decode_cache(), codec.decompress(blob))
+        )
 
         rows.append({
             "target_nrmse": target,

@@ -1,0 +1,234 @@
+"""Time-sharded latent stream (container v3) benchmark.
+
+The last random-access gap: through PR 4 every byte bucket was
+random-access *except* the latent stream — one sequential Huffman chain,
+so a time-window query still entropy-decoded all latents. Container v3
+shards the chain along the time axis (shared codebook, per-shard chains,
+byte-extent directory); this benchmark measures what that buys:
+
+* **latent bytes entropy-decoded vs window size** — the O(window) claim:
+  a 4-frame window must touch a ~window-sized fraction of the latent
+  chain bytes, not O(T) (v2's single chain is the contrast row);
+* **window-decode wall clock vs shard size** — warm PartialDecoder
+  queries across shard granularities, plus the v2 baseline;
+* **parallel vs serial shard encode throughput** — shard chains are
+  independent, so the packer threads them.
+
+Before any number is reported, the equivalence gates are asserted:
+
+* full v3 decode is **byte-identical** to the v2 decode of the same fit,
+  at every shard size measured;
+* every windowed v3 decode is bitwise the slice of the full decode.
+
+Writes BENCH_shards.json (repo root) + results/bench/shards.csv.
+
+  PYTHONPATH=src python -m benchmarks.bench_shards
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import codec  # noqa: E402
+from repro.core.container import ContainerReader  # noqa: E402
+from repro.core.pipeline import PipelineConfig  # noqa: E402
+from repro.data import s3d  # noqa: E402
+
+TARGET = 3e-4  # tight bound: the serving configuration
+WINDOW_FRAMES = 4
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_shards.json")
+OUT_CSV = "results/bench/shards.csv"
+
+
+def _time(fn, repeat=5):
+    """Best-of-N wall time: robust to CPU contention in shared runners."""
+    fn()  # warmup (jit compile / caches)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True, seed: int = 1):
+    scfg = (
+        s3d.S3DConfig(n_species=12, n_time=16, height=80, width=80, seed=seed)
+        if quick
+        else s3d.S3DConfig(n_species=16, n_time=24, height=120, width=120,
+                           seed=seed)
+    )
+    data = s3d.generate(scfg)["species"]
+    gbatc = codec.GBATCCodec(
+        PipelineConfig(
+            conv_channels=(16, 32),
+            ae_steps=150 if quick else 800,
+            corr_steps=80 if quick else 400,
+        )
+    )
+    t0 = time.time()
+    gbatc.fit(data)
+    fit_s = time.time() - t0
+    blob_v3, rep = gbatc.compress_report(target_nrmse=TARGET)
+    art = rep.artifact
+    blob_v2 = codec.encode(art, version=2)
+    t = data.shape[1]
+    bt = art.cfg.geometry.bt
+    n_tgroups = t // bt
+    shard_sizes = sorted({1, 2, n_tgroups})
+    window = (t // 4, t // 4 + WINDOW_FRAMES)
+
+    # -- equivalence gates: asserted before any number is reported -------
+    full_v2 = codec.decompress(blob_v2)
+    blobs = {tg: codec.encode(art, version=3, shard_tgroups=tg)
+             for tg in shard_sizes}
+    assert blobs[codec.DEFAULT_SHARD_TGROUPS] == blob_v3  # default layout
+    for tg, b in blobs.items():
+        full_v3 = codec.decompress(b)
+        assert full_v3.tobytes() == full_v2.tobytes(), \
+            f"v3 (shard_tgroups={tg}) full decode != v2 decode byte-for-byte"
+        win = codec.decompress(b, time_range=window)
+        assert np.array_equal(win, full_v3[:, window[0]:window[1]]), \
+            f"v3 (shard_tgroups={tg}) window decode != full slice"
+
+    # -- latent bytes entropy-decoded vs window size (O(window) gate) ----
+    pd1 = codec.PartialDecoder(blobs[1])
+    latent_total = pd1.latent_bytes_parsed()
+    windows = []
+    frames = WINDOW_FRAMES
+    while frames <= t:
+        w = (0, frames)
+        windows.append({
+            "frames": frames,
+            "latent_bytes": int(pd1.latent_bytes_parsed(w)),
+            "fraction_of_total": pd1.latent_bytes_parsed(w) / latent_total,
+        })
+        frames *= 2
+    if windows[-1]["frames"] != t:
+        windows.append({
+            "frames": t,
+            "latent_bytes": int(latent_total),
+            "fraction_of_total": 1.0,
+        })
+    v2_latent = ContainerReader(blob_v2).stream_sizes()["latent"]
+    b4 = windows[0]["latent_bytes"]
+    # the acceptance contract: a 4-frame window's latent entropy work
+    # scales with the window, not with T (v2 walks the whole chain)
+    assert b4 <= latent_total * (WINDOW_FRAMES / t + 0.2), (
+        f"4-frame window entropy-decodes {b4} of {latent_total} latent "
+        f"bytes — not O(window)"
+    )
+    bytes_monotone = all(
+        a["latent_bytes"] <= b["latent_bytes"]
+        for a, b in zip(windows, windows[1:])
+    )
+    assert bytes_monotone, "latent bytes not monotone in window size"
+
+    # -- window-decode wall clock vs shard size --------------------------
+    per_shard = []
+    for tg in shard_sizes:
+        pd = codec.PartialDecoder(blobs[tg])
+        pd.decode(time_range=window)  # warm the shard memo + jit
+        warm_s = _time(lambda pd=pd: pd.decode(time_range=window))
+        cold_s = _time(lambda b=blobs[tg]: (
+            codec.clear_decode_cache(),
+            codec.decompress(b, time_range=window),
+        ))
+        per_shard.append({
+            "shard_tgroups": tg,
+            "blob_bytes": len(blobs[tg]),
+            "latent_window_bytes": int(
+                codec.PartialDecoder(blobs[tg]).latent_bytes_parsed(window)
+            ),
+            "window_decode_warm_ms": warm_s * 1e3,
+            "window_decode_cold_ms": cold_s * 1e3,
+        })
+    pd_v2 = codec.PartialDecoder(blob_v2)
+    pd_v2.decode(time_range=window)
+    v2_warm_s = _time(lambda: pd_v2.decode(time_range=window))
+    v2_cold_s = _time(lambda: (
+        codec.clear_decode_cache(),
+        codec.decompress(blob_v2, time_range=window),
+    ))
+
+    # -- parallel vs serial shard encode ---------------------------------
+    # tile the fitted latents so the pack is long enough to time sanely
+    reps = max(1, (1 << 21) // max(art.latent_q.size, 1))
+    lat_big = np.tile(art.latent_q, (reps, 1))
+    shard_rows = max(1, lat_big.shape[0] // (8 * max(1, os.cpu_count() or 1)))
+    serial_s = _time(lambda: codec.pack_latent_stream(
+        lat_big, shard_rows, parallel=False), repeat=3)
+    parallel_s = _time(lambda: codec.pack_latent_stream(
+        lat_big, shard_rows, parallel=True), repeat=3)
+    assert codec.pack_latent_stream(lat_big, shard_rows, parallel=True) == \
+        codec.pack_latent_stream(lat_big, shard_rows, parallel=False), \
+        "parallel shard pack != serial shard pack"
+    sym_mb = lat_big.nbytes / 1e6
+
+    summary = {
+        "problem": {
+            "shape": list(data.shape),
+            "raw_bytes": int(data.nbytes),
+            "target_nrmse": TARGET,
+            "window": list(window),
+            "seed": seed,
+            "quick": quick,
+        },
+        "fit_s": fit_s,
+        "blob_bytes_v2": len(blob_v2),
+        "blob_bytes_v3_default": len(blob_v3),
+        "v3_framing_overhead_bytes": len(blob_v3) - len(blob_v2),
+        "latent_bytes_total": int(latent_total),
+        "latent_bytes_v2_stream": int(v2_latent),
+        "latent_bytes_vs_window": windows,
+        "window_frames": WINDOW_FRAMES,
+        "window_latent_fraction": b4 / latent_total,
+        "per_shard_size": per_shard,
+        "v2_window_decode_warm_ms": v2_warm_s * 1e3,
+        "v2_window_decode_cold_ms": v2_cold_s * 1e3,
+        "shard_encode": {
+            "symbol_mb": sym_mb,
+            "shard_rows": int(shard_rows),
+            "serial_ms": serial_s * 1e3,
+            "parallel_ms": parallel_s * 1e3,
+            "serial_MBps": sym_mb / serial_s,
+            "parallel_MBps": sym_mb / parallel_s,
+            "parallel_speedup": serial_s / parallel_s,
+        },
+        "equivalence_gates_passed": True,
+        "v3_equals_v2_byte_for_byte": True,
+    }
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+    os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
+    with open(OUT_CSV, "w") as f:
+        f.write("shard_tgroups,blob_bytes,latent_window_bytes,"
+                "window_decode_warm_ms,window_decode_cold_ms\n")
+        for row in per_shard:
+            f.write(",".join(str(row[k]) for k in (
+                "shard_tgroups", "blob_bytes", "latent_window_bytes",
+                "window_decode_warm_ms", "window_decode_cold_ms")) + "\n")
+    print(
+        f"[bench_shards] {WINDOW_FRAMES}-frame window entropy-decodes "
+        f"{b4}/{latent_total} latent bytes "
+        f"({summary['window_latent_fraction']:.0%}; v2 chain walks 100%) | "
+        f"window decode warm {per_shard[0]['window_decode_warm_ms']:.0f}ms "
+        f"(shard=1) vs v2 {v2_warm_s * 1e3:.0f}ms | shard encode "
+        f"{summary['shard_encode']['serial_MBps']:.0f} -> "
+        f"{summary['shard_encode']['parallel_MBps']:.0f} MB/s "
+        f"({summary['shard_encode']['parallel_speedup']:.1f}x) "
+        f"-> {OUT_JSON}"
+    )
+    return summary
+
+
+if __name__ == "__main__":
+    run(quick="--full" not in sys.argv)

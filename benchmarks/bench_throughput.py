@@ -179,7 +179,12 @@ def run(quick: bool = True, seed: int = 1):
     )
     assert per.max() <= TARGET * (1 + 1e-3), "bound violated on wire"
 
-    dec_new_s = _best_of(lambda: codec.decompress(blob))
+    # clear the head memo per call so the number keeps meaning "cold-blob
+    # standalone decode" (parse + entropy + NN + replay), comparable with
+    # the retained baseline rather than the cache-served steady state
+    dec_new_s = _best_of(
+        lambda: (codec.clear_decode_cache(), codec.decompress(blob))
+    )
     dec_ref_s = _best_of(
         lambda: codec.decompress_reference(blob, conv_impl="xla"), repeat=3
     )

@@ -155,6 +155,29 @@ def bench_partial_decode(rows, full=False):
     ))
 
 
+def bench_sharded_latents(rows, full=False):
+    """Time-sharded (container v3) latent stream: O(window) latent entropy
+    for window decodes + parallel shard encode; emits BENCH_shards.json.
+    v2/v3 byte-identity and slice-equivalence gates are asserted inside
+    before any number is reported."""
+    from benchmarks import bench_shards
+
+    summary = bench_shards.run(quick=not full)
+    first = summary["per_shard_size"][0]
+    rows.append((
+        "shards_window_decode",
+        first["window_decode_warm_ms"] * 1e3,
+        f"latent_frac={summary['window_latent_fraction']:.0%}"
+        f" v2_ms={summary['v2_window_decode_warm_ms']:.1f}",
+    ))
+    rows.append((
+        "shards_parallel_encode",
+        summary["shard_encode"]["parallel_ms"] * 1e3,
+        f"MBps={summary['shard_encode']['parallel_MBps']:.0f}"
+        f" speedup={summary['shard_encode']['parallel_speedup']:.1f}x",
+    ))
+
+
 def bench_sz(rows):
     from repro.core import sz
     from repro.data import s3d
@@ -192,6 +215,7 @@ def main() -> None:
     guarded("throughput_engine", bench_throughput_engine, rows, full=full)
     guarded("codec_wire", bench_codec_wire, rows, full=full)
     guarded("partial_decode", bench_partial_decode, rows, full=full)
+    guarded("sharded_latents", bench_sharded_latents, rows, full=full)
     guarded("bench_sz", bench_sz, rows)
 
     # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)

@@ -1,0 +1,123 @@
+"""Public codec API: GBATC as *bytes in, bytes out* (the paper's claim, made
+literal).
+
+The paper reports two-orders-of-magnitude reduction; this package is where
+the repo actually produces those bytes. :class:`GBATCCodec` wraps the
+fit/compress orchestration and returns a **self-describing container blob**;
+module-level :func:`decompress` reconstructs the field from the blob alone —
+no fitted pipeline, no original data, no config object. A fresh process can
+decode a container because everything the decoder needs travels in it:
+
+==============  ====================================================
+stream          payload
+==============  ====================================================
+``meta``        geometry, AE structure, shape, latent bin, per-species
+                normalization (min/range) — fixed-layout struct
+``latent``      (v3, default) time-sharded segmented stream: ONE shared
+                Huffman codebook + a byte-extent directory over fixed
+                block-row shards, each an independently decodable chain
+                — a time window entropy-decodes only its covering
+                shards. (v1/v2, still read/written) one sequential
+                Huffman chain over all latents.
+``decoder``     AE decoder parameters, packed fp32/fp16 little-endian
+                in deterministic (sorted-path) leaf order
+``correction``  tensor-correction network parameters (GBATC only)
+``guarantee``   (v2+) ONE combined CSR-of-CSR stream for all species:
+                a fixed-layout directory (per species: tau, coeff bin,
+                basis dims, byte lengths of its coeff/index/basis
+                payloads) followed by the type-grouped payloads.
+``guarantee<s>``  (v1, still read) per-species
+                :class:`~repro.core.gae.GuaranteeArtifact` as a nested
+                container.
+==============  ====================================================
+
+Selective decode: ``decompress(blob, species=..., time_range=...)`` (or a
+reusable :class:`PartialDecoder`) parses only the header plus the
+requested streams; on a v3 container a time-window query is **O(window)
+end to end** — latent shards, guarantee streams, and the fused NN decode
+all touch only the window. Every slice is bitwise equal to slicing the
+full decode; v1/v2 blobs decode through the same entry points unchanged,
+and a full v3 decode equals the v2 decode byte for byte on the same fit.
+
+The package layers the codec by responsibility:
+
+* :mod:`repro.codec.format` — wire schemas: meta struct, guarantee
+  directory, v3 latent shard directory, measured ``stream_breakdown``;
+* :mod:`repro.codec.params` — parameter-tree leaf packing;
+* :mod:`repro.codec.encode` — the fit-side planner (artifact -> streams,
+  parallel shard packing) and the :class:`GBATCCodec` facade;
+* :mod:`repro.codec.runtime` — cached decode runtimes (models, jitted
+  fused decode, Huffman tables), container-head parsing with the
+  content-keyed head cache, lazy per-shard latent stores;
+* :mod:`repro.codec.decode` — full-field decode entry points, fused hot
+  path and the retained bit-identity reference orchestration;
+* :mod:`repro.codec.partial` — :class:`PartialDecoder` and slicing.
+
+Byte accounting is a *view over the container's stream table*
+(:func:`stream_breakdown`), so ``breakdown["total"] == len(blob)`` holds
+exactly. Decoding state (model instances, jitted callables, Huffman decode
+tables, parsed heads) is cached, so repeated ``decompress`` calls never
+re-trace and repeated queries on one blob never re-parse
+(:func:`clear_decode_cache` drops the head memo).
+
+``GBATCPipeline.compress/decompress`` remain as thin compatibility wrappers
+over this package (see :mod:`repro.core.pipeline`).
+"""
+
+from repro.codec.decode import (
+    decode_artifact,
+    decode_artifact_reference,
+    decompress,
+    decompress_reference,
+    reconstruct,
+    reconstruct_reference,
+)
+from repro.codec.encode import GBATCCodec, encode
+from repro.codec.format import (
+    _GDIR_HEAD,
+    _GDIR_REC,
+    DEFAULT_SHARD_TGROUPS,
+    GuaranteeDirectory,
+    LatentShardDirectory,
+    pack_guarantee_stream,
+    pack_latent_stream,
+    stream_breakdown,
+)
+from repro.codec.params import (
+    pack_artifact_params,
+    pack_params,
+    unpack_params,
+)
+from repro.codec.partial import PartialDecoder
+from repro.codec.runtime import (
+    _fused_vecs,
+    _runtime,
+    _runtime_reference,
+    clear_decode_cache,
+    make_fused_decode,
+)
+from repro.core.container import ContainerFormatError
+
+__all__ = [
+    "GBATCCodec",
+    "ContainerFormatError",
+    "GuaranteeDirectory",
+    "LatentShardDirectory",
+    "PartialDecoder",
+    "DEFAULT_SHARD_TGROUPS",
+    "clear_decode_cache",
+    "encode",
+    "pack_guarantee_stream",
+    "pack_latent_stream",
+    "pack_params",
+    "unpack_params",
+    "pack_artifact_params",
+    "decode_artifact",
+    "decode_artifact_reference",
+    "decompress",
+    "decompress_reference",
+    "reconstruct",
+    "reconstruct_reference",
+    "make_fused_decode",
+    "stream_breakdown",
+]

@@ -1,0 +1,173 @@
+"""Encode planner + codec facade: pipeline artifacts -> container bytes.
+
+:func:`encode` maps a fitted :class:`CompressedArtifact` onto the wire
+streams of the requested container version — v3 (default) shards the
+latent stream along time and packs the per-shard chains in parallel, v2
+writes the single-chain selective layout, v1 the original per-species
+nested guarantee containers. All three stay writable so round-trip and
+back-compat gates can cover every version; a v3 full decode is bitwise
+equal to the v2 decode of the same fit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.codec import format as wire
+from repro.codec.decode import decompress as _decompress
+from repro.codec.params import pack_artifact_params
+from repro.core import container as container_format
+from repro.core.container import ContainerWriter
+from repro.core.pipeline import (
+    CompressedArtifact,
+    CompressionReport,
+    GBATCPipeline,
+    PipelineConfig,
+)
+
+
+def encode(artifact: CompressedArtifact,
+           version: int = container_format.FORMAT_VERSION_SHARDED,
+           *, shard_tgroups: Optional[int] = None) -> bytes:
+    """Serialize a :class:`CompressedArtifact` into a container blob.
+
+    ``version`` selects the layout: 3 (default) writes the time-sharded
+    latent stream + combined guarantee stream; 2 the single-chain latent +
+    combined guarantee; 1 the original per-species nested containers
+    (both retained byte-stable so back-compat round-trips stay testable).
+    ``shard_tgroups`` (v3 only) sets the shard size in time block-groups
+    (``bt`` frames each); the default of
+    ``format.DEFAULT_SHARD_TGROUPS`` gives the finest window a block-row
+    decode can address. Oversized values clamp to one shard.
+    """
+    cfg = artifact.cfg
+    if version not in container_format.SUPPORTED_VERSIONS:
+        raise ValueError(f"unknown container version {version}")
+    if (shard_tgroups is not None
+            and version != container_format.FORMAT_VERSION_SHARDED):
+        raise ValueError(
+            f"shard_tgroups applies to container v"
+            f"{container_format.FORMAT_VERSION_SHARDED} only"
+        )
+    w = ContainerWriter(version=version)
+    w.add("meta", wire._pack_meta(artifact))
+    if version >= container_format.FORMAT_VERSION_SHARDED:
+        geom = cfg.geometry
+        _, _, h, wd = artifact.shape
+        per_frame = (h // geom.ph) * (wd // geom.pw)
+        tg = wire.DEFAULT_SHARD_TGROUPS if shard_tgroups is None \
+            else int(shard_tgroups)
+        if tg < 1:
+            raise ValueError(f"shard_tgroups must be >= 1, got {tg}")
+        # through the artifact so a sweep's blobs share one packed stream
+        w.add("latent", artifact.sharded_latent_stream(tg * per_frame))
+    else:
+        w.add("latent", artifact.latent_blob())
+    packed = artifact._param_streams
+    if packed is None:
+        packed = pack_artifact_params(
+            artifact.ae_params, artifact.corr_params, cfg.param_dtype_bytes
+        )
+    w.add("decoder", packed[0])
+    if artifact.corr_params is not None:
+        w.add("correction", packed[1])
+    if version >= container_format.FORMAT_VERSION_SELECTIVE:
+        w.add("guarantee",
+              wire.pack_guarantee_stream(artifact.species_guarantees))
+    else:
+        for sidx, g in enumerate(artifact.species_guarantees):
+            w.add(f"guarantee{sidx}", g.to_bytes())
+    return w.to_bytes()
+
+
+class GBATCCodec:
+    """Bytes-in/bytes-out GBATC (or GBA, via ``cfg.use_correction=False``).
+
+    Usage::
+
+        codec = GBATCCodec(PipelineConfig(...))
+        codec.fit(data)                       # train AE (+ correction) once
+        blob = codec.compress(target_nrmse=1e-3)   # -> container bytes
+        field = repro.codec.decompress(blob)       # anywhere, no codec
+
+    ``compress(data=...)`` fits on the given data first (refitting if the
+    codec was already fitted), so one-shot compression is a single call;
+    ``fit_stream(loader)`` consumes time-chunked input without ever
+    materializing the full field (see
+    :meth:`repro.core.pipeline.GBATCPipeline.fit_stream`). Error-bound
+    sweeps against one fitted model reuse the pipeline's cached
+    tau-independent guarantee state.
+    """
+
+    def __init__(self, cfg: Optional[PipelineConfig] = None,
+                 n_species: Optional[int] = None):
+        self.cfg = cfg if cfg is not None else PipelineConfig()
+        self._pipe: Optional[GBATCPipeline] = (
+            GBATCPipeline(self.cfg, n_species) if n_species is not None else None
+        )
+
+    @property
+    def pipeline(self) -> Optional[GBATCPipeline]:
+        """The underlying fit/orchestration layer (None before first fit)."""
+        return self._pipe
+
+    @property
+    def fitted(self) -> bool:
+        return self._pipe is not None and self._pipe._latents is not None
+
+    def fit(self, data: np.ndarray, verbose: bool = False) -> "GBATCCodec":
+        data = np.asarray(data)
+        if data.ndim != 4:
+            raise ValueError(
+                f"expected (S, T, H, W) species data, got "
+                f"{data.ndim}-d {type(data).__name__} of shape {data.shape}"
+                " (note: compress(target_nrmse=...) is keyword-only via the"
+                " data-first signature)"
+            )
+        if self._pipe is None or self._pipe.n_species != data.shape[0]:
+            self._pipe = GBATCPipeline(self.cfg, n_species=data.shape[0])
+        self._pipe.fit(data, verbose=verbose)
+        return self
+
+    def fit_stream(self, loader, verbose: bool = False) -> "GBATCCodec":
+        """Fit from time-chunked input without materializing the field.
+
+        ``loader`` must expose ``shape`` — the full (S, T, H, W) — and a
+        re-iterable ``chunks()`` yielding consecutive (S, Tc, H, W) time
+        chunks (each Tc divisible by the block geometry's ``bt``), e.g.
+        :class:`repro.data.s3d.S3DChunkLoader`. The fit is bit-identical
+        to ``fit(concatenate(chunks, axis=1))``.
+        """
+        s = int(loader.shape[0])
+        if self._pipe is None or self._pipe.n_species != s:
+            self._pipe = GBATCPipeline(self.cfg, n_species=s)
+        self._pipe.fit_stream(loader, verbose=verbose)
+        return self
+
+    def compress(self, data: Optional[np.ndarray] = None,
+                 target_nrmse: float = 1e-3, **kw) -> bytes:
+        """Compress to container bytes; pass ``data`` to (re)fit first."""
+        blob, _ = self.compress_report(data, target_nrmse=target_nrmse, **kw)
+        return blob
+
+    def compress_report(
+        self, data: Optional[np.ndarray] = None,
+        target_nrmse: float = 1e-3, **kw,
+    ) -> tuple[bytes, CompressionReport]:
+        """Like :meth:`compress`, also returning the quality report."""
+        if data is not None:
+            self.fit(data)
+        if not self.fitted:
+            raise RuntimeError("codec not fitted: pass data or call fit() first")
+        rep = self._pipe.compress(target_nrmse=target_nrmse, **kw)
+        return rep.artifact.to_bytes(), rep
+
+    @staticmethod
+    def decompress(blob: bytes, *, species=None, time_range=None) -> np.ndarray:
+        """Decode a container blob (stateless; see module :func:`decompress`).
+
+        ``species``/``time_range`` select a slice to decode
+        randomly-accessed, bitwise equal to slicing the full decode."""
+        return _decompress(blob, species=species, time_range=time_range)

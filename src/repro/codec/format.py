@@ -1,0 +1,461 @@
+"""GBATC container schemas: the wire layout layer of :mod:`repro.codec`.
+
+Everything byte-layout lives here — the fixed ``meta`` struct, the
+combined (container v2+) ``guarantee`` stream's CSR-of-CSR directory, the
+time-sharded (container v3) ``latent`` stream, and the measured byte
+accounting (:func:`stream_breakdown`). No model state, no jax: parsing a
+directory slices bytes and validates framing, nothing more, which is what
+lets the runtime/partial layers address any species or time shard without
+touching sibling payloads.
+
+Container v3's ``latent`` stream::
+
+    magic "LAT3" | n_shards u32 | shard_rows u32 | n_rows u64 | n_cols u32
+    codebook: k u32 | symbols k x i64 | code lengths k x u1
+    shard table: n_shards x payload_len u64
+    shard payloads, concatenated
+
+The time axis is partitioned into fixed block-row shards (``shard_rows``
+rows each, ragged tail allowed); every shard payload is an independently
+decodable Huffman chain over ``rows * n_cols`` quantized latents under
+the ONE shared codebook stored in the stream head — mirroring the
+guarantee directory, every shard's byte extent follows from the table by
+prefix sums, so a time-window decode entropy-decodes only the shards
+covering the window (the O(window) latent path).
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.core import blocking, entropy
+from repro.core import container as container_format
+from repro.core.container import ContainerFormatError, ContainerReader
+from repro.core.pipeline import PipelineConfig
+
+_FLAG_CORRECTION = 1
+
+# flags, param_dtype_bytes, latent, bt, ph, pw, n_conv
+_META_HEAD = struct.Struct("<BBHHHHH")
+_META_SHAPE = struct.Struct("<IIIId")  # S, T, H, W, latent_bin
+
+
+# ---------------------------------------------------------------------------
+# meta stream
+# ---------------------------------------------------------------------------
+def _pack_meta(artifact) -> bytes:
+    cfg = artifact.cfg
+    geom = cfg.geometry
+    flags = _FLAG_CORRECTION if artifact.corr_params is not None else 0
+    u16_fields = {
+        "latent": cfg.latent,
+        "bt": geom.bt,
+        "ph": geom.ph,
+        "pw": geom.pw,
+        **{f"conv_channels[{i}]": c for i, c in enumerate(cfg.conv_channels)},
+    }
+    bad = {k: v for k, v in u16_fields.items() if not 0 < v <= 0xFFFF}
+    if bad:
+        raise ValueError(f"meta fields not representable as u16: {bad}")
+    parts = [
+        _META_HEAD.pack(
+            flags,
+            cfg.param_dtype_bytes,
+            cfg.latent,
+            geom.bt,
+            geom.ph,
+            geom.pw,
+            len(cfg.conv_channels),
+        ),
+        np.asarray(cfg.conv_channels, dtype="<u2").tobytes(),
+        _META_SHAPE.pack(*artifact.shape, artifact.latent_bin),
+        np.ascontiguousarray(artifact.norm_min.astype("<f4")).tobytes(),
+        np.ascontiguousarray(artifact.norm_range.astype("<f4")).tobytes(),
+    ]
+    return b"".join(parts)
+
+
+def _unpack_meta(buf: bytes):
+    if len(buf) < _META_HEAD.size:
+        raise ContainerFormatError("meta stream truncated")
+    flags, pdb, latent, bt, ph, pw, n_conv = _META_HEAD.unpack_from(buf, 0)
+    if flags & ~_FLAG_CORRECTION:
+        # unknown flag bits mean a newer writer (or corruption) — refuse
+        # rather than decode under old-flag semantics
+        raise ContainerFormatError(f"unknown meta flags 0x{flags:02x}")
+    off = _META_HEAD.size
+    if len(buf) < off + 2 * n_conv + _META_SHAPE.size:
+        raise ContainerFormatError("meta stream truncated")
+    conv = tuple(
+        int(c) for c in np.frombuffer(buf, dtype="<u2", count=n_conv, offset=off)
+    )
+    off += 2 * n_conv
+    s, t, h, w, latent_bin = _META_SHAPE.unpack_from(buf, off)
+    off += _META_SHAPE.size
+    if len(buf) != off + 8 * s:
+        raise ContainerFormatError(
+            f"meta stream is {len(buf)} bytes, expected {off + 8 * s} "
+            f"for {s} species"
+        )
+    if pdb not in (2, 4):
+        raise ContainerFormatError(f"bad param dtype byte {pdb} (expected 2 or 4)")
+    if min(bt, ph, pw, latent, n_conv, s, t, h, w) < 1 or min(conv) < 1:
+        raise ContainerFormatError(
+            f"meta stream carries degenerate structure: geometry "
+            f"({bt},{ph},{pw}), latent {latent}, conv {conv}, shape "
+            f"({s},{t},{h},{w})"
+        )
+    norm_min = np.frombuffer(buf, dtype="<f4", count=s, offset=off).copy()
+    norm_range = np.frombuffer(buf, dtype="<f4", count=s, offset=off + 4 * s).copy()
+    if not (np.isfinite(latent_bin) and latent_bin > 0):
+        raise ContainerFormatError(f"bad latent bin {latent_bin!r}")
+    if not (
+        np.isfinite(norm_min).all()
+        and np.isfinite(norm_range).all()
+        and (norm_range > 0).all()
+    ):
+        raise ContainerFormatError("non-finite or non-positive normalization")
+    cfg = PipelineConfig(
+        geometry=blocking.BlockGeometry(bt=bt, ph=ph, pw=pw),
+        latent=latent,
+        conv_channels=conv,
+        use_correction=bool(flags & _FLAG_CORRECTION),
+        param_dtype_bytes=pdb,
+    )
+    return cfg, (s, t, h, w), float(latent_bin), norm_min, norm_range
+
+
+# ---------------------------------------------------------------------------
+# combined guarantee stream (container v2+): CSR-of-CSR over species
+# ---------------------------------------------------------------------------
+_GDIR_HEAD = struct.Struct("<I")  # species count
+# per species: tau f64, coeff_bin f64, D u32, n_store u32,
+#              coeff_len u64, index_len u64, basis_len u64
+_GDIR_REC = struct.Struct("<ddIIQQQ")
+
+
+def pack_guarantee_stream(arts) -> bytes:
+    """Pack all species' guarantee artifacts into ONE combined stream.
+
+    Layout: ``S u32 | S x directory record | coeff payloads | index
+    payloads | basis payloads`` — the outer offset table (directory) over
+    species plus type-grouped sub-streams. Per-species framing collapses
+    from a nested container (~60 bytes of magic/table per species) to one
+    fixed 48-byte record, and every species' byte extents follow from the
+    directory by prefix sums, so a reader can slice one species without
+    parsing any sibling payload.
+    """
+    parts = [_GDIR_HEAD.pack(len(arts))]
+    coeffs: list[bytes] = []
+    indexes: list[bytes] = []
+    bases: list[bytes] = []
+    for g in arts:
+        c, i, b = g.wire_parts()
+        parts.append(
+            _GDIR_REC.pack(g.tau, g.coeff_bin, *g.basis.shape,
+                           len(c), len(i), len(b))
+        )
+        coeffs.append(c)
+        indexes.append(i)
+        bases.append(b)
+    return b"".join(parts + coeffs + indexes + bases)
+
+
+class GuaranteeDirectory:
+    """Parsed directory of a combined ``guarantee`` stream (container v2+).
+
+    Holds the per-species metadata and byte extents; payload access is
+    pure slicing — no sibling species' stream is ever parsed to reach
+    another's. Raises :class:`ContainerFormatError` when the directory
+    and the payload bytes disagree.
+    """
+
+    def __init__(self, payload: bytes):
+        payload = bytes(payload)
+        if len(payload) < _GDIR_HEAD.size:
+            raise ContainerFormatError(
+                "guarantee stream truncated: no species directory"
+            )
+        (s,) = _GDIR_HEAD.unpack_from(payload, 0)
+        dir_end = _GDIR_HEAD.size + s * _GDIR_REC.size
+        if len(payload) < dir_end:
+            raise ContainerFormatError(
+                f"guarantee directory truncated: {len(payload)} bytes "
+                f"cannot hold {s} species records"
+            )
+        recs = list(_GDIR_REC.iter_unpack(payload[_GDIR_HEAD.size:dir_end]))
+        self._meta = [(r[0], r[1], r[2], r[3]) for r in recs]
+        coeff_lens = [r[4] for r in recs]
+        index_lens = [r[5] for r in recs]
+        basis_lens = [r[6] for r in recs]
+        # per-type payload offsets by prefix sum (python ints: a corrupt
+        # u64 length must overflow into a clean mismatch, not wrap)
+        off = dir_end
+        self._extents: list[list[tuple[int, int]]] = []
+        for lens in (coeff_lens, index_lens, basis_lens):
+            spans = []
+            for ln in lens:
+                spans.append((off, off + ln))
+                off += ln
+            self._extents.append(spans)
+        if off != len(payload):
+            raise ContainerFormatError(
+                f"guarantee stream is {len(payload)} bytes but its "
+                f"directory declares {off}"
+            )
+        self.dir_bytes = dir_end
+        self.coeff_total = sum(coeff_lens)
+        self.index_total = sum(index_lens)
+        self.basis_total = sum(basis_lens)
+        self._payload = payload
+
+    @property
+    def n_species(self) -> int:
+        return len(self._meta)
+
+    def _slice(self, kind: int, sidx: int) -> bytes:
+        lo, hi = self._extents[kind][sidx]
+        return self._payload[lo:hi]
+
+    def coeff_stream(self, sidx: int) -> bytes:
+        return self._slice(0, sidx)
+
+    def coeff_len(self, sidx: int) -> int:
+        lo, hi = self._extents[0][sidx]
+        return hi - lo
+
+    def species_parts(self, sidx: int):
+        """(tau, coeff_bin, d, n_store, coeff, index, basis) for one species."""
+        return (*self._meta[sidx], self._slice(0, sidx),
+                self._slice(1, sidx), self._slice(2, sidx))
+
+    def species_extent_bytes(self, sidx: int) -> int:
+        """Payload bytes one species' decode touches (coeff+index+basis)."""
+        return sum(hi - lo for lo, hi in
+                   (self._extents[k][sidx] for k in range(3)))
+
+
+# ---------------------------------------------------------------------------
+# time-sharded latent stream (container v3)
+# ---------------------------------------------------------------------------
+_LAT3_MAGIC = b"LAT3"
+_LAT3_HEAD = struct.Struct("<4sIIQI")  # magic, n_shards, shard_rows, n_rows, n_cols
+_LAT3_CB = struct.Struct("<I")  # codebook symbol count
+_LAT3_LEN = struct.Struct("<Q")  # per-shard payload byte length
+
+#: default shard granularity: one time block-group (``bt`` frames) per
+#: shard — the finest window a block-row decode can address anyway; the
+#: per-shard cost is one u64 table entry plus sub-byte chain padding.
+DEFAULT_SHARD_TGROUPS = 1
+
+_POOL: Optional[ThreadPoolExecutor] = None
+
+
+def _pool() -> ThreadPoolExecutor:
+    """Shared workers for per-shard entropy packing (numpy releases the
+    GIL on the vectorized pack passes, so shards genuinely overlap)."""
+    global _POOL
+    if _POOL is None:
+        _POOL = ThreadPoolExecutor(max_workers=min(os.cpu_count() or 1, 8))
+    return _POOL
+
+
+def pack_latent_stream(
+    latent_q: np.ndarray, shard_rows: int, *, parallel: Optional[bool] = None
+) -> bytes:
+    """Pack quantized latents as the v3 time-sharded segmented stream.
+
+    One canonical codebook is built over ALL latents and stored once;
+    each shard of ``shard_rows`` block rows (ragged tail allowed) packs
+    its own independent Huffman chain under it, so any shard decodes
+    without touching the others. Shard chains are independent by
+    construction, so they encode in parallel on the shared worker pool
+    (``parallel=None`` decides by size; the output bytes are identical
+    either way — each shard's payload is a pure function of its rows).
+    """
+    latent_q = np.ascontiguousarray(np.asarray(latent_q, dtype=np.int64))
+    if latent_q.ndim != 2 or latent_q.size == 0:
+        raise ValueError(
+            f"latent_q must be a non-empty (NB, latent) array, "
+            f"got shape {latent_q.shape}"
+        )
+    nb, n_cols = latent_q.shape
+    shard_rows = int(min(max(int(shard_rows), 1), nb))
+    symbols, lengths = entropy.huffman_codebook(latent_q)
+    # canonical codes are shard-invariant: build the (python-loop) table
+    # once here rather than once per shard inside the workers
+    codes = entropy._canonical_codes(lengths)
+    extents = [(r0, min(r0 + shard_rows, nb))
+               for r0 in range(0, nb, shard_rows)]
+
+    def pack(ext):
+        return entropy.huffman_payload(
+            latent_q[ext[0]:ext[1]], symbols, lengths, codes
+        )
+
+    if parallel is None:
+        parallel = len(extents) > 1 and latent_q.size >= (1 << 15)
+    if parallel and len(extents) > 1:
+        payloads = list(_pool().map(pack, extents))
+    else:
+        payloads = [pack(e) for e in extents]
+    parts = [
+        _LAT3_HEAD.pack(_LAT3_MAGIC, len(extents), shard_rows, nb, n_cols),
+        _LAT3_CB.pack(len(symbols)),
+        symbols.astype("<i8").tobytes(),
+        lengths.astype("<u1").tobytes(),
+    ]
+    parts.extend(_LAT3_LEN.pack(len(p)) for p in payloads)
+    return b"".join(parts + payloads)
+
+
+class LatentShardDirectory:
+    """Parsed head of a v3 ``latent`` stream: codebook + shard extents.
+
+    Parsing touches only the fixed head — no entropy decode happens here;
+    shard payload access is pure slicing, and which shards a block-row
+    window needs is arithmetic on the directory alone.
+    """
+
+    def __init__(self, payload: bytes):
+        payload = bytes(payload)
+        if len(payload) < _LAT3_HEAD.size + _LAT3_CB.size:
+            raise ContainerFormatError("latent shard stream truncated")
+        magic, n_shards, shard_rows, n_rows, n_cols = \
+            _LAT3_HEAD.unpack_from(payload, 0)
+        if magic != _LAT3_MAGIC:
+            raise ContainerFormatError(
+                f"bad latent shard magic {magic!r} (expected {_LAT3_MAGIC!r})"
+            )
+        if min(n_shards, shard_rows, n_rows, n_cols) < 1:
+            raise ContainerFormatError(
+                f"degenerate latent shard geometry: {n_shards} shards of "
+                f"{shard_rows} rows for ({n_rows}, {n_cols}) latents"
+            )
+        if n_shards != -(-n_rows // shard_rows):
+            raise ContainerFormatError(
+                f"latent shard directory declares {n_shards} shards but "
+                f"{n_rows} rows / {shard_rows} per shard needs "
+                f"{-(-n_rows // shard_rows)}"
+            )
+        off = _LAT3_HEAD.size
+        (k,) = _LAT3_CB.unpack_from(payload, off)
+        off += _LAT3_CB.size
+        table_end = off + 9 * k + _LAT3_LEN.size * n_shards
+        if k < 1 or len(payload) < table_end:
+            raise ContainerFormatError(
+                f"latent shard stream truncated: {len(payload)} bytes "
+                f"cannot hold a {k}-symbol codebook + {n_shards} records"
+            )
+        self.symbols = np.frombuffer(
+            payload, dtype="<i8", count=k, offset=off
+        ).astype(np.int64)
+        off += 8 * k
+        self.lengths = np.frombuffer(
+            payload, dtype="<u1", count=k, offset=off
+        ).astype(np.int64)
+        off += k
+        if not ((self.lengths >= 1) & (self.lengths <= 32)).all():
+            raise ContainerFormatError("latent codebook carries bad code lengths")
+        lens = [
+            _LAT3_LEN.unpack_from(payload, off + i * _LAT3_LEN.size)[0]
+            for i in range(n_shards)
+        ]
+        off += _LAT3_LEN.size * n_shards
+        self.header_bytes = off  # framing + codebook + shard table
+        self._extents: list[tuple[int, int]] = []
+        for ln in lens:  # python ints: corrupt u64 must mismatch, not wrap
+            self._extents.append((off, off + ln))
+            off += ln
+        if off != len(payload):
+            raise ContainerFormatError(
+                f"latent shard stream is {len(payload)} bytes but its "
+                f"directory declares {off}"
+            )
+        self.n_shards = n_shards
+        self.shard_rows = shard_rows
+        self.n_rows = n_rows
+        self.n_cols = n_cols
+        self.payload_total = sum(lens)
+        self._payload = payload
+
+    def shard_payload(self, k: int) -> bytes:
+        lo, hi = self._extents[k]
+        return self._payload[lo:hi]
+
+    def shard_payload_len(self, k: int) -> int:
+        lo, hi = self._extents[k]
+        return hi - lo
+
+    def shard_row_extent(self, k: int) -> tuple[int, int]:
+        r0 = k * self.shard_rows
+        return r0, min(r0 + self.shard_rows, self.n_rows)
+
+    def shard_count(self, k: int) -> int:
+        r0, r1 = self.shard_row_extent(k)
+        return (r1 - r0) * self.n_cols
+
+    def shards_for_rows(self, b0: int, b1: int) -> tuple[int, int]:
+        """Half-open shard range covering block rows ``[b0, b1)``."""
+        if not 0 <= b0 < b1 <= self.n_rows:
+            raise ValueError(
+                f"block-row window ({b0}, {b1}) outside [0, {self.n_rows})"
+            )
+        return b0 // self.shard_rows, -(-b1 // self.shard_rows)
+
+    def window_payload_bytes(self, b0: int, b1: int) -> int:
+        """Chain payload bytes a ``[b0, b1)`` row decode entropy-decodes."""
+        k0, k1 = self.shards_for_rows(b0, b1)
+        return sum(self.shard_payload_len(k) for k in range(k0, k1))
+
+
+# ---------------------------------------------------------------------------
+# measured byte accounting
+# ---------------------------------------------------------------------------
+def stream_breakdown(blob: bytes) -> dict:
+    """Byte breakdown as a view over the container's measured stream lengths.
+
+    ``latent/decoder/correction/coeff/index/basis`` are payload bytes;
+    ``meta`` is everything else that is really on the wire — the outer
+    header + stream table, the meta stream, and per-version framing (v1
+    nested guarantee containers, the v2+ guarantee directory, the v3
+    latent shard head: codebook + shard table) — so the parts always sum
+    to ``len(blob)`` exactly.
+    """
+    r = ContainerReader(blob)
+    sizes = r.stream_sizes()
+    coeff = index = basis = 0
+    if r.version >= container_format.FORMAT_VERSION_SELECTIVE:
+        if "guarantee" in r:
+            gdir = GuaranteeDirectory(r["guarantee"])
+            coeff, index, basis = (
+                gdir.coeff_total, gdir.index_total, gdir.basis_total
+            )
+    else:
+        for name in sizes:
+            if name.startswith("guarantee"):
+                sub = ContainerReader(r[name]).stream_sizes()
+                coeff += sub.get("coeff", 0)
+                index += sub.get("index", 0)
+                basis += sub.get("basis", 0)
+    latent = sizes.get("latent", 0)
+    if r.version >= container_format.FORMAT_VERSION_SHARDED and "latent" in r:
+        # chain payloads count as latent data; the shard head (codebook +
+        # extents table) is framing and lands in the meta bucket below
+        latent = LatentShardDirectory(r["latent"]).payload_total
+    out = {
+        "latent": latent,
+        "decoder": sizes.get("decoder", 0),
+        "correction": sizes.get("correction", 0),
+        "coeff": coeff,
+        "index": index,
+        "basis": basis,
+    }
+    out["meta"] = r.total_bytes - sum(out.values())
+    out["total"] = r.total_bytes
+    return out

@@ -1,0 +1,161 @@
+"""Latent stores: uniform block-row access over per-version latent layouts.
+
+Container v1/v2 carry ONE sequential Huffman chain (any row requires the
+full walk, so it decodes whole at head parse); v3 carries independent
+per-shard chains under a shared codebook, decoded lazily — a block-row
+window touches only its covering shards — which is what makes a window
+query O(window) in latent entropy work.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.codec import format as wire
+from repro.core import entropy
+from repro.core.container import ContainerFormatError
+
+
+class _ChainLatents:
+    """v1/v2 ``latent`` stream: ONE sequential Huffman chain.
+
+    Decoded whole at head parse (any row requires the full chain walk, and
+    eager decode keeps the historical corruption-error surface); row access
+    is then a slice.
+    """
+
+    def __init__(self, stream: bytes, nb: int, n_lat: int,
+                 table_cache: entropy.DecodeTableCache, huffman=None):
+        try:
+            if huffman is None:
+                q = entropy.huffman_decode(stream, table_cache=table_cache)
+            else:
+                q = huffman(stream)
+        except (ValueError, struct.error) as e:
+            # struct.error: a truncated Huffman header (not a ValueError)
+            raise ContainerFormatError(f"corrupt latent stream: {e}") from e
+        if q.size != nb * n_lat:
+            raise ContainerFormatError(
+                f"latent stream decodes to {q.size} symbols, "
+                f"expected {nb * n_lat}"
+            )
+        self._q = q.reshape(nb, n_lat)
+        self._nbytes = len(stream)
+
+    def full(self) -> np.ndarray:
+        return self._q
+
+    def rows(self, b0: int, b1: int) -> np.ndarray:
+        return self._q[b0:b1]
+
+    def bytes_parsed(self, b0: int, b1: int) -> int:
+        # a sequential chain walks whole regardless of the window
+        return self._nbytes
+
+    def entropy_bytes(self, b0: int, b1: int) -> int:
+        return self._nbytes
+
+
+class _ShardedLatents:
+    """v3 ``latent`` stream: independent per-shard chains, shared codebook.
+
+    Shards entropy-decode lazily — a block-row window touches only the
+    covering shards — in one lockstep multi-chain walk, and memoize on the
+    store (hence on the cached head): repeated window queries pay entropy
+    once per shard. A corrupt shard raises
+    :class:`ContainerFormatError` naming it and never poisons siblings.
+    """
+
+    def __init__(self, directory: wire.LatentShardDirectory, nb: int,
+                 n_lat: int, table_cache: entropy.DecodeTableCache,
+                 reference: bool = False):
+        if directory.n_rows != nb or directory.n_cols != n_lat:
+            raise ContainerFormatError(
+                f"latent shard stream covers ({directory.n_rows}, "
+                f"{directory.n_cols}) latents, meta stream declares "
+                f"({nb}, {n_lat})"
+            )
+        self._dir = directory
+        self._n_lat = n_lat
+        self._cache = None if reference else table_cache
+        self._shards: dict[int, np.ndarray] = {}
+        self._full: "np.ndarray | None" = None
+        self._reference = reference
+
+    def _decode_one(self, k: int) -> np.ndarray:
+        d = self._dir
+        try:
+            if self._reference:
+                # true pre-change cost profile: per-call tables and the
+                # retained per-code-bit window pass, per shard
+                return entropy.huffman_decode_payload_ref(
+                    d.shard_payload(k), d.shard_count(k),
+                    d.symbols, d.lengths,
+                )
+            return entropy.huffman_decode_payload(
+                d.shard_payload(k), d.shard_count(k), d.symbols, d.lengths,
+                table_cache=self._cache,
+            )
+        except ValueError as e:
+            raise ContainerFormatError(f"latent shard {k}: {e}") from e
+
+    def _store(self, k: int, arr: np.ndarray) -> None:
+        r0, r1 = self._dir.shard_row_extent(k)
+        self._shards[k] = arr.reshape(r1 - r0, self._n_lat)
+
+    def _ensure(self, k0: int, k1: int) -> None:
+        missing = [k for k in range(k0, k1) if k not in self._shards]
+        if not missing:
+            return
+        d = self._dir
+        if not self._reference and len(missing) > 1:
+            try:
+                arrs = entropy.huffman_decode_payloads(
+                    [d.shard_payload(k) for k in missing],
+                    [d.shard_count(k) for k in missing],
+                    d.symbols, d.lengths, table_cache=self._cache,
+                )
+            except ValueError:
+                pass  # per-shard walk below names the culprit
+            else:
+                for k, arr in zip(missing, arrs):
+                    self._store(k, arr)
+                return
+        # shard-by-shard: store each healthy shard as it decodes, so a
+        # corrupt sibling raising (named) never discards finished work
+        for k in missing:
+            self._store(k, self._decode_one(k))
+
+    def rows(self, b0: int, b1: int) -> np.ndarray:
+        if self._full is not None:  # fully assembled: slices are views
+            return self._full[b0:b1]
+        k0, k1 = self._dir.shards_for_rows(b0, b1)
+        self._ensure(k0, k1)
+        base = self._dir.shard_row_extent(k0)[0]
+        out = np.concatenate(
+            [self._shards[k] for k in range(k0, k1)], axis=0
+        )
+        return out[b0 - base : b1 - base]
+
+    def full(self) -> np.ndarray:
+        # memoized: repeat full decodes through a cached head must not pay
+        # an O(NB * latent) re-concatenation per query. The per-shard
+        # arrays are dropped once assembled — rows() serves views of the
+        # full array from then on, so keeping both would double the
+        # decoded-latent bytes the bounded head cache pins.
+        if self._full is None:
+            self._full = self.rows(0, self._dir.n_rows)
+            self._shards.clear()
+        return self._full
+
+    def bytes_parsed(self, b0: int, b1: int) -> int:
+        """Stream bytes a window decode touches: head + covering chains."""
+        return self._dir.header_bytes + self._dir.window_payload_bytes(b0, b1)
+
+    def entropy_bytes(self, b0: int, b1: int) -> int:
+        """Chain bytes a window decode entropy-decodes (the O(window) term)."""
+        return self._dir.window_payload_bytes(b0, b1)
+
+

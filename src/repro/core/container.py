@@ -20,17 +20,22 @@ stores each species' guarantee artifact that way), and the framing overhead
 of every level is measurable, so "metadata bytes" in the breakdown is a
 real number rather than a ``8*S + 64`` guess.
 
-Two versions share this byte layout; the version field declares the
+Three versions share this byte layout; the version field declares the
 *schema of the stream set* so readers pick the right interpretation:
 
 * version 1 — the original GBATC layout: one nested ``guarantee<s>``
   container per species;
 * version 2 — the selective-decode layout: a single combined ``guarantee``
   stream (CSR-of-CSR directory over species; see ``repro.codec``) whose
-  per-species byte extents are addressable from the directory alone.
+  per-species byte extents are addressable from the directory alone;
+* version 3 — the time-sharded layout: v2's guarantee stream plus a
+  segmented ``latent`` stream — the time axis partitioned into block-row
+  shards, each an independently decodable Huffman chain under one shared
+  codebook, fronted by a byte-extent directory — so a time-window decode
+  entropy-decodes only the shards covering the window.
 
-:class:`ContainerReader` accepts both and exposes ``.version``; anything
-else raises :class:`ContainerFormatError`.
+:class:`ContainerReader` accepts all three and exposes ``.version``;
+anything else raises :class:`ContainerFormatError`.
 """
 
 from __future__ import annotations
@@ -40,7 +45,10 @@ import struct
 MAGIC = b"GBTC"
 FORMAT_VERSION = 1
 FORMAT_VERSION_SELECTIVE = 2
-SUPPORTED_VERSIONS = (FORMAT_VERSION, FORMAT_VERSION_SELECTIVE)
+FORMAT_VERSION_SHARDED = 3
+SUPPORTED_VERSIONS = (
+    FORMAT_VERSION, FORMAT_VERSION_SELECTIVE, FORMAT_VERSION_SHARDED
+)
 
 _HEAD = struct.Struct("<4sHH")  # magic, version, n_streams
 _LEN = struct.Struct("<Q")

@@ -14,6 +14,13 @@ independent streams decode in one lockstep multi-stream chain walk
 (:func:`huffman_decode_many`), and the pre-throughput-engine path is
 retained as :func:`huffman_decode_ref` (parity-asserted baseline).
 
+Segmented layouts — many independently decodable chains under ONE shared
+codebook, e.g. the codec's time-sharded (container v3) latent stream —
+use the headerless primitives: :func:`huffman_codebook` builds the table
+once, :func:`huffman_payload` packs each segment's chain, and
+:func:`huffman_decode_payloads` walks any subset of segments lockstep,
+enforcing that every chain consumes its byte extent exactly.
+
 ``zstd_bytes`` exposes the zstandard backend used as the final lossless
 stage of the SZ baseline (matching SZ3's use of zstd). When the
 ``zstandard`` wheel is absent (hermetic CI images), stdlib ``zlib`` stands
@@ -164,6 +171,55 @@ def huffman_encode(values: np.ndarray) -> bytes:
     header.write(symbols.astype("<i8").tobytes())
     header.write(lengths.astype("<u1").tobytes())
     return header.getvalue() + payload
+
+
+# ---------------------------------------------------------------------------
+# shared-codebook (segmented) coding: one codebook, many independent chains
+# ---------------------------------------------------------------------------
+def huffman_codebook(values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Canonical codebook ``(symbols, code lengths)`` for ``values``.
+
+    The codebook half of :func:`huffman_encode`, exposed standalone so
+    segmented layouts — many independently decodable chains sharing ONE
+    codebook, e.g. the codec's time-sharded latent stream — can store the
+    table once and pack each segment with :func:`huffman_payload`.
+    """
+    values = np.asarray(values).ravel()
+    if values.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    symbols, inverse = np.unique(values, return_inverse=True)
+    freqs = np.bincount(inverse)
+    return symbols.astype(np.int64), _code_lengths(freqs)
+
+
+def huffman_payload(
+    values: np.ndarray, symbols: np.ndarray, lengths: np.ndarray,
+    codes: Optional[np.ndarray] = None,
+) -> bytes:
+    """Pack ``values`` as one headerless Huffman bit chain under a shared
+    codebook (the payload :func:`huffman_encode` would emit for the same
+    values if the codebook matches). Raises ``ValueError`` when a value is
+    not in ``symbols`` — a segment may never silently extend the codebook.
+    ``codes`` passes pre-computed :func:`_canonical_codes` so a caller
+    packing many segments (one per shard) pays the python-loop code build
+    once, not per segment.
+    """
+    values = np.asarray(values).ravel()
+    if values.size == 0:
+        return b""
+    symbols = np.asarray(symbols, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    idx = np.searchsorted(symbols, values)
+    idx_c = np.minimum(idx, max(len(symbols) - 1, 0))
+    if len(symbols) == 0 or not np.array_equal(symbols[idx_c], values):
+        raise ValueError("value outside the shared Huffman codebook")
+    if codes is None:
+        codes = _canonical_codes(lengths)
+    sym_lengths = lengths[idx_c]
+    sym_codes = codes[idx_c]
+    offsets = np.concatenate(([0], np.cumsum(sym_lengths)[:-1]))
+    return _pack_payload(sym_codes, sym_lengths, offsets,
+                         int(sym_lengths.sum()))
 
 
 def _decode_table(lengths: np.ndarray, codes: np.ndarray):
@@ -527,7 +583,9 @@ def _check_payload_length(pos, len_at, payload_nbytes: int) -> None:
 def _prepare_stream(blob: bytes, table_cache: Optional[DecodeTableCache]):
     """Header/table/window phase of decode: everything except the
     (sequential) codeword chain. Returns
-    (n, symbols, sym_at, len_at, payload_nbytes)."""
+    (n, symbols, sym_at, len_at, payload_nbytes). The payload phase is
+    shared with the headerless (segmented) path — a self-describing
+    stream is its inline codebook plus one :func:`_prepare_payload`."""
     n, symbols, lengths, off = _parse_header(blob)
     if n == 0:
         if len(blob) != off:
@@ -536,26 +594,155 @@ def _prepare_stream(blob: bytes, table_cache: Optional[DecodeTableCache]):
                 f"{len(blob) - off} trailing payload bytes"
             )
         return 0, symbols, None, None, 0
+    sym_at, len_at = _prepare_payload(
+        memoryview(blob)[off:], int(n), lengths, table_cache
+    )
+    return int(n), symbols, sym_at, len_at, len(blob) - off
+
+
+def _prepare_payload(
+    payload: bytes, n: int, lengths: np.ndarray,
+    table_cache: Optional[DecodeTableCache],
+):
+    """Window/table phase for a headerless chain under a known codebook.
+
+    Returns ``(sym_at, len_at)`` (``(None, None)`` for an empty chain);
+    the caller supplies the symbol count and the codebook that a
+    self-describing stream would carry inline.
+    """
+    if n == 0:
+        if len(payload):
+            raise ValueError(
+                f"corrupt Huffman payload: empty chain carries "
+                f"{len(payload)} bytes"
+            )
+        return None, None
+    if len(lengths) == 0:
+        raise ValueError(
+            "corrupt Huffman payload: empty codebook with symbols to decode"
+        )
     if table_cache is not None:
         table_bits, table_sym, table_len, long_codes = table_cache.get(lengths)
     else:
         table_bits, table_sym, table_len, long_codes = _decode_table(
             lengths, _canonical_codes(lengths)
         )
-
-    bit_arr = np.unpackbits(np.frombuffer(blob, dtype=np.uint8, offset=off))
+    bit_arr = np.unpackbits(np.frombuffer(payload, dtype=np.uint8))
     # pad so windowed reads never go OOB; stays uint8 — the window and
     # long-code passes upcast on the fly, so per-bit memory stays 1 byte
     bit_arr = np.concatenate(
         [bit_arr, np.zeros(_MAX_CODE_LEN + table_bits, np.uint8)]
     )
-
     win = _window_values(bit_arr, table_bits)
     sym_at = table_sym[win]
     len_at = table_len[win]
     if long_codes:
         _resolve_long_codes(bit_arr, sym_at, len_at, long_codes)
-    return int(n), symbols, sym_at, len_at, len(blob) - off
+    return sym_at, len_at
+
+
+def _grouped_positions(
+    entries: "list[tuple[np.ndarray, int]]",
+) -> "list[np.ndarray]":
+    """Chain positions for many independent streams, lockstep-walked in
+    adaptively sized groups: batching pays while the combined walk state
+    stays cache-resident (many small streams — the high-compression
+    regime); past that the walk goes bandwidth-bound and big streams run
+    alone. The single scheduler behind :func:`huffman_decode_many` and
+    :func:`huffman_decode_payloads`."""
+    max_group_chunks = 4096  # ~bpc * 4096 bits of lockstep walk state
+    groups: list[list[int]] = [[]]
+    budget = max_group_chunks
+    for j, (len_at, _) in enumerate(entries):
+        chunks = -(-len(len_at) // _CHAIN_BPC)
+        if groups[-1] and chunks > budget:
+            groups.append([])
+            budget = max_group_chunks
+        groups[-1].append(j)
+        budget -= chunks
+    positions: list = [None] * len(entries)
+    for group in groups:
+        pos_list = _chain_positions_multi([entries[j] for j in group])
+        for j, pos in zip(group, pos_list):
+            positions[j] = pos
+    return positions
+
+
+def _finish_payload(symbols, sym_at, len_at, pos, payload_nbytes: int):
+    """Symbol lookup + exact-consumption check shared by every decode path."""
+    sym_idx = sym_at[pos]
+    if (sym_idx < 0).any():
+        raise ValueError("corrupt Huffman stream")
+    _check_payload_length(pos, len_at, payload_nbytes)
+    return symbols[sym_idx]
+
+
+def huffman_decode_payloads(
+    payloads: "list[bytes]",
+    counts: "list[int]",
+    symbols: np.ndarray,
+    lengths: np.ndarray,
+    *,
+    table_cache: Optional[DecodeTableCache] = None,
+) -> "list[np.ndarray]":
+    """Decode independent headerless chains sharing ONE codebook.
+
+    The segmented counterpart of :func:`huffman_decode_many`: the caller
+    supplies the codebook (stored once on the wire) and each segment's
+    symbol count; the sequential codeword chains run as lockstep
+    multi-stream walks. Every chain must consume its (byte-padded) payload
+    exactly — a mis-framed segment raises instead of decoding padding.
+    """
+    symbols = np.asarray(symbols, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    if len(payloads) != len(counts):
+        raise ValueError("payloads and counts disagree in length")
+    prepped = [
+        _prepare_payload(p, int(n), lengths, table_cache)
+        for p, n in zip(payloads, counts)
+    ]
+    out: list[np.ndarray] = [np.zeros(0, dtype=np.int64) for _ in payloads]
+    live = [i for i, n in enumerate(counts) if n > 0]
+    if not live:
+        return out
+    positions = _grouped_positions(
+        [(prepped[i][1], int(counts[i])) for i in live]
+    )
+    for i, pos in zip(live, positions):
+        sym_at, len_at = prepped[i]
+        out[i] = _finish_payload(symbols, sym_at, len_at, pos,
+                                 len(payloads[i]))
+    return out
+
+
+def huffman_decode_payload(
+    payload: bytes, n: int, symbols: np.ndarray, lengths: np.ndarray,
+    *, table_cache: Optional[DecodeTableCache] = None,
+) -> np.ndarray:
+    """Decode one headerless chain under a shared codebook."""
+    return huffman_decode_payloads(
+        [payload], [n], symbols, lengths, table_cache=table_cache
+    )[0]
+
+
+def huffman_decode_payload_ref(
+    payload: bytes, n: int, symbols: np.ndarray, lengths: np.ndarray,
+) -> np.ndarray:
+    """Reference decode of one headerless chain: frame it as the
+    self-describing stream :func:`huffman_encode` would emit (the payload
+    bits are identical by construction) and run the retained pre-change
+    decoder — per-call tables, per-code-bit window pass. The segmented
+    counterpart of :func:`huffman_decode_ref`, so baselines that time the
+    pre-change path stay honest on sharded streams."""
+    symbols = np.asarray(symbols, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    framed = (
+        _MAGIC + struct.pack("<QI", int(n), len(symbols))
+        + symbols.astype("<i8").tobytes()
+        + lengths.astype("<u1").tobytes()
+        + payload
+    )
+    return huffman_decode_ref(framed)
 
 
 def huffman_decode(
@@ -574,11 +761,7 @@ def huffman_decode(
     if n == 0:
         return np.zeros(0, dtype=np.int64)
     pos = _chain_positions(len_at, n)
-    sym_idx = sym_at[pos]
-    if (sym_idx < 0).any():
-        raise ValueError("corrupt Huffman stream")
-    _check_payload_length(pos, len_at, payload_nbytes)
-    return symbols[sym_idx]
+    return _finish_payload(symbols, sym_at, len_at, pos, payload_nbytes)
 
 
 def huffman_decode_many(
@@ -604,30 +787,13 @@ def huffman_decode_many(
     ]
     if not live:
         return out
-    max_group_chunks = 4096  # ~bpc * 4096 bits of lockstep walk state
-    groups: list[list[int]] = [[]]
-    budget = max_group_chunks
-    for i in live:
-        chunks = -(-len(prepped[i][3]) // _CHAIN_BPC)
-        if groups[-1] and chunks > budget:
-            groups.append([])
-            budget = max_group_chunks
-        groups[-1].append(i)
-        budget -= chunks
-    positions_by_idx: dict[int, np.ndarray] = {}
-    for group in groups:
-        pos_list = _chain_positions_multi(
-            [(prepped[i][3], prepped[i][0]) for i in group]
-        )
-        positions_by_idx.update(zip(group, pos_list))
-    positions = [positions_by_idx[i] for i in live]
+    positions = _grouped_positions(
+        [(prepped[i][3], prepped[i][0]) for i in live]
+    )
     for i, pos in zip(live, positions):
         n, symbols, sym_at, len_at, payload_nbytes = prepped[i]
-        sym_idx = sym_at[pos]
-        if (sym_idx < 0).any():
-            raise ValueError("corrupt Huffman stream")
-        _check_payload_length(pos, len_at, payload_nbytes)
-        out[i] = symbols[sym_idx]
+        out[i] = _finish_payload(symbols, sym_at, len_at, pos,
+                                 payload_nbytes)
     return out
 
 

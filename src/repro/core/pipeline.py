@@ -24,16 +24,19 @@ Stages:
      one fitted model pays it once; decompress replays corrections through
      the same batched kernel path;
   6. serialization through :mod:`repro.codec`: ``artifact.to_bytes()`` emits
-     the versioned container (latent stream + decoder params + correction
-     params + ONE combined guarantee stream — a CSR-of-CSR directory over
-     species fronting the {coeff, CSR index bitmap, basis} sub-streams,
-     container v2; v1's per-species nested containers still decode) and
+     the versioned container (container v3 by default: a time-sharded
+     latent stream — per-shard Huffman chains under one shared codebook —
+     plus decoder/correction params and ONE combined guarantee stream, a
+     CSR-of-CSR directory over species fronting the {coeff, CSR index
+     bitmap, basis} sub-streams; v2's single-chain latent and v1's
+     per-species nested containers still encode/decode) and
      ``byte_breakdown`` is a view over the container's *measured* stream
      lengths — ``breakdown["total"] == len(blob)`` exactly, no estimates.
      Consumers that want one species or a time window decode the blob
      randomly-accessed via ``repro.codec.decompress(blob, species=...,
      time_range=...)`` / ``repro.codec.PartialDecoder`` — bitwise equal to
-     slicing the full decode, without parsing unselected streams.
+     slicing the full decode, without parsing unselected streams (and, on
+     v3, entropy-decoding only the latent shards covering the window).
 
 This class is the fit/orchestration layer; the wire format and the
 standalone decode path live in :mod:`repro.codec` (``compress`` returns an
@@ -102,14 +105,42 @@ class CompressedArtifact:
     _wire: Optional[bytes] = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    # shared latent wire memo: a target_nrmse sweep emits many artifacts
+    # off one fitted model with bit-identical latents, so the pipeline
+    # hands every artifact of a sweep key the same dict and the entropy
+    # pack (single chain or sharded) is paid once per layout, not per blob
+    _latent_memo: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def latent_blob(self) -> bytes:
+        """Single sequential Huffman chain (the v1/v2 ``latent`` stream)."""
         if self._latent_blob is None:
-            self._latent_blob = entropy.huffman_encode(self.latent_q)
+            memo = self._latent_memo
+            hit = memo.get("chain") if memo is not None else None
+            if hit is None:
+                hit = entropy.huffman_encode(self.latent_q)
+                if memo is not None:
+                    memo["chain"] = hit
+            self._latent_blob = hit
         return self._latent_blob
 
-    def latent_bytes(self) -> int:
-        return len(self.latent_blob())
+    def sharded_latent_stream(self, shard_rows: int) -> bytes:
+        """Time-sharded segmented stream (the v3 ``latent`` stream),
+        memoized per shard size across a sweep's artifacts."""
+        memo = self._latent_memo
+        # the packer clamps shard_rows to the row count, so clamp the key
+        # too: every oversized request is the same single-shard stream
+        shard_rows = min(max(int(shard_rows), 1), self.latent_q.shape[0])
+        key = ("sharded", shard_rows)
+        if memo is not None and key in memo:
+            return memo[key]
+        from repro import codec
+
+        stream = codec.pack_latent_stream(self.latent_q, shard_rows)
+        if memo is not None:
+            memo[key] = stream
+        return stream
 
     def to_bytes(self) -> bytes:
         """Serialize to the self-describing container (see repro.codec)."""
@@ -188,6 +219,8 @@ class GBATCPipeline:
         self._blocks: Optional[np.ndarray] = None
         self._vecs_orig: Optional[np.ndarray] = None
         self._data: Optional[np.ndarray] = None
+        self._shape: Optional[tuple[int, int, int, int]] = None
+        self._data_nbytes: int = 0
         self._norm: Optional[tuple[np.ndarray, np.ndarray]] = None
         # tau-independent guarantee state per (latent_bin, skip_correction)
         self._prepared: dict[tuple, tuple] = {}
@@ -210,11 +243,94 @@ class GBATCPipeline:
 
     def fit(self, data: np.ndarray, verbose: bool = False) -> dict:
         """Train the AE (and correction net) once; returns training stats."""
-        cfg = self.cfg
         assert data.shape[0] == self.n_species
         normed, mn, rngs = self._normalize(data)
-        blocks = blocking.to_blocks(normed, cfg.geometry)
+        blocks = blocking.to_blocks(normed, self.cfg.geometry)
+        return self._fit_blocks(
+            blocks, mn, rngs, shape=tuple(data.shape),
+            data_nbytes=data.nbytes, data=data, verbose=verbose,
+        )
 
+    def fit_stream(self, loader, verbose: bool = False) -> dict:
+        """Train from time-chunked input without materializing the field.
+
+        ``loader`` exposes a re-iterable ``chunks()`` yielding consecutive
+        (S, Tc, H, W) time chunks, each Tc divisible by the geometry's
+        ``bt`` so per-chunk blocks concatenate into the canonical
+        time-major block order. Two passes: per-species running min/max
+        (exact — min/max commute with chunking), then normalize+block each
+        chunk. The training inputs — and therefore the fitted artifact —
+        are **bit-identical** to ``fit(concatenate(chunks, axis=1))``; only
+        the peak memory differs (one chunk plus the block array instead of
+        the full field plus its normalized copy).
+
+        The original field is not retained, so ``compress`` reports
+        per-species NRMSE from the normalized block vectors (equal to the
+        data-space NRMSE up to float rounding: per-species min/max
+        normalization makes the range exactly 1).
+        """
+        cfg = self.cfg
+        geom = cfg.geometry
+        mn = mx = None
+        t_total = 0
+        nbytes = 0
+        spatial = None
+        for chunk in loader.chunks():
+            chunk = np.asarray(chunk)
+            if chunk.ndim != 4 or chunk.shape[0] != self.n_species:
+                raise ValueError(
+                    f"chunk shape {chunk.shape} does not match "
+                    f"(S={self.n_species}, Tc, H, W)"
+                )
+            if chunk.shape[1] == 0 or chunk.shape[1] % geom.bt:
+                raise ValueError(
+                    f"chunk spans {chunk.shape[1]} frames, not a positive "
+                    f"multiple of block depth bt={geom.bt}"
+                )
+            if spatial is None:
+                spatial = chunk.shape[2:]
+            elif chunk.shape[2:] != spatial:
+                raise ValueError(
+                    f"chunk grid {chunk.shape[2:]} != first chunk {spatial}"
+                )
+            cmn = chunk.min(axis=(1, 2, 3))
+            cmx = chunk.max(axis=(1, 2, 3))
+            mn = cmn if mn is None else np.minimum(mn, cmn)
+            mx = cmx if mx is None else np.maximum(mx, cmx)
+            t_total += chunk.shape[1]
+            nbytes += chunk.nbytes
+        if mn is None:
+            raise ValueError("loader yielded no chunks")
+        rngs = np.maximum(mx - mn, 1e-30)
+        shape = (self.n_species, t_total, *spatial)
+        blocking.check_divisible(shape, geom)
+        # preallocate and fill per chunk: peak memory stays one full block
+        # array plus one chunk, never the transient 2x a concat would cost
+        h, w = spatial
+        per_frame = (h // geom.ph) * (w // geom.pw)
+        nb = (t_total // geom.bt) * per_frame
+        blocks = np.empty(
+            (nb, self.n_species, geom.bt, geom.ph, geom.pw), np.float32
+        )
+        row = 0
+        for chunk in loader.chunks():
+            chunk = np.asarray(chunk)
+            normed = (
+                (chunk - mn[:, None, None, None]) / rngs[:, None, None, None]
+            ).astype(np.float32)
+            part = blocking.to_blocks(normed, geom)
+            blocks[row : row + part.shape[0]] = part
+            row += part.shape[0]
+        return self._fit_blocks(
+            blocks, mn.astype(np.float32), rngs.astype(np.float32),
+            shape=shape, data_nbytes=nbytes, data=None, verbose=verbose,
+        )
+
+    def _fit_blocks(self, blocks: np.ndarray, mn: np.ndarray,
+                    rngs: np.ndarray, *, shape, data_nbytes: int,
+                    data: Optional[np.ndarray], verbose: bool) -> dict:
+        """Shared fit body over normalized blocks (full or streamed input)."""
+        cfg = self.cfg
         params, losses = ae.fit(
             self.model,
             blocks,
@@ -252,6 +368,8 @@ class GBATCPipeline:
         self._blocks = blocks
         self._vecs_orig = blocking.blocks_as_vectors(blocks)
         self._data = data
+        self._shape = tuple(shape)
+        self._data_nbytes = int(data_nbytes)
         self._norm = (mn, rngs)
         self._prepared.clear()
         self._last_prepared = None
@@ -292,8 +410,11 @@ class GBATCPipeline:
             self._vecs_orig, vecs_rec, reuse=self._last_prepared
         )
         self._last_prepared = prepared
-        latent_blob = entropy.huffman_encode(lat_q)
-        entry = (prepared, lat_q, lat_bin, corr_params, latent_blob)
+        # latent wire streams are NOT packed here — the artifact packs
+        # lazily per requested layout (sharded v3 by default, the single
+        # chain only if a legacy version asks) into this shared memo, so
+        # a sweep pays each pack once and a pure-report sweep pays none
+        entry = (prepared, lat_q, lat_bin, corr_params, {})
         # bounded FIFO: each entry pins several (S, NB, D) fp64 tensors, and
         # a latent_bin_rel sweep would otherwise accumulate one per value
         while len(self._prepared) >= self._PREPARED_CACHE_MAX:
@@ -331,10 +452,10 @@ class GBATCPipeline:
             raise RuntimeError("call fit() first")
         cfg = self.cfg
         geom = cfg.geometry
-        data = self._data
+        shape = self._shape
         mn, rngs = self._norm
 
-        prepared, lat_q, lat_bin, corr_params, latent_blob = \
+        prepared, lat_q, lat_bin, corr_params, latent_memo = \
             self._prepare_guarantee(latent_bin_rel, skip_correction)
 
         d = geom.block_size
@@ -349,23 +470,33 @@ class GBATCPipeline:
             species_guarantees=arts,
             norm_min=mn,
             norm_range=rngs,
-            shape=tuple(data.shape),
+            shape=shape,
             cfg=cfg,
-            _latent_blob=latent_blob,
             _param_streams=self._packed_param_streams(),
+            _latent_memo=latent_memo,
         )
 
         rec_blocks = blocking.vectors_as_blocks(corrected, geom)
-        rec_normed = blocking.from_blocks(rec_blocks, data.shape, geom)
+        rec_normed = blocking.from_blocks(rec_blocks, shape, geom)
         recon = rec_normed * rngs[:, None, None, None] + mn[:, None, None, None]
 
         bb = artifact.byte_breakdown()
-        per_species = np.array(
-            [metrics.nrmse(data[s], recon[s]) for s in range(self.n_species)]
-        )
+        if self._data is not None:
+            per_species = np.array(
+                [metrics.nrmse(self._data[s], recon[s])
+                 for s in range(self.n_species)]
+            )
+        else:
+            # streamed fit: the original field was never materialized.
+            # NRMSE is range-normalized and per-species min/max
+            # normalization makes the range exactly 1, so the normalized
+            # block-vector RMS *is* the NRMSE (up to float rounding; the
+            # guarantee itself is enforced in normalized units either way)
+            err = corrected - self._vecs_orig
+            per_species = np.sqrt(np.mean(np.square(err), axis=(1, 2)))
         return CompressionReport(
             recon=recon.astype(np.float32),
-            compression_ratio=data.nbytes / bb["total"],
+            compression_ratio=self._data_nbytes / bb["total"],
             mean_nrmse=float(per_species.mean()),
             per_species_nrmse=per_species,
             bytes_breakdown=bb,

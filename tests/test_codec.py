@@ -195,23 +195,34 @@ class TestCodecRoundTrip:
             assert per.max() <= target * (1 + 1e-3)
             assert len(blob) == rep.bytes_breakdown["total"]
 
-    def test_v1_container_back_compat(self, blob_and_report):
-        """A v1 (per-species nested guarantee) container must decode
-        bit-identically to the v2 combined layout through the same entry
-        point, and shave framing bytes in v2."""
+    def test_version_back_compat(self, blob_and_report):
+        """v1 (per-species nested guarantee) and v2 (single-chain latent)
+        containers must decode bit-identically to the default v3
+        time-sharded layout through the same entry point; all three
+        versions stay writable so round-trips cover each."""
         blob, rep = blob_and_report
         blob_v1 = codec.encode(rep.artifact, version=1)
+        blob_v2 = codec.encode(rep.artifact, version=2)
         assert ContainerReader(blob_v1).version == 1
-        assert ContainerReader(blob).version == 2
-        assert len(blob) < len(blob_v1)  # combined layout shaves framing
-        np.testing.assert_array_equal(
-            codec.decompress(blob_v1), codec.decompress(blob)
-        )
-        bb1, bb2 = codec.stream_breakdown(blob_v1), codec.stream_breakdown(blob)
-        for key in ("latent", "decoder", "correction", "coeff", "index",
-                    "basis"):
-            assert bb1[key] == bb2[key]
-        assert bb1["total"] == len(blob_v1) and bb2["total"] == len(blob)
+        assert ContainerReader(blob_v2).version == 2
+        assert ContainerReader(blob).version == 3
+        assert len(blob_v2) < len(blob_v1)  # combined layout shaves framing
+        full = codec.decompress(blob)
+        # full v3 decode == v2 decode BYTE for byte on the same fit
+        assert codec.decompress(blob_v2).tobytes() == full.tobytes()
+        np.testing.assert_array_equal(codec.decompress(blob_v1), full)
+        bb1 = codec.stream_breakdown(blob_v1)
+        bb2 = codec.stream_breakdown(blob_v2)
+        bb3 = codec.stream_breakdown(blob)
+        for key in ("decoder", "correction", "coeff", "index", "basis"):
+            assert bb1[key] == bb2[key] == bb3[key]
+        # v1/v2 count the latent stream whole (inline Huffman header); v3
+        # buckets only the shard chain payloads as latent, the shared
+        # codebook + shard table land in meta — parts still sum exactly
+        assert bb1["latent"] == bb2["latent"] >= bb3["latent"]
+        assert bb1["total"] == len(blob_v1)
+        assert bb2["total"] == len(blob_v2)
+        assert bb3["total"] == len(blob)
 
     def test_compress_with_data_fits_first(self, small_data):
         c = codec.GBATCCodec(
@@ -267,11 +278,15 @@ class TestByteAccounting:
         r = ContainerReader(blob)
         sizes = r.stream_sizes()
         bb = rep.bytes_breakdown
-        assert bb["latent"] == sizes["latent"]
+        # v3 buckets the shard chain payloads as latent; the shard head
+        # (shared codebook + extents table) is framing and lands in meta
+        ldir = codec.LatentShardDirectory(r["latent"])
+        assert bb["latent"] == ldir.payload_total
+        assert bb["latent"] + ldir.header_bytes == sizes["latent"]
         assert bb["decoder"] == sizes["decoder"]
         assert bb["correction"] == sizes["correction"]
         # meta is measured framing + metadata, not the seed's 8*S + 64 guess
-        assert bb["meta"] >= r.header_bytes + sizes["meta"]
+        assert bb["meta"] >= r.header_bytes + sizes["meta"] + ldir.header_bytes
 
     def test_gba_container_has_no_correction_stream(self, fitted_codec):
         blob, rep = fitted_codec.compress_report(

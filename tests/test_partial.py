@@ -156,7 +156,7 @@ class TestPartialDecoder:
         )
         assert pd.shape == full.shape
         assert pd.n_species == full.shape[0]
-        assert pd.version == 2
+        assert pd.version == 3  # writers default to the time-sharded layout
 
     def test_bytes_parsed_shrinks_with_selection(self, blob):
         pd = codec.PartialDecoder(blob)

@@ -271,9 +271,12 @@ class TestFusedDecode:
         """The fused NN decode chunks at _FUSED_CHUNK blocks to bound peak
         activation memory at paper scale; chunking (including the padded
         ragged tail) must not change a single bit."""
+        from repro.codec import runtime as codec_runtime
+
         _, _, _, blob = fitted_blob
         full = codec.decompress(blob)
-        monkeypatch.setattr(codec, "_FUSED_CHUNK", 48)
+        codec.clear_decode_cache()  # force a real re-decode under chunking
+        monkeypatch.setattr(codec_runtime, "_FUSED_CHUNK", 48)
         np.testing.assert_array_equal(codec.decompress(blob), full)
 
     def test_decompressed_meets_bound(self, fitted_blob):
