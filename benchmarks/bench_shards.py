@@ -76,9 +76,10 @@ def run(quick: bool = True, seed: int = 1):
     t0 = time.time()
     gbatc.fit(data)
     fit_s = time.time() - t0
-    blob_v3, rep = gbatc.compress_report(target_nrmse=TARGET)
+    blob_default, rep = gbatc.compress_report(target_nrmse=TARGET)
     art = rep.artifact
     blob_v2 = codec.encode(art, version=2)
+    blob_v3 = codec.encode(art, version=3)
     t = data.shape[1]
     bt = art.cfg.geometry.bt
     n_tgroups = t // bt
@@ -89,7 +90,12 @@ def run(quick: bool = True, seed: int = 1):
     full_v2 = codec.decompress(blob_v2)
     blobs = {tg: codec.encode(art, version=3, shard_tgroups=tg)
              for tg in shard_sizes}
-    assert blobs[codec.DEFAULT_SHARD_TGROUPS] == blob_v3  # default layout
+    assert blobs[codec.DEFAULT_SHARD_TGROUPS] == blob_v3  # default shards
+    # the default writer is now v4 = this v3 layout + integrity digests,
+    # decoding bit-identically (the v4 delta is bench_integrity's subject)
+    assert ContainerReader(blob_default).version == 4
+    assert codec.decompress(blob_default).tobytes() == full_v2.tobytes(), \
+        "v4 default full decode != v2 decode byte-for-byte"
     for tg, b in blobs.items():
         full_v3 = codec.decompress(b)
         assert full_v3.tobytes() == full_v2.tobytes(), \
@@ -184,6 +190,7 @@ def run(quick: bool = True, seed: int = 1):
         "fit_s": fit_s,
         "blob_bytes_v2": len(blob_v2),
         "blob_bytes_v3_default": len(blob_v3),
+        "blob_bytes_v4_default": len(blob_default),
         "v3_framing_overhead_bytes": len(blob_v3) - len(blob_v2),
         "latent_bytes_total": int(latent_total),
         "latent_bytes_v2_stream": int(v2_latent),

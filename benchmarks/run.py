@@ -178,6 +178,31 @@ def bench_sharded_latents(rows, full=False):
     ))
 
 
+def bench_integrity_v4(rows, full=False):
+    """Integrity container (v4): digest overhead, verification budget,
+    salvage throughput; emits BENCH_integrity.json. The clean-blob
+    v4/v3 byte-identity gate, the verify-cost budget (< 3% of a warm
+    full decode), salvage correctness, and the 100%-detection fault
+    sweep are asserted inside before any number is reported."""
+    from benchmarks import bench_integrity
+
+    summary = bench_integrity.run(quick=not full)
+    rows.append((
+        "integrity_verify_blob",
+        summary["verify_blob_ms"] * 1e3,
+        f"frac_of_warm_decode="
+        f"{summary['verify_fraction_of_warm_decode']:.1%}"
+        f" digest_bytes={summary['digest_overhead_bytes']}",
+    ))
+    k1 = summary["salvage"][0]
+    rows.append((
+        "integrity_salvage_1_species",
+        k1["salvage_ms"] * 1e3,
+        f"MBps={k1['salvage_MBps']:.0f}"
+        f" sweep_detect={summary['fault_sweep']['detection_rate']:.0%}",
+    ))
+
+
 def bench_sz(rows):
     from repro.core import sz
     from repro.data import s3d
@@ -216,6 +241,7 @@ def main() -> None:
     guarded("codec_wire", bench_codec_wire, rows, full=full)
     guarded("partial_decode", bench_partial_decode, rows, full=full)
     guarded("sharded_latents", bench_sharded_latents, rows, full=full)
+    guarded("integrity", bench_integrity_v4, rows, full=full)
     guarded("bench_sz", bench_sz, rows)
 
     # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)

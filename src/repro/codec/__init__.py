@@ -13,7 +13,7 @@ stream          payload
 ==============  ====================================================
 ``meta``        geometry, AE structure, shape, latent bin, per-species
                 normalization (min/range) — fixed-layout struct
-``latent``      (v3, default) time-sharded segmented stream: ONE shared
+``latent``      (v3+) time-sharded segmented stream: ONE shared
                 Huffman codebook + a byte-extent directory over fixed
                 block-row shards, each an independently decodable chain
                 — a time window entropy-decodes only its covering
@@ -29,15 +29,32 @@ stream          payload
 ``guarantee<s>``  (v1, still read) per-species
                 :class:`~repro.core.gae.GuaranteeArtifact` as a nested
                 container.
+``integrity``   (v4, default) CRC32 digests over everything else: the
+                outer header, every sibling stream whole, and every
+                random-access unit (each latent shard's chain, each
+                species' guarantee byte-extent) — self-checked first,
+                so a corrupt digest table indicts itself, never the
+                data. Verification is lazy and memoized with decode:
+                a window query digest-checks exactly what it reads.
 ==============  ====================================================
 
 Selective decode: ``decompress(blob, species=..., time_range=...)`` (or a
 reusable :class:`PartialDecoder`) parses only the header plus the
-requested streams; on a v3 container a time-window query is **O(window)
+requested streams; on a v3+ container a time-window query is **O(window)
 end to end** — latent shards, guarantee streams, and the fused NN decode
 all touch only the window. Every slice is bitwise equal to slicing the
-full decode; v1/v2 blobs decode through the same entry points unchanged,
-and a full v3 decode equals the v2 decode byte for byte on the same fit.
+full decode; v1–v3 blobs decode through the same entry points unchanged,
+and a full v4 decode equals the v3 decode byte for byte on the same fit.
+
+Robustness: decoding raises a structured
+:class:`~repro.core.container.ContainerFormatError` (``.stream`` /
+``.unit`` / ``.offset``) on provable corruption, and
+``decompress(blob, on_error="salvage")`` instead quarantines the corrupt
+units, decodes everything that still verifies (bitwise equal to the
+clean decode), NaN-fills the rest, and returns ``(field,
+DecodeReport)``. :func:`write`/:func:`read` are the atomic
+(tmp+fsync+rename) file pair; :func:`verify_blob` digest-checks a v4
+blob end to end without decoding it.
 
 The package layers the codec by responsibility:
 
@@ -51,7 +68,9 @@ The package layers the codec by responsibility:
   content-keyed head cache, lazy per-shard latent stores;
 * :mod:`repro.codec.decode` — full-field decode entry points, fused hot
   path and the retained bit-identity reference orchestration;
-* :mod:`repro.codec.partial` — :class:`PartialDecoder` and slicing.
+* :mod:`repro.codec.partial` — :class:`PartialDecoder` and slicing;
+* :mod:`repro.codec.integrity` — blob verification and the salvage
+  decode path (:func:`salvage_decompress`, :class:`DecodeReport`).
 
 Byte accounting is a *view over the container's stream table*
 (:func:`stream_breakdown`), so ``breakdown["total"] == len(blob)`` holds
@@ -72,7 +91,7 @@ from repro.codec.decode import (
     reconstruct,
     reconstruct_reference,
 )
-from repro.codec.encode import GBATCCodec, encode
+from repro.codec.encode import GBATCCodec, encode, read, write
 from repro.codec.format import (
     _GDIR_HEAD,
     _GDIR_REC,
@@ -88,6 +107,13 @@ from repro.codec.params import (
     pack_params,
     unpack_params,
 )
+from repro.codec.integrity import (
+    DecodeReport,
+    IntegrityFailure,
+    SpeciesReport,
+    salvage_decompress,
+    verify_blob,
+)
 from repro.codec.partial import PartialDecoder
 from repro.codec.runtime import (
     _fused_vecs,
@@ -101,12 +127,19 @@ from repro.core.container import ContainerFormatError
 __all__ = [
     "GBATCCodec",
     "ContainerFormatError",
+    "DecodeReport",
     "GuaranteeDirectory",
+    "IntegrityFailure",
     "LatentShardDirectory",
     "PartialDecoder",
+    "SpeciesReport",
     "DEFAULT_SHARD_TGROUPS",
     "clear_decode_cache",
     "encode",
+    "read",
+    "salvage_decompress",
+    "verify_blob",
+    "write",
     "pack_guarantee_stream",
     "pack_latent_stream",
     "pack_params",

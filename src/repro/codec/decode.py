@@ -20,11 +20,13 @@ from repro.codec.runtime import (
     _cached_head,
     _decode_guarantees,
     _decode_head,
+    _evict_head,
     _fused_vecs,
     _latents32,
     _runtime,
     _runtime_reference,
 )
+from repro.core.container import ContainerFormatError
 from repro.core import blocking, correction, entropy, gae
 from repro.core.pipeline import CompressedArtifact, _batched
 from repro.core.quantization import dequantize
@@ -163,7 +165,8 @@ def reconstruct_reference(artifact: CompressedArtifact,
     return _finalize_field(corrected, artifact)
 
 
-def decompress(blob: bytes, *, species=None, time_range=None) -> np.ndarray:
+def decompress(blob: bytes, *, species=None, time_range=None,
+               on_error: str = "raise"):
     """Standalone decode: container bytes -> (S, T, H, W) float32 field.
 
     Needs no codec instance and no fitted model — everything is
@@ -174,18 +177,41 @@ def decompress(blob: bytes, *, species=None, time_range=None) -> np.ndarray:
     (a half-open ``(t0, t1)`` frame window) select a slice to decode
     randomly-accessed: only the requested guarantee streams are parsed and
     entropy-decoded, the fused NN decode covers only the block rows of the
-    window — and on a v3 (time-sharded) container only the latent shards
+    window — and on a v3+ (time-sharded) container only the latent shards
     covering the window entropy-decode, making a window query O(window)
     end to end — with the result bitwise equal to slicing a full decode:
     ``decompress(b, species=s, time_range=(t0, t1))
     == decompress(b)[s, t0:t1]``. An integer ``species`` drops the species
     axis, like numpy indexing.
 
+    On a v4 container every byte the decode reads is digest-checked
+    (CRC32) before it is interpreted; a mismatch raises
+    :class:`ContainerFormatError` with structured context (stream,
+    offset, unit). ``on_error="salvage"`` switches to degraded-but-honest
+    decoding: corrupt species/latent shards are quarantined instead of
+    aborting, everything verifiable decodes (bitwise equal to the clean
+    decode), damaged regions come back NaN, and the call returns a
+    ``(field, DecodeReport)`` tuple — see
+    :func:`repro.codec.integrity.salvage_decompress`.
+
     Parsed container heads are served from a content-keyed bounded cache,
     so repeated (window) queries on one blob skip the head parse and every
     already-decoded stream; :func:`repro.codec.clear_decode_cache` drops
-    the memo (benchmarks use it to time cold decodes).
+    the memo (benchmarks use it to time cold decodes). A raise-mode
+    decode that hits corruption evicts the blob's cached head, and
+    salvage never touches the cache — a salvaged parse can never be
+    served later as a clean head.
     """
+    if on_error not in ("raise", "salvage"):
+        raise ValueError(
+            f"on_error must be 'raise' or 'salvage', got {on_error!r}"
+        )
+    if on_error == "salvage":
+        from repro.codec.integrity import salvage_decompress
+
+        return salvage_decompress(
+            blob, species=species, time_range=time_range
+        )
     if species is not None or time_range is not None:
         from repro.codec.partial import PartialDecoder
 
@@ -193,13 +219,19 @@ def decompress(blob: bytes, *, species=None, time_range=None) -> np.ndarray:
             species=species, time_range=time_range
         )
     head = _cached_head(blob)
-    vecs_dev = _fused_vecs(
-        head.runtime, head.ae_params, head.corr_params,
-        _latents32(head.latents.full(), head.latent_bin),
-    )
-    # the guarantee streams entropy-decode while the dispatched NN runs
-    artifact = _finish_artifact(head)
-    return _apply_guarantees_and_finalize(vecs_dev, artifact)
+    try:
+        vecs_dev = _fused_vecs(
+            head.runtime, head.ae_params, head.corr_params,
+            _latents32(head.latents.full(), head.latent_bin),
+        )
+        # the guarantee streams entropy-decode while the dispatched NN runs
+        artifact = _finish_artifact(head)
+        return _apply_guarantees_and_finalize(vecs_dev, artifact)
+    except ContainerFormatError:
+        # corruption discovered after the head parse (lazy shard/species
+        # digest or entropy failure): drop the poisoned cached head
+        _evict_head(blob)
+        raise
 
 
 def decompress_reference(blob: bytes, conv_impl: str = "2d") -> np.ndarray:

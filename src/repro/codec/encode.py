@@ -1,16 +1,25 @@
 """Encode planner + codec facade: pipeline artifacts -> container bytes.
 
 :func:`encode` maps a fitted :class:`CompressedArtifact` onto the wire
-streams of the requested container version — v3 (default) shards the
-latent stream along time and packs the per-shard chains in parallel, v2
-writes the single-chain selective layout, v1 the original per-species
-nested guarantee containers. All three stay writable so round-trip and
-back-compat gates can cover every version; a v3 full decode is bitwise
-equal to the v2 decode of the same fit.
+streams of the requested container version — v4 (default) is v3 plus an
+``integrity`` stream of CRC32 digests (per stream + per random-access
+unit + the outer header), v3 shards the latent stream along time and
+packs the per-shard chains in parallel, v2 writes the single-chain
+selective layout, v1 the original per-species nested guarantee
+containers. All four stay writable so round-trip and back-compat gates
+can cover every version; a v4 full decode is bitwise equal to the v3
+decode of the same fit (the digests change no payload byte).
+
+:func:`write`/:func:`read` are the file-level pair: an atomic
+tmp+fsync+rename publish (the ``train/checkpoint.py`` idiom), so a
+crash mid-write can never leave a half-blob that parses, and a
+digest-verifying read.
 """
 
 from __future__ import annotations
 
+import os
+import tempfile
 from typing import Optional
 
 import numpy as np
@@ -29,15 +38,16 @@ from repro.core.pipeline import (
 
 
 def encode(artifact: CompressedArtifact,
-           version: int = container_format.FORMAT_VERSION_SHARDED,
+           version: int = container_format.FORMAT_VERSION_INTEGRITY,
            *, shard_tgroups: Optional[int] = None) -> bytes:
     """Serialize a :class:`CompressedArtifact` into a container blob.
 
-    ``version`` selects the layout: 3 (default) writes the time-sharded
-    latent stream + combined guarantee stream; 2 the single-chain latent +
-    combined guarantee; 1 the original per-species nested containers
-    (both retained byte-stable so back-compat round-trips stay testable).
-    ``shard_tgroups`` (v3 only) sets the shard size in time block-groups
+    ``version`` selects the layout: 4 (default) writes the time-sharded
+    latent stream + combined guarantee stream + integrity digests; 3 the
+    same without digests; 2 the single-chain latent + combined
+    guarantee; 1 the original per-species nested containers (all
+    retained byte-stable so back-compat round-trips stay testable).
+    ``shard_tgroups`` (v3+) sets the shard size in time block-groups
     (``bt`` frames each); the default of
     ``format.DEFAULT_SHARD_TGROUPS`` gives the finest window a block-row
     decode can address. Oversized values clamp to one shard.
@@ -46,10 +56,10 @@ def encode(artifact: CompressedArtifact,
     if version not in container_format.SUPPORTED_VERSIONS:
         raise ValueError(f"unknown container version {version}")
     if (shard_tgroups is not None
-            and version != container_format.FORMAT_VERSION_SHARDED):
+            and version < container_format.FORMAT_VERSION_SHARDED):
         raise ValueError(
             f"shard_tgroups applies to container v"
-            f"{container_format.FORMAT_VERSION_SHARDED} only"
+            f"{container_format.FORMAT_VERSION_SHARDED}+ only"
         )
     w = ContainerWriter(version=version)
     w.add("meta", wire._pack_meta(artifact))
@@ -79,7 +89,71 @@ def encode(artifact: CompressedArtifact,
     else:
         for sidx, g in enumerate(artifact.species_guarantees):
             w.add(f"guarantee{sidx}", g.to_bytes())
+    if version >= container_format.FORMAT_VERSION_INTEGRITY:
+        # two-pass outer digest: the integrity payload's LENGTH is fixed
+        # before its content (it depends only on stream count/names and
+        # unit counts), so the exact outer header+table bytes — integrity
+        # entry included — are known before outer_crc is patched in
+        streams = list(w._streams)
+        integ = wire.pack_integrity_stream(streams)
+        header = container_format.pack_header(
+            version,
+            [(n, len(p)) for n, p in streams] + [("integrity", len(integ))],
+        )
+        w.add("integrity", wire.finalize_integrity_stream(integ, header))
     return w.to_bytes()
+
+
+def write(path, blob: bytes) -> None:
+    """Atomically publish container bytes at ``path``.
+
+    The checkpoint-writer idiom: write to a temp file in the same
+    directory, flush + fsync, then ``os.replace`` — so a crash at any
+    point leaves either the previous file or the complete new one, never
+    a half-blob that parses (v4's outer digest would catch one anyway;
+    this makes the failure mode impossible rather than detectable).
+    """
+    path = os.fspath(path)
+    blob = bytes(blob)
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(
+        dir=d, prefix=f".{os.path.basename(path)}.tmp"
+    )
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    # fsync the directory so the rename itself is durable
+    try:
+        dfd = os.open(d, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+def read(path, *, verify: bool = True) -> bytes:
+    """Read container bytes from ``path``; ``verify=True`` (default)
+    digest-checks every payload byte on v4 blobs (structural parse only
+    below v4) before returning, raising
+    :class:`~repro.core.container.ContainerFormatError` on corruption."""
+    with open(os.fspath(path), "rb") as f:
+        blob = f.read()
+    if verify:
+        from repro.codec.integrity import verify_blob
+
+        verify_blob(blob)
+    return blob
 
 
 class GBATCCodec:
@@ -131,7 +205,9 @@ class GBATCCodec:
         self._pipe.fit(data, verbose=verbose)
         return self
 
-    def fit_stream(self, loader, verbose: bool = False) -> "GBATCCodec":
+    def fit_stream(self, loader, verbose: bool = False, *,
+                   loader_retries: int = 2, retry_backoff: float = 0.1,
+                   _sleep=None) -> "GBATCCodec":
         """Fit from time-chunked input without materializing the field.
 
         ``loader`` must expose ``shape`` — the full (S, T, H, W) — and a
@@ -139,11 +215,21 @@ class GBATCCodec:
         chunks (each Tc divisible by the block geometry's ``bt``), e.g.
         :class:`repro.data.s3d.S3DChunkLoader`. The fit is bit-identical
         to ``fit(concatenate(chunks, axis=1))``.
+
+        Transient loader faults (I/O errors mid-iteration) restart the
+        failing pass from its beginning with exponential backoff — up to
+        ``loader_retries`` restarts per pass, ``retry_backoff`` seconds
+        doubling per attempt — and the result stays bit-identical to a
+        clean run (each pass is a pure function of the re-iterated
+        chunks). Shape/validation errors are never retried.
         """
         s = int(loader.shape[0])
         if self._pipe is None or self._pipe.n_species != s:
             self._pipe = GBATCPipeline(self.cfg, n_species=s)
-        self._pipe.fit_stream(loader, verbose=verbose)
+        self._pipe.fit_stream(
+            loader, verbose=verbose, loader_retries=loader_retries,
+            retry_backoff=retry_backoff, _sleep=_sleep,
+        )
         return self
 
     def compress(self, data: Optional[np.ndarray] = None,
@@ -164,10 +250,29 @@ class GBATCCodec:
         rep = self._pipe.compress(target_nrmse=target_nrmse, **kw)
         return rep.artifact.to_bytes(), rep
 
+    def write(self, path, data: Optional[np.ndarray] = None,
+              target_nrmse: float = 1e-3, **kw) -> bytes:
+        """Compress and atomically publish the container at ``path``
+        (tmp + fsync + rename — a crash can never leave a half-blob).
+        Pass ``data`` to (re)fit first. Returns the written bytes."""
+        blob = self.compress(data, target_nrmse=target_nrmse, **kw)
+        write(path, blob)
+        return blob
+
     @staticmethod
-    def decompress(blob: bytes, *, species=None, time_range=None) -> np.ndarray:
+    def read(path, *, verify: bool = True) -> bytes:
+        """Read (and by default digest-verify) a container file; see
+        module :func:`read`."""
+        return read(path, verify=verify)
+
+    @staticmethod
+    def decompress(blob: bytes, *, species=None, time_range=None,
+                   on_error: str = "raise"):
         """Decode a container blob (stateless; see module :func:`decompress`).
 
         ``species``/``time_range`` select a slice to decode
-        randomly-accessed, bitwise equal to slicing the full decode."""
-        return _decompress(blob, species=species, time_range=time_range)
+        randomly-accessed, bitwise equal to slicing the full decode;
+        ``on_error="salvage"`` quarantines corruption and returns
+        ``(field, DecodeReport)``."""
+        return _decompress(blob, species=species, time_range=time_range,
+                           on_error=on_error)

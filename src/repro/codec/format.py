@@ -22,12 +22,37 @@ the ONE shared codebook stored in the stream head — mirroring the
 guarantee directory, every shard's byte extent follows from the table by
 prefix sums, so a time-window decode entropy-decodes only the shards
 covering the window (the O(window) latent path).
+
+Container v4's ``integrity`` stream (appended to the v3 stream set)::
+
+    magic "ITG1" | n_streams u16
+    per sibling stream, table order: name_len u8 | name (ascii) | crc u32
+    latent units:    head_len u32 | head_crc u32 | n_shards  u32 | n_shards  x crc u32
+    guarantee units: dir_len  u32 | dir_crc  u32 | n_species u32 | n_species x crc u32
+    outer_crc u32
+    self_crc  u32
+
+All digests are CRC32 (which detects *every* single-bit flip within a
+region). The whole-stream digests cover each sibling stream's full
+payload; the unit digests match the random-access units — the latent
+stream's head region (framing + codebook + shard table, whose length is
+stored explicitly so verification never depends on possibly-corrupt
+framing), each shard's chain payload, the guarantee stream's directory
+region, and each species' byte extent (its coeff/index/basis payloads,
+CRC-chained in that order) — so :class:`~repro.codec.PartialDecoder`
+verifies exactly the bytes a selection reads and no more. ``outer_crc``
+digests the *outer* container header + stream table (computable before
+the integrity payload exists because the table stores only this stream's
+length); ``self_crc`` digests every preceding integrity byte, so a flip
+inside the integrity stream itself is detected rather than mistaken for
+payload corruption.
 """
 
 from __future__ import annotations
 
 import os
 import struct
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
@@ -82,15 +107,17 @@ def _pack_meta(artifact) -> bytes:
 
 def _unpack_meta(buf: bytes):
     if len(buf) < _META_HEAD.size:
-        raise ContainerFormatError("meta stream truncated")
+        raise ContainerFormatError("meta stream truncated", stream="meta")
     flags, pdb, latent, bt, ph, pw, n_conv = _META_HEAD.unpack_from(buf, 0)
     if flags & ~_FLAG_CORRECTION:
         # unknown flag bits mean a newer writer (or corruption) — refuse
         # rather than decode under old-flag semantics
-        raise ContainerFormatError(f"unknown meta flags 0x{flags:02x}")
+        raise ContainerFormatError(
+            f"unknown meta flags 0x{flags:02x}", stream="meta", offset=0
+        )
     off = _META_HEAD.size
     if len(buf) < off + 2 * n_conv + _META_SHAPE.size:
-        raise ContainerFormatError("meta stream truncated")
+        raise ContainerFormatError("meta stream truncated", stream="meta")
     conv = tuple(
         int(c) for c in np.frombuffer(buf, dtype="<u2", count=n_conv, offset=off)
     )
@@ -100,26 +127,34 @@ def _unpack_meta(buf: bytes):
     if len(buf) != off + 8 * s:
         raise ContainerFormatError(
             f"meta stream is {len(buf)} bytes, expected {off + 8 * s} "
-            f"for {s} species"
+            f"for {s} species",
+            stream="meta",
         )
     if pdb not in (2, 4):
-        raise ContainerFormatError(f"bad param dtype byte {pdb} (expected 2 or 4)")
+        raise ContainerFormatError(
+            f"bad param dtype byte {pdb} (expected 2 or 4)", stream="meta"
+        )
     if min(bt, ph, pw, latent, n_conv, s, t, h, w) < 1 or min(conv) < 1:
         raise ContainerFormatError(
             f"meta stream carries degenerate structure: geometry "
             f"({bt},{ph},{pw}), latent {latent}, conv {conv}, shape "
-            f"({s},{t},{h},{w})"
+            f"({s},{t},{h},{w})",
+            stream="meta",
         )
     norm_min = np.frombuffer(buf, dtype="<f4", count=s, offset=off).copy()
     norm_range = np.frombuffer(buf, dtype="<f4", count=s, offset=off + 4 * s).copy()
     if not (np.isfinite(latent_bin) and latent_bin > 0):
-        raise ContainerFormatError(f"bad latent bin {latent_bin!r}")
+        raise ContainerFormatError(
+            f"bad latent bin {latent_bin!r}", stream="meta"
+        )
     if not (
         np.isfinite(norm_min).all()
         and np.isfinite(norm_range).all()
         and (norm_range > 0).all()
     ):
-        raise ContainerFormatError("non-finite or non-positive normalization")
+        raise ContainerFormatError(
+            "non-finite or non-positive normalization", stream="meta"
+        )
     cfg = PipelineConfig(
         geometry=blocking.BlockGeometry(bt=bt, ph=ph, pw=pw),
         latent=latent,
@@ -179,14 +214,16 @@ class GuaranteeDirectory:
         payload = bytes(payload)
         if len(payload) < _GDIR_HEAD.size:
             raise ContainerFormatError(
-                "guarantee stream truncated: no species directory"
+                "guarantee stream truncated: no species directory",
+                stream="guarantee", offset=0,
             )
         (s,) = _GDIR_HEAD.unpack_from(payload, 0)
         dir_end = _GDIR_HEAD.size + s * _GDIR_REC.size
         if len(payload) < dir_end:
             raise ContainerFormatError(
                 f"guarantee directory truncated: {len(payload)} bytes "
-                f"cannot hold {s} species records"
+                f"cannot hold {s} species records",
+                stream="guarantee", offset=0,
             )
         recs = list(_GDIR_REC.iter_unpack(payload[_GDIR_HEAD.size:dir_end]))
         self._meta = [(r[0], r[1], r[2], r[3]) for r in recs]
@@ -206,7 +243,8 @@ class GuaranteeDirectory:
         if off != len(payload):
             raise ContainerFormatError(
                 f"guarantee stream is {len(payload)} bytes but its "
-                f"directory declares {off}"
+                f"directory declares {off}",
+                stream="guarantee", offset=min(off, len(payload)),
             )
         self.dir_bytes = dir_end
         self.coeff_total = sum(coeff_lens)
@@ -238,6 +276,12 @@ class GuaranteeDirectory:
         """Payload bytes one species' decode touches (coeff+index+basis)."""
         return sum(hi - lo for lo, hi in
                    (self._extents[k][sidx] for k in range(3)))
+
+    def species_spans(self, sidx: int) -> tuple[tuple[int, int], ...]:
+        """Payload-relative (lo, hi) byte spans of one species' coeff,
+        index, and basis payloads — the unit a v4 species digest covers
+        (CRC-chained in this order) and the fault harness addresses."""
+        return tuple(self._extents[k][sidx] for k in range(3))
 
 
 # ---------------------------------------------------------------------------
@@ -325,23 +369,28 @@ class LatentShardDirectory:
     def __init__(self, payload: bytes):
         payload = bytes(payload)
         if len(payload) < _LAT3_HEAD.size + _LAT3_CB.size:
-            raise ContainerFormatError("latent shard stream truncated")
+            raise ContainerFormatError(
+                "latent shard stream truncated", stream="latent", offset=0
+            )
         magic, n_shards, shard_rows, n_rows, n_cols = \
             _LAT3_HEAD.unpack_from(payload, 0)
         if magic != _LAT3_MAGIC:
             raise ContainerFormatError(
-                f"bad latent shard magic {magic!r} (expected {_LAT3_MAGIC!r})"
+                f"bad latent shard magic {magic!r} (expected {_LAT3_MAGIC!r})",
+                stream="latent", offset=0,
             )
         if min(n_shards, shard_rows, n_rows, n_cols) < 1:
             raise ContainerFormatError(
                 f"degenerate latent shard geometry: {n_shards} shards of "
-                f"{shard_rows} rows for ({n_rows}, {n_cols}) latents"
+                f"{shard_rows} rows for ({n_rows}, {n_cols}) latents",
+                stream="latent", offset=0,
             )
         if n_shards != -(-n_rows // shard_rows):
             raise ContainerFormatError(
                 f"latent shard directory declares {n_shards} shards but "
                 f"{n_rows} rows / {shard_rows} per shard needs "
-                f"{-(-n_rows // shard_rows)}"
+                f"{-(-n_rows // shard_rows)}",
+                stream="latent", offset=0,
             )
         off = _LAT3_HEAD.size
         (k,) = _LAT3_CB.unpack_from(payload, off)
@@ -350,7 +399,8 @@ class LatentShardDirectory:
         if k < 1 or len(payload) < table_end:
             raise ContainerFormatError(
                 f"latent shard stream truncated: {len(payload)} bytes "
-                f"cannot hold a {k}-symbol codebook + {n_shards} records"
+                f"cannot hold a {k}-symbol codebook + {n_shards} records",
+                stream="latent", offset=0,
             )
         self.symbols = np.frombuffer(
             payload, dtype="<i8", count=k, offset=off
@@ -361,7 +411,10 @@ class LatentShardDirectory:
         ).astype(np.int64)
         off += k
         if not ((self.lengths >= 1) & (self.lengths <= 32)).all():
-            raise ContainerFormatError("latent codebook carries bad code lengths")
+            raise ContainerFormatError(
+                "latent codebook carries bad code lengths",
+                stream="latent", offset=0,
+            )
         lens = [
             _LAT3_LEN.unpack_from(payload, off + i * _LAT3_LEN.size)[0]
             for i in range(n_shards)
@@ -375,7 +428,8 @@ class LatentShardDirectory:
         if off != len(payload):
             raise ContainerFormatError(
                 f"latent shard stream is {len(payload)} bytes but its "
-                f"directory declares {off}"
+                f"directory declares {off}",
+                stream="latent", offset=min(off, len(payload)),
             )
         self.n_shards = n_shards
         self.shard_rows = shard_rows
@@ -391,6 +445,11 @@ class LatentShardDirectory:
     def shard_payload_len(self, k: int) -> int:
         lo, hi = self._extents[k]
         return hi - lo
+
+    def shard_extent(self, k: int) -> tuple[int, int]:
+        """Payload-relative (lo, hi) byte span of shard ``k``'s chain —
+        the unit a v4 shard digest covers and the fault harness addresses."""
+        return self._extents[k]
 
     def shard_row_extent(self, k: int) -> tuple[int, int]:
         r0 = k * self.shard_rows
@@ -415,6 +474,216 @@ class LatentShardDirectory:
 
 
 # ---------------------------------------------------------------------------
+# integrity stream (container v4): CRC32 digests per stream + per unit
+# ---------------------------------------------------------------------------
+_ITG_MAGIC = b"ITG1"
+_ITG_HEAD = struct.Struct("<4sH")  # magic, n_streams
+_ITG_CRC = struct.Struct("<I")
+_ITG_UNITS = struct.Struct("<III")  # region_len, region_crc, n_units
+
+
+def _chained_crc(payload: bytes, spans) -> int:
+    """CRC32 chained across (possibly non-contiguous) payload spans."""
+    crc = 0
+    for lo, hi in spans:
+        crc = zlib.crc32(payload[lo:hi], crc)
+    return crc
+
+
+def pack_integrity_stream(streams: "list[tuple[str, bytes]]") -> bytes:
+    """Pack the v4 ``integrity`` stream over the sibling ``streams``
+    (every (name, payload) pair of the container *except* integrity
+    itself, in table order). The ``outer_crc`` field is left zero —
+    :func:`finalize_integrity_stream` patches it once the outer header
+    is known (the header depends only on this payload's length, which
+    the patch preserves)."""
+    by_name = dict(streams)
+    parts = [_ITG_HEAD.pack(_ITG_MAGIC, len(streams))]
+    for name, payload in streams:
+        enc = name.encode("ascii")
+        parts.append(struct.pack("<B", len(enc)))
+        parts.append(enc)
+        parts.append(_ITG_CRC.pack(zlib.crc32(payload)))
+    lat_payload = by_name["latent"]
+    lat = LatentShardDirectory(lat_payload)
+    parts.append(_ITG_UNITS.pack(
+        lat.header_bytes,
+        zlib.crc32(lat_payload[: lat.header_bytes]),
+        lat.n_shards,
+    ))
+    parts.extend(
+        _ITG_CRC.pack(zlib.crc32(lat.shard_payload(k)))
+        for k in range(lat.n_shards)
+    )
+    g_payload = by_name["guarantee"]
+    gdir = GuaranteeDirectory(g_payload)
+    parts.append(_ITG_UNITS.pack(
+        gdir.dir_bytes,
+        zlib.crc32(g_payload[: gdir.dir_bytes]),
+        gdir.n_species,
+    ))
+    parts.extend(
+        _ITG_CRC.pack(_chained_crc(g_payload, gdir.species_spans(sidx)))
+        for sidx in range(gdir.n_species)
+    )
+    parts.append(_ITG_CRC.pack(0))  # outer_crc placeholder
+    body = b"".join(parts)
+    return body + _ITG_CRC.pack(zlib.crc32(body))
+
+
+def finalize_integrity_stream(payload: bytes, outer_header: bytes) -> bytes:
+    """Patch ``outer_crc`` with the digest of the outer container header
+    + stream table, and recompute ``self_crc`` accordingly. Length is
+    unchanged, so the header the caller packed stays exact."""
+    body = payload[: -2 * _ITG_CRC.size] + _ITG_CRC.pack(
+        zlib.crc32(outer_header)
+    )
+    return body + _ITG_CRC.pack(zlib.crc32(body))
+
+
+class IntegrityDirectory:
+    """Parsed (and self-verified) v4 ``integrity`` stream.
+
+    Construction runs the self-check first — ``self_crc`` over every
+    preceding byte — so a flip *inside* the integrity stream is reported
+    against the integrity stream itself, never misattributed to a sibling
+    payload. All ``verify_*`` methods raise :class:`ContainerFormatError`
+    with structured context (stream, offset, unit) on mismatch and are
+    no-ops on success.
+    """
+
+    def __init__(self, payload: bytes):
+        payload = bytes(payload)
+
+        def bad(msg: str, off: int = 0):
+            raise ContainerFormatError(msg, stream="integrity", offset=off)
+
+        floor = _ITG_HEAD.size + 2 * _ITG_CRC.size + 2 * _ITG_UNITS.size
+        if len(payload) < floor:
+            bad(f"integrity stream truncated: {len(payload)} bytes")
+        magic, n_streams = _ITG_HEAD.unpack_from(payload, 0)
+        if magic != _ITG_MAGIC:
+            bad(f"bad integrity magic {magic!r} (expected {_ITG_MAGIC!r})")
+        (self_crc,) = _ITG_CRC.unpack_from(payload, len(payload) - _ITG_CRC.size)
+        if zlib.crc32(payload[: -_ITG_CRC.size]) != self_crc:
+            bad("integrity stream fails its own digest",
+                len(payload) - _ITG_CRC.size)
+        off = _ITG_HEAD.size
+        self.stream_crcs: dict[str, int] = {}
+        for _ in range(n_streams):
+            if off + 1 > len(payload):
+                bad("integrity stream table truncated", off)
+            (name_len,) = struct.unpack_from("<B", payload, off)
+            off += 1
+            if off + name_len + _ITG_CRC.size > len(payload):
+                bad("integrity stream table truncated", off)
+            name = payload[off : off + name_len].decode("ascii")
+            off += name_len
+            (crc,) = _ITG_CRC.unpack_from(payload, off)
+            off += _ITG_CRC.size
+            self.stream_crcs[name] = crc
+        if off + 2 * _ITG_UNITS.size + 2 * _ITG_CRC.size > len(payload):
+            bad("integrity unit sections truncated", off)
+        self.latent_head_len, self.latent_head_crc, n_shards = \
+            _ITG_UNITS.unpack_from(payload, off)
+        off += _ITG_UNITS.size
+        if off + n_shards * _ITG_CRC.size > len(payload):
+            bad("integrity shard digests truncated", off)
+        self.shard_crcs = [
+            _ITG_CRC.unpack_from(payload, off + k * _ITG_CRC.size)[0]
+            for k in range(n_shards)
+        ]
+        off += n_shards * _ITG_CRC.size
+        if off + _ITG_UNITS.size > len(payload):
+            bad("integrity unit sections truncated", off)
+        self.gdir_len, self.gdir_crc, n_species = \
+            _ITG_UNITS.unpack_from(payload, off)
+        off += _ITG_UNITS.size
+        tail = off + n_species * _ITG_CRC.size + 2 * _ITG_CRC.size
+        if tail != len(payload):
+            bad(f"integrity stream is {len(payload)} bytes but its "
+                f"sections declare {tail}", off)
+        self.species_crcs = [
+            _ITG_CRC.unpack_from(payload, off + s * _ITG_CRC.size)[0]
+            for s in range(n_species)
+        ]
+        off += n_species * _ITG_CRC.size
+        (self.outer_crc,) = _ITG_CRC.unpack_from(payload, off)
+
+    def verify_outer(self, blob: bytes, header_bytes: int) -> None:
+        """Digest-check the outer container header + stream table."""
+        if zlib.crc32(bytes(blob[:header_bytes])) != self.outer_crc:
+            raise ContainerFormatError(
+                "container header fails its integrity digest", offset=0
+            )
+
+    def verify_stream(self, name: str, payload: bytes) -> None:
+        """Digest-check one sibling stream's whole payload."""
+        want = self.stream_crcs.get(name)
+        if want is None:
+            raise ContainerFormatError(
+                f"integrity stream carries no digest for {name!r}",
+                stream="integrity",
+            )
+        if zlib.crc32(payload) != want:
+            raise ContainerFormatError(
+                f"stream {name!r} fails its integrity digest",
+                stream=name, offset=0,
+            )
+
+    def verify_latent_head(self, payload: bytes) -> None:
+        """Digest-check the latent stream's head region (framing +
+        codebook + shard table) using the *stored* region length, so the
+        check never depends on possibly-corrupt framing fields."""
+        n = self.latent_head_len
+        if n > len(payload) or zlib.crc32(payload[:n]) != self.latent_head_crc:
+            raise ContainerFormatError(
+                "latent stream head fails its integrity digest",
+                stream="latent", offset=0,
+            )
+
+    def verify_shard(self, k: int, chain_payload: bytes) -> None:
+        """Digest-check one latent shard's chain payload."""
+        if not 0 <= k < len(self.shard_crcs):
+            raise ContainerFormatError(
+                f"integrity stream carries {len(self.shard_crcs)} shard "
+                f"digests, shard {k} requested",
+                stream="integrity", unit=k,
+            )
+        if zlib.crc32(chain_payload) != self.shard_crcs[k]:
+            raise ContainerFormatError(
+                f"latent shard {k}: fails its integrity digest",
+                stream="latent", unit=k,
+            )
+
+    def verify_gdir(self, payload: bytes) -> None:
+        """Digest-check the guarantee stream's directory region using the
+        stored region length."""
+        n = self.gdir_len
+        if n > len(payload) or zlib.crc32(payload[:n]) != self.gdir_crc:
+            raise ContainerFormatError(
+                "guarantee directory fails its integrity digest",
+                stream="guarantee", offset=0,
+            )
+
+    def verify_species(self, sidx: int, payload: bytes, spans) -> None:
+        """Digest-check one species' guarantee byte extent (its coeff,
+        index, and basis spans of the combined stream, CRC-chained)."""
+        if not 0 <= sidx < len(self.species_crcs):
+            raise ContainerFormatError(
+                f"integrity stream carries {len(self.species_crcs)} species "
+                f"digests, species {sidx} requested",
+                stream="integrity", unit=sidx,
+            )
+        if _chained_crc(payload, spans) != self.species_crcs[sidx]:
+            raise ContainerFormatError(
+                f"guarantee stream {sidx}: fails its integrity digest",
+                stream="guarantee", unit=sidx,
+                offset=spans[0][0] if spans else None,
+            )
+
+
+# ---------------------------------------------------------------------------
 # measured byte accounting
 # ---------------------------------------------------------------------------
 def stream_breakdown(blob: bytes) -> dict:
@@ -424,8 +693,8 @@ def stream_breakdown(blob: bytes) -> dict:
     ``meta`` is everything else that is really on the wire — the outer
     header + stream table, the meta stream, and per-version framing (v1
     nested guarantee containers, the v2+ guarantee directory, the v3
-    latent shard head: codebook + shard table) — so the parts always sum
-    to ``len(blob)`` exactly.
+    latent shard head: codebook + shard table, the v4 integrity stream)
+    — so the parts always sum to ``len(blob)`` exactly.
     """
     r = ContainerReader(blob)
     sizes = r.stream_sizes()

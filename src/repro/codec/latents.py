@@ -35,11 +35,14 @@ class _ChainLatents:
                 q = huffman(stream)
         except (ValueError, struct.error) as e:
             # struct.error: a truncated Huffman header (not a ValueError)
-            raise ContainerFormatError(f"corrupt latent stream: {e}") from e
+            raise ContainerFormatError(
+                f"corrupt latent stream: {e}", stream="latent"
+            ) from e
         if q.size != nb * n_lat:
             raise ContainerFormatError(
                 f"latent stream decodes to {q.size} symbols, "
-                f"expected {nb * n_lat}"
+                f"expected {nb * n_lat}",
+                stream="latent",
             )
         self._q = q.reshape(nb, n_lat)
         self._nbytes = len(stream)
@@ -50,6 +53,11 @@ class _ChainLatents:
     def rows(self, b0: int, b1: int) -> np.ndarray:
         return self._q[b0:b1]
 
+    def salvage_rows(self, b0: int, b1: int):
+        # a chain store only exists if the whole chain decoded at
+        # construction; there is no per-unit quarantine below v3
+        return self._q[b0:b1], []
+
     def bytes_parsed(self, b0: int, b1: int) -> int:
         # a sequential chain walks whole regardless of the window
         return self._nbytes
@@ -59,23 +67,38 @@ class _ChainLatents:
 
 
 class _ShardedLatents:
-    """v3 ``latent`` stream: independent per-shard chains, shared codebook.
+    """v3+ ``latent`` stream: independent per-shard chains, shared codebook.
 
     Shards entropy-decode lazily — a block-row window touches only the
     covering shards — in one lockstep multi-chain walk, and memoize on the
     store (hence on the cached head): repeated window queries pay entropy
     once per shard. A corrupt shard raises
     :class:`ContainerFormatError` naming it and never poisons siblings.
+
+    ``integrity`` (container v4) supplies per-shard CRC32 digests: every
+    shard's chain payload is digest-checked immediately before its first
+    entropy decode — so a flipped payload bit that would still walk to a
+    plausible symbol count is *detected*, not silently decoded — and the
+    check is paid exactly once per shard (memoized with the decode).
     """
 
     def __init__(self, directory: wire.LatentShardDirectory, nb: int,
                  n_lat: int, table_cache: entropy.DecodeTableCache,
-                 reference: bool = False):
+                 reference: bool = False, integrity=None):
         if directory.n_rows != nb or directory.n_cols != n_lat:
             raise ContainerFormatError(
                 f"latent shard stream covers ({directory.n_rows}, "
                 f"{directory.n_cols}) latents, meta stream declares "
-                f"({nb}, {n_lat})"
+                f"({nb}, {n_lat})",
+                stream="latent",
+            )
+        if (integrity is not None
+                and len(integrity.shard_crcs) != directory.n_shards):
+            raise ContainerFormatError(
+                f"integrity stream carries {len(integrity.shard_crcs)} "
+                f"shard digests, latent stream has {directory.n_shards} "
+                f"shards",
+                stream="integrity",
             )
         self._dir = directory
         self._n_lat = n_lat
@@ -83,9 +106,15 @@ class _ShardedLatents:
         self._shards: dict[int, np.ndarray] = {}
         self._full: "np.ndarray | None" = None
         self._reference = reference
+        self._integrity = integrity
+
+    def _verify(self, k: int) -> None:
+        if self._integrity is not None:
+            self._integrity.verify_shard(k, self._dir.shard_payload(k))
 
     def _decode_one(self, k: int) -> np.ndarray:
         d = self._dir
+        self._verify(k)
         try:
             if self._reference:
                 # true pre-change cost profile: per-call tables and the
@@ -99,7 +128,10 @@ class _ShardedLatents:
                 table_cache=self._cache,
             )
         except ValueError as e:
-            raise ContainerFormatError(f"latent shard {k}: {e}") from e
+            raise ContainerFormatError(
+                f"latent shard {k}: {e}", stream="latent", unit=k,
+                offset=d.shard_extent(k)[0],
+            ) from e
 
     def _store(self, k: int, arr: np.ndarray) -> None:
         r0, r1 = self._dir.shard_row_extent(k)
@@ -111,6 +143,8 @@ class _ShardedLatents:
             return
         d = self._dir
         if not self._reference and len(missing) > 1:
+            for k in missing:
+                self._verify(k)
             try:
                 arrs = entropy.huffman_decode_payloads(
                     [d.shard_payload(k) for k in missing],
@@ -127,6 +161,35 @@ class _ShardedLatents:
         # corrupt sibling raising (named) never discards finished work
         for k in missing:
             self._store(k, self._decode_one(k))
+
+    def salvage_rows(self, b0: int, b1: int):
+        """Block rows ``[b0, b1)`` with corrupt shards quarantined.
+
+        Decodes each covering shard independently (digest-checked when the
+        container carries integrity digests); a shard that fails fills its
+        rows with zeros instead of raising. Returns ``(rows, bad)`` where
+        ``bad`` lists ``(shard, row_lo, row_hi, error)`` for every
+        quarantined shard's intersection with the window — the caller must
+        mask those rows out of any decoded output.
+        """
+        if self._full is not None:  # every shard already decoded clean
+            return self._full[b0:b1], []
+        k0, k1 = self._dir.shards_for_rows(b0, b1)
+        parts = []
+        bad = []
+        for k in range(k0, k1):
+            r0, r1 = self._dir.shard_row_extent(k)
+            if k not in self._shards:
+                try:
+                    self._store(k, self._decode_one(k))
+                except ContainerFormatError as e:
+                    bad.append((k, max(r0, b0), min(r1, b1), e))
+                    parts.append(np.zeros((r1 - r0, self._n_lat), np.int64))
+                    continue
+            parts.append(self._shards[k])
+        base = self._dir.shard_row_extent(k0)[0]
+        rows = np.concatenate(parts, axis=0)[b0 - base : b1 - base]
+        return rows, bad
 
     def rows(self, b0: int, b1: int) -> np.ndarray:
         if self._full is not None:  # fully assembled: slices are views

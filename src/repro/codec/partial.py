@@ -15,6 +15,7 @@ import numpy as np
 from repro.codec.runtime import (
     _cached_head,
     _decode_species_guarantees,
+    _evict_head,
     _fused_vecs,
     _gdir,
     _latents32,
@@ -135,9 +136,12 @@ class PartialDecoder:
       Pallas kernel, scattered from the CSR extents of the window alone.
 
     Every slice is bitwise equal to slicing the corresponding full
-    decode. Works on v1/v2/v3 containers. A corrupt species or latent
-    shard stream raises :class:`ContainerFormatError` naming it, and does
-    not poison siblings requested in later calls.
+    decode. Works on v1/v2/v3/v4 containers; on v4 each latent shard and
+    species guarantee extent digest-checks (CRC32) immediately before its
+    first decode, so a slice verifies exactly the bytes it reads. A
+    corrupt species or latent shard stream raises
+    :class:`ContainerFormatError` naming it (structured: stream/unit),
+    and does not poison siblings requested in later calls.
     """
 
     def __init__(self, blob: bytes):
@@ -161,12 +165,13 @@ class PartialDecoder:
         touches.
 
         Counts the outer header/table, the selection-independent head
-        streams (meta, decoder, correction), the latent extent the window
-        walks (v3: shard head + covering shard chains; v1/v2: the whole
-        sequential chain regardless of the window), the guarantee
-        directory, and the selected species' coeff/index/basis extents.
-        With no selection this equals ``len(blob)`` on a v2+ container —
-        every byte is then accounted to a purpose.
+        streams (meta, decoder, correction, and on v4 the integrity
+        stream — parsed whole at head decode), the latent extent the
+        window walks (v3+: shard head + covering shard chains; v1/v2:
+        the whole sequential chain regardless of the window), the
+        guarantee directory, and the selected species' coeff/index/basis
+        extents. With no selection this equals ``len(blob)`` on a v2+
+        container — every byte is then accounted to a purpose.
         """
         head = self._head
         idx, _ = _normalize_species(species, head.shape[0])
@@ -179,6 +184,7 @@ class PartialDecoder:
             + head.latents.bytes_parsed(b0, b1)
             + sizes["decoder"]
             + sizes.get("correction", 0)
+            + sizes.get("integrity", 0)
         )
         if head.version >= container_format.FORMAT_VERSION_SELECTIVE:
             gdir = _gdir(head)
@@ -197,13 +203,40 @@ class PartialDecoder:
         _, _, b0, b1 = _window_rows(head, t0, t1)
         return head.latents.entropy_bytes(b0, b1)
 
-    def decode(self, species=None, time_range=None) -> np.ndarray:
+    def decode(self, species=None, time_range=None,
+               on_error: str = "raise"):
         """Decode a (species, time-window) slice of the stored field.
 
         Returns ``(len(species), t1 - t0, H, W)`` float32 (the species
         axis squeezed when ``species`` is a single integer), bitwise equal
         to the same slice of the full decode.
+
+        On a v4 container the slice verifies exactly what it reads — the
+        covering latent shards and the selected species' guarantee
+        extents digest-check before decode, unread units pay nothing.
+        ``on_error="salvage"`` quarantines corrupt units instead of
+        raising and returns ``(field, DecodeReport)`` (see
+        :func:`repro.codec.integrity.salvage_decompress`); a raise-mode
+        failure evicts this blob's shared cached head (healthy units
+        already decoded through *this* decoder instance remain usable).
         """
+        if on_error not in ("raise", "salvage"):
+            raise ValueError(
+                f"on_error must be 'raise' or 'salvage', got {on_error!r}"
+            )
+        if on_error == "salvage":
+            from repro.codec.integrity import salvage_decompress
+
+            return salvage_decompress(
+                self._head.blob, species=species, time_range=time_range
+            )
+        try:
+            return self._decode(species, time_range)
+        except ContainerFormatError:
+            _evict_head(self._head.blob)
+            raise
+
+    def _decode(self, species, time_range) -> np.ndarray:
         head = self._head
         s, t, h, w = head.shape
         idx, squeeze = _normalize_species(species, s)

@@ -172,6 +172,11 @@ class _DecodedHead:
     corr_params: Any
     runtime: _DecodeRuntime
     version: int = container_format.FORMAT_VERSION
+    # parsed + self-verified v4 integrity digests (None below v4): head
+    # regions were digest-checked during the head parse; lazily read units
+    # (latent shards, species guarantee extents, the guarantee directory)
+    # digest-check on first access through this handle
+    integrity: Optional[wire.IntegrityDirectory] = None
     # lazily parsed combined guarantee directory (see _gdir)
     gdir: Optional[wire.GuaranteeDirectory] = None
     # memoized artifact-wide "any species has corrections" bit (a pure
@@ -181,12 +186,29 @@ class _DecodedHead:
     arts_memo: dict = dataclasses.field(default_factory=dict)
 
 
-def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
+def _decode_head(blob: bytes, *, huffman=None,
+                 check_integrity: bool = True) -> _DecodedHead:
     """Parse/validate the container head: meta, stream set, latents,
     network parameters — everything except the guarantee streams, so the
     fused NN decode can be dispatched while those entropy-decode.
-    ``huffman`` overrides the latent decoder (reference path)."""
+    ``huffman`` overrides the latent decoder (reference path).
+
+    On a v4 container the integrity stream is parsed (and self-verified)
+    first, then every region this parse consumes is digest-checked
+    *before* its bytes are interpreted: the outer header/table, the meta
+    stream, the latent stream's head region, and the decoder/correction
+    parameter streams. Lazily read units (latent shards, guarantee
+    directory and species extents) digest-check on first access.
+    ``check_integrity=False`` skips all digest work (salvage uses it to
+    decode structurally when the integrity stream itself is corrupt);
+    v1–v3 containers carry no digests and parse exactly as before."""
     r = ContainerReader(blob)
+    integ = None
+    if (check_integrity
+            and r.version >= container_format.FORMAT_VERSION_INTEGRITY):
+        integ = wire.IntegrityDirectory(r["integrity"])
+        integ.verify_outer(r._blob, r.header_bytes)
+        integ.verify_stream("meta", r["meta"])
     cfg, shape, latent_bin, norm_min, norm_range = wire._unpack_meta(r["meta"])
     if cfg.use_correction != ("correction" in r):
         # a flipped correction flag must not silently decode without the
@@ -212,6 +234,8 @@ def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
         expected_streams.add("guarantee")
     else:
         expected_streams.update(f"guarantee{sidx}" for sidx in range(s))
+    if r.version >= container_format.FORMAT_VERSION_INTEGRITY:
+        expected_streams.add("integrity")
     if set(r.names) != expected_streams:
         # strictness: every stream must be accounted for by purpose — no
         # stray payloads hiding in the blob, no silently absent streams
@@ -225,9 +249,13 @@ def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
     rt = _runtime(cfg, s, cfg.use_correction)
     latent_stream: Optional[bytes] = r["latent"]
     if r.version >= container_format.FORMAT_VERSION_SHARDED:
+        if integ is not None:
+            # the head region digest-checks against its *stored* length
+            # before any framing field is interpreted
+            integ.verify_latent_head(latent_stream)
         latents = _ShardedLatents(
             wire.LatentShardDirectory(latent_stream), nb, cfg.latent,
-            rt.table_cache, reference=huffman is not None,
+            rt.table_cache, reference=huffman is not None, integrity=integ,
         )
         latent_stream = None  # not the single-chain wire form
     else:
@@ -235,18 +263,26 @@ def _decode_head(blob: bytes, *, huffman=None) -> _DecodedHead:
             latent_stream, nb, cfg.latent, rt.table_cache, huffman=huffman
         )
 
-    ae_params = unpack_params(r["decoder"], _decoder_defs(rt.model),
-                              cfg.param_dtype_bytes)
+    def _params(name: str, defs):
+        if integ is not None:
+            integ.verify_stream(name, r[name])
+        try:
+            return unpack_params(r[name], defs, cfg.param_dtype_bytes)
+        except ContainerFormatError as e:
+            raise ContainerFormatError(
+                f"{name} stream: {e}", stream=name, offset=e.offset
+            ) from e
+
+    ae_params = _params("decoder", _decoder_defs(rt.model))
     corr_params = None
     if cfg.use_correction:
-        corr_params = unpack_params(r["correction"], rt.corr_net.defs,
-                                    cfg.param_dtype_bytes)
+        corr_params = _params("correction", rt.corr_net.defs)
     return _DecodedHead(
         reader=r, blob=bytes(blob), cfg=cfg, shape=shape, nb=nb,
         latent_bin=latent_bin, norm_min=norm_min, norm_range=norm_range,
         latents=latents, latent_stream=latent_stream,
         ae_params=ae_params, corr_params=corr_params, runtime=rt,
-        version=r.version,
+        version=r.version, integrity=integ,
     )
 
 
@@ -283,17 +319,41 @@ def clear_decode_cache() -> None:
     _HEADS.clear()
 
 
+def _evict_head(blob: bytes) -> None:
+    """Drop ONE blob's cached head. Raise-mode decodes call this when
+    corruption surfaces *after* the head parse (a bad latent shard or
+    guarantee stream discovered lazily): the head must not stay serveable
+    as if the blob were clean, and salvage must never be answered from —
+    or write into — the clean-head cache."""
+    _HEADS.pop(bytes(blob), None)
+
+
 # ---------------------------------------------------------------------------
 # guarantee stream decode (either layout), per species
 # ---------------------------------------------------------------------------
 def _gdir(head: _DecodedHead) -> wire.GuaranteeDirectory:
-    """Parse (once) the combined guarantee stream's directory (v2+)."""
+    """Parse (once) the combined guarantee stream's directory (v2+).
+
+    On v4 the directory region digest-checks (against its stored length)
+    before any record is interpreted."""
     if head.gdir is None:
-        gdir = wire.GuaranteeDirectory(head.reader["guarantee"])
+        payload = head.reader["guarantee"]
+        if head.integrity is not None:
+            head.integrity.verify_gdir(payload)
+        gdir = wire.GuaranteeDirectory(payload)
         if gdir.n_species != head.shape[0]:
             raise ContainerFormatError(
                 f"guarantee directory covers {gdir.n_species} species, "
-                f"meta stream declares {head.shape[0]}"
+                f"meta stream declares {head.shape[0]}",
+                stream="guarantee",
+            )
+        if (head.integrity is not None
+                and len(head.integrity.species_crcs) != gdir.n_species):
+            raise ContainerFormatError(
+                f"integrity stream carries "
+                f"{len(head.integrity.species_crcs)} species digests, "
+                f"guarantee directory has {gdir.n_species}",
+                stream="integrity",
             )
         head.gdir = gdir
     return head.gdir
@@ -321,13 +381,22 @@ def _species_guarantee(
     """Parse + validate ONE species' guarantee artifact (either layout).
 
     Touches only that species' streams, so a corrupt sibling cannot poison
-    it; errors carry the species index. ``coeff_q`` injects pre-decoded
-    coefficient symbols from the batched lockstep walk."""
+    it; errors carry the species index (structured: ``stream``/``unit``).
+    On v4 the species' guarantee byte extent digest-checks before any of
+    it is parsed. ``coeff_q`` injects pre-decoded coefficient symbols
+    from the batched lockstep walk."""
     cache = head.runtime.table_cache
+    selective = head.version >= container_format.FORMAT_VERSION_SELECTIVE
+    sname = "guarantee" if selective else f"guarantee{sidx}"
     try:
-        if head.version >= container_format.FORMAT_VERSION_SELECTIVE:
+        if selective:
+            gdir = _gdir(head)
+            if head.integrity is not None:
+                head.integrity.verify_species(
+                    sidx, head.reader["guarantee"], gdir.species_spans(sidx)
+                )
             tau, coeff_bin, d, n_store, coeff, index, basis = \
-                _gdir(head).species_parts(sidx)
+                gdir.species_parts(sidx)
             g = gae.GuaranteeArtifact.from_parts(
                 tau, coeff_bin, d, n_store, coeff, index, basis,
                 table_cache=cache, huffman=huffman, coeff_q=coeff_q,
@@ -336,21 +405,28 @@ def _species_guarantee(
             if coeff_q is not None:
                 huffman = lambda _blob, _out=coeff_q: _out  # noqa: E731
             g = gae.GuaranteeArtifact.from_bytes(
-                head.reader[f"guarantee{sidx}"],
+                head.reader[sname],
                 table_cache=cache, huffman=huffman,
             )
     except ContainerFormatError as e:
-        raise ContainerFormatError(f"guarantee stream {sidx}: {e}") from e
+        if e.unit == sidx and e.stream == sname:
+            raise  # already canonically framed (a failed species digest)
+        raise ContainerFormatError(
+            f"guarantee stream {sidx}: {e}",
+            stream=sname, unit=sidx, offset=e.offset,
+        ) from e
     if g.n_blocks != head.nb:
         raise ContainerFormatError(
             f"guarantee stream {sidx} covers {g.n_blocks} blocks, "
-            f"expected {head.nb}"
+            f"expected {head.nb}",
+            stream=sname, unit=sidx,
         )
     if g.basis.shape[0] != head.cfg.geometry.block_size:
         raise ContainerFormatError(
             f"guarantee stream {sidx} basis has dimension "
             f"{g.basis.shape[0]}, expected block size "
-            f"{head.cfg.geometry.block_size}"
+            f"{head.cfg.geometry.block_size}",
+            stream=sname, unit=sidx,
         )
     return g
 

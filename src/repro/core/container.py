@@ -20,7 +20,7 @@ stores each species' guarantee artifact that way), and the framing overhead
 of every level is measurable, so "metadata bytes" in the breakdown is a
 real number rather than a ``8*S + 64`` guess.
 
-Three versions share this byte layout; the version field declares the
+Four versions share this byte layout; the version field declares the
 *schema of the stream set* so readers pick the right interpretation:
 
 * version 1 — the original GBATC layout: one nested ``guarantee<s>``
@@ -32,9 +32,15 @@ Three versions share this byte layout; the version field declares the
   segmented ``latent`` stream — the time axis partitioned into block-row
   shards, each an independently decodable Huffman chain under one shared
   codebook, fronted by a byte-extent directory — so a time-window decode
-  entropy-decodes only the shards covering the window.
+  entropy-decodes only the shards covering the window;
+* version 4 — the integrity layout: v3's stream set plus an ``integrity``
+  stream of CRC32 digests — one per sibling stream, plus fine-grained
+  digests matching the random-access units (one per latent shard, one per
+  species' guarantee byte-extent), plus a digest of this outer header —
+  so a decoder verifies exactly the bytes it reads and no more (see
+  ``repro.codec.format`` for the wire layout).
 
-:class:`ContainerReader` accepts all three and exposes ``.version``;
+:class:`ContainerReader` accepts all four and exposes ``.version``;
 anything else raises :class:`ContainerFormatError`.
 """
 
@@ -46,8 +52,10 @@ MAGIC = b"GBTC"
 FORMAT_VERSION = 1
 FORMAT_VERSION_SELECTIVE = 2
 FORMAT_VERSION_SHARDED = 3
+FORMAT_VERSION_INTEGRITY = 4
 SUPPORTED_VERSIONS = (
-    FORMAT_VERSION, FORMAT_VERSION_SELECTIVE, FORMAT_VERSION_SHARDED
+    FORMAT_VERSION, FORMAT_VERSION_SELECTIVE, FORMAT_VERSION_SHARDED,
+    FORMAT_VERSION_INTEGRITY,
 )
 
 _HEAD = struct.Struct("<4sHH")  # magic, version, n_streams
@@ -57,7 +65,26 @@ _MAX_NAME = 255
 
 
 class ContainerFormatError(ValueError):
-    """Raised when a blob is not a well-formed container of a known version."""
+    """Raised when a blob is not a well-formed container of a known version.
+
+    Carries structured context alongside the message, so salvage decode
+    and tests consume the same facts the message states:
+
+    * ``stream`` — name of the stream the failure was localized to
+      (``None`` when the outer framing itself is at fault);
+    * ``offset`` — byte offset of the failing region *within that
+      stream's payload* (blob-absolute when ``stream`` is ``None``), or
+      ``None`` when the failure has no single position;
+    * ``unit`` — random-access unit index inside the stream (latent
+      shard index, species index), or ``None``.
+    """
+
+    def __init__(self, message: str, *, stream: "str | None" = None,
+                 offset: "int | None" = None, unit: "int | None" = None):
+        super().__init__(message)
+        self.stream = stream
+        self.offset = offset
+        self.unit = unit
 
 
 class ContainerWriter:
@@ -76,14 +103,25 @@ class ContainerWriter:
         self._streams.append((name, bytes(payload)))
 
     def to_bytes(self) -> bytes:
-        parts = [_HEAD.pack(MAGIC, self.version, len(self._streams))]
-        for name, payload in self._streams:
-            encoded = name.encode("ascii")
-            parts.append(struct.pack("<B", len(encoded)))
-            parts.append(encoded)
-            parts.append(_LEN.pack(len(payload)))
-        parts.extend(payload for _, payload in self._streams)
-        return b"".join(parts)
+        head = pack_header(
+            self.version, [(n, len(p)) for n, p in self._streams]
+        )
+        return head + b"".join(payload for _, payload in self._streams)
+
+
+def pack_header(version: int, entries: "list[tuple[str, int]]") -> bytes:
+    """The exact header + stream-table bytes :class:`ContainerWriter`
+    emits for ``entries`` of (name, payload length) — exposed so the v4
+    integrity stream can digest the outer framing it will be framed by
+    (the table depends on the integrity payload's *length* only, which is
+    computable before its content)."""
+    parts = [_HEAD.pack(MAGIC, version, len(entries))]
+    for name, length in entries:
+        encoded = name.encode("ascii")
+        parts.append(struct.pack("<B", len(encoded)))
+        parts.append(encoded)
+        parts.append(_LEN.pack(length))
+    return b"".join(parts)
 
 
 class ContainerReader:
@@ -93,35 +131,43 @@ class ContainerReader:
         blob = bytes(blob)
         if len(blob) < _HEAD.size:
             raise ContainerFormatError(
-                f"truncated container: {len(blob)} bytes, header needs {_HEAD.size}"
+                f"truncated container: {len(blob)} bytes, header needs {_HEAD.size}",
+                offset=0,
             )
         magic, version, n_streams = _HEAD.unpack_from(blob, 0)
         if magic != MAGIC:
-            raise ContainerFormatError(f"bad magic {magic!r} (expected {MAGIC!r})")
+            raise ContainerFormatError(
+                f"bad magic {magic!r} (expected {MAGIC!r})", offset=0
+            )
         if version not in SUPPORTED_VERSIONS:
             raise ContainerFormatError(
                 f"unsupported container version {version} "
-                f"(this reader speaks versions {SUPPORTED_VERSIONS})"
+                f"(this reader speaks versions {SUPPORTED_VERSIONS})",
+                offset=4,
             )
         off = _HEAD.size
         names: list[str] = []
         lengths: list[int] = []
         for _ in range(n_streams):
             if off + 1 > len(blob):
-                raise ContainerFormatError("truncated stream table")
+                raise ContainerFormatError("truncated stream table", offset=off)
             (name_len,) = struct.unpack_from("<B", blob, off)
             off += 1
             if off + name_len + _LEN.size > len(blob):
-                raise ContainerFormatError("truncated stream table")
+                raise ContainerFormatError("truncated stream table", offset=off)
             try:
                 name = blob[off : off + name_len].decode("ascii")
             except UnicodeDecodeError as e:
-                raise ContainerFormatError("non-ascii stream name") from e
+                raise ContainerFormatError(
+                    "non-ascii stream name", offset=off
+                ) from e
             off += name_len
             (length,) = _LEN.unpack_from(blob, off)
             off += _LEN.size
             if name in names:
-                raise ContainerFormatError(f"duplicate stream name {name!r}")
+                raise ContainerFormatError(
+                    f"duplicate stream name {name!r}", offset=off
+                )
             names.append(name)
             lengths.append(length)
         header_end = off
@@ -130,7 +176,8 @@ class ContainerReader:
             kind = "truncated" if len(blob) < expected else "trailing bytes in"
             raise ContainerFormatError(
                 f"{kind} container: stream table declares {expected} bytes, "
-                f"blob has {len(blob)}"
+                f"blob has {len(blob)}",
+                offset=min(expected, len(blob)),
             )
         self.version = version
         self.header_bytes = header_end
@@ -148,8 +195,21 @@ class ContainerReader:
         try:
             off, length = self._offsets[name]
         except KeyError:
-            raise ContainerFormatError(f"missing stream {name!r}") from None
+            raise ContainerFormatError(
+                f"missing stream {name!r}", stream=name
+            ) from None
         return self._blob[off : off + length]
+
+    def stream_extent(self, name: str) -> tuple[int, int]:
+        """Blob-absolute ``[lo, hi)`` byte extent of one stream's payload
+        (the fault-injection harness addresses corruption through this)."""
+        try:
+            off, length = self._offsets[name]
+        except KeyError:
+            raise ContainerFormatError(
+                f"missing stream {name!r}", stream=name
+            ) from None
+        return off, off + length
 
     def get(self, name: str, default: bytes | None = None) -> bytes | None:
         return self[name] if name in self._offsets else default

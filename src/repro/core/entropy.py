@@ -76,6 +76,14 @@ def _code_lengths(freqs: np.ndarray) -> np.ndarray:
 
 def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
     """Canonical code values: symbols sorted by (length, symbol index)."""
+    if len(lengths) and (lengths.min() < 1 or lengths.max() > _MAX_CODE_LEN):
+        # a corrupt stored codebook (writers never emit these) must fail
+        # typed here, not overflow/misbehave in the table build below
+        raise ValueError(
+            f"corrupt Huffman codebook: code lengths span "
+            f"[{lengths.min()}, {lengths.max()}], legal range is "
+            f"[1, {_MAX_CODE_LEN}]"
+        )
     order = np.lexsort((np.arange(len(lengths)), lengths))
     codes = np.zeros(len(lengths), dtype=np.uint64)
     code = 0

@@ -251,7 +251,9 @@ class GBATCPipeline:
             data_nbytes=data.nbytes, data=data, verbose=verbose,
         )
 
-    def fit_stream(self, loader, verbose: bool = False) -> dict:
+    def fit_stream(self, loader, verbose: bool = False, *,
+                   loader_retries: int = 2, retry_backoff: float = 0.1,
+                   _sleep=None) -> dict:
         """Train from time-chunked input without materializing the field.
 
         ``loader`` exposes a re-iterable ``chunks()`` yielding consecutive
@@ -264,63 +266,97 @@ class GBATCPipeline:
         the peak memory differs (one chunk plus the block array instead of
         the full field plus its normalized copy).
 
+        Transient loader faults — ``OSError``/``IOError`` raised during
+        chunk iteration — restart the *failing pass* from its beginning
+        (both passes are pure functions of the re-iterable loader, so a
+        restart is equivalent to a clean first run and the fitted
+        artifact stays bit-identical): up to ``loader_retries`` restarts
+        per pass with exponential backoff starting at ``retry_backoff``
+        seconds. Validation errors (wrong shapes, misaligned chunks)
+        propagate immediately. ``_sleep`` overrides the backoff sleep
+        (tests).
+
         The original field is not retained, so ``compress`` reports
         per-species NRMSE from the normalized block vectors (equal to the
         data-space NRMSE up to float rounding: per-species min/max
         normalization makes the range exactly 1).
         """
+        from repro.train.fault_tolerance import retry_with_backoff
+
         cfg = self.cfg
         geom = cfg.geometry
-        mn = mx = None
-        t_total = 0
-        nbytes = 0
-        spatial = None
-        for chunk in loader.chunks():
-            chunk = np.asarray(chunk)
-            if chunk.ndim != 4 or chunk.shape[0] != self.n_species:
-                raise ValueError(
-                    f"chunk shape {chunk.shape} does not match "
-                    f"(S={self.n_species}, Tc, H, W)"
-                )
-            if chunk.shape[1] == 0 or chunk.shape[1] % geom.bt:
-                raise ValueError(
-                    f"chunk spans {chunk.shape[1]} frames, not a positive "
-                    f"multiple of block depth bt={geom.bt}"
-                )
-            if spatial is None:
-                spatial = chunk.shape[2:]
-            elif chunk.shape[2:] != spatial:
-                raise ValueError(
-                    f"chunk grid {chunk.shape[2:]} != first chunk {spatial}"
-                )
-            cmn = chunk.min(axis=(1, 2, 3))
-            cmx = chunk.max(axis=(1, 2, 3))
-            mn = cmn if mn is None else np.minimum(mn, cmn)
-            mx = cmx if mx is None else np.maximum(mx, cmx)
-            t_total += chunk.shape[1]
-            nbytes += chunk.nbytes
-        if mn is None:
-            raise ValueError("loader yielded no chunks")
+        retry = dict(
+            max_retries=loader_retries, backoff=retry_backoff,
+            retry_on=(OSError, IOError),
+            **({} if _sleep is None else {"sleep": _sleep}),
+        )
+
+        def pass_ranges():
+            # accumulators local to the pass: a mid-iteration fault
+            # restarts with a clean slate, never double-counts a chunk
+            mn = mx = None
+            t_total = 0
+            nbytes = 0
+            spatial = None
+            for chunk in loader.chunks():
+                chunk = np.asarray(chunk)
+                if chunk.ndim != 4 or chunk.shape[0] != self.n_species:
+                    raise ValueError(
+                        f"chunk shape {chunk.shape} does not match "
+                        f"(S={self.n_species}, Tc, H, W)"
+                    )
+                if chunk.shape[1] == 0 or chunk.shape[1] % geom.bt:
+                    raise ValueError(
+                        f"chunk spans {chunk.shape[1]} frames, not a positive "
+                        f"multiple of block depth bt={geom.bt}"
+                    )
+                if spatial is None:
+                    spatial = chunk.shape[2:]
+                elif chunk.shape[2:] != spatial:
+                    raise ValueError(
+                        f"chunk grid {chunk.shape[2:]} != first chunk {spatial}"
+                    )
+                cmn = chunk.min(axis=(1, 2, 3))
+                cmx = chunk.max(axis=(1, 2, 3))
+                mn = cmn if mn is None else np.minimum(mn, cmn)
+                mx = cmx if mx is None else np.maximum(mx, cmx)
+                t_total += chunk.shape[1]
+                nbytes += chunk.nbytes
+            if mn is None:
+                raise ValueError("loader yielded no chunks")
+            return mn, mx, t_total, nbytes, spatial
+
+        mn, mx, t_total, nbytes, spatial = retry_with_backoff(
+            pass_ranges, **retry
+        )
         rngs = np.maximum(mx - mn, 1e-30)
         shape = (self.n_species, t_total, *spatial)
         blocking.check_divisible(shape, geom)
-        # preallocate and fill per chunk: peak memory stays one full block
-        # array plus one chunk, never the transient 2x a concat would cost
         h, w = spatial
         per_frame = (h // geom.ph) * (w // geom.pw)
         nb = (t_total // geom.bt) * per_frame
-        blocks = np.empty(
-            (nb, self.n_species, geom.bt, geom.ph, geom.pw), np.float32
-        )
-        row = 0
-        for chunk in loader.chunks():
-            chunk = np.asarray(chunk)
-            normed = (
-                (chunk - mn[:, None, None, None]) / rngs[:, None, None, None]
-            ).astype(np.float32)
-            part = blocking.to_blocks(normed, geom)
-            blocks[row : row + part.shape[0]] = part
-            row += part.shape[0]
+
+        def pass_blocks():
+            # preallocate and fill per chunk: peak memory stays one full
+            # block array plus one chunk, never the transient 2x a concat
+            # would cost. Allocated inside the pass so a restart refills
+            # from row 0 of a fresh array.
+            blocks = np.empty(
+                (nb, self.n_species, geom.bt, geom.ph, geom.pw), np.float32
+            )
+            row = 0
+            for chunk in loader.chunks():
+                chunk = np.asarray(chunk)
+                normed = (
+                    (chunk - mn[:, None, None, None])
+                    / rngs[:, None, None, None]
+                ).astype(np.float32)
+                part = blocking.to_blocks(normed, geom)
+                blocks[row : row + part.shape[0]] = part
+                row += part.shape[0]
+            return blocks
+
+        blocks = retry_with_backoff(pass_blocks, **retry)
         return self._fit_blocks(
             blocks, mn.astype(np.float32), rngs.astype(np.float32),
             shape=shape, data_nbytes=nbytes, data=None, verbose=verbose,

@@ -1,0 +1,2 @@
+"""Test-support utilities shipped with the package (deterministic fault
+injection for container blobs; see :mod:`repro.testing.faults`)."""

@@ -25,6 +25,40 @@ class StepFailure(RuntimeError):
     device errors the same way."""
 
 
+def retry_with_backoff(
+    fn: Callable[[], Any],
+    *,
+    max_retries: int = 3,
+    backoff: float = 0.1,
+    retry_on: tuple = (OSError, IOError, StepFailure),
+    sleep: Callable[[float], None] = time.sleep,
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+) -> Any:
+    """Run ``fn()``; on a retryable exception restart it, up to
+    ``max_retries`` times, sleeping ``backoff * 2**attempt`` between
+    tries.
+
+    The checkpoint-restart idiom of :func:`run_with_recovery` scaled
+    down to a single restartable unit: ``fn`` must be a pure restart —
+    re-running it from the top must be equivalent to a clean first run
+    (the streaming-fit passes qualify: each is a pure function of a
+    re-iterable loader). Exceptions outside ``retry_on`` (shape errors,
+    validation) propagate immediately — only transient faults retry.
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except retry_on as e:
+            if attempt >= max_retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if backoff > 0:
+                sleep(backoff * (2 ** attempt))
+            attempt += 1
+
+
 @dataclasses.dataclass
 class Watchdog:
     """Flags steps slower than `threshold` x running median."""

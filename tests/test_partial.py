@@ -156,7 +156,7 @@ class TestPartialDecoder:
         )
         assert pd.shape == full.shape
         assert pd.n_species == full.shape[0]
-        assert pd.version == 3  # writers default to the time-sharded layout
+        assert pd.version == 4  # writers default to the integrity layout
 
     def test_bytes_parsed_shrinks_with_selection(self, blob):
         pd = codec.PartialDecoder(blob)
@@ -192,11 +192,17 @@ class TestPartialDecoder:
 class TestCorruptionIsolation:
     @pytest.fixture()
     def bad_blob(self, blob):
-        """v2 blob with species 2's coeff stream truncated mid-header
-        (directory updated, so the framing itself stays valid)."""
+        """v3 blob with species 2's coeff stream truncated mid-header
+        (directory updated, so the framing itself stays valid).
+
+        Emitted without the v4 integrity stream: these tests pin the
+        *structural* detection path that pre-digest containers rely on
+        (the digest path is covered in test_integrity.py)."""
         r = ContainerReader(blob)
-        w = ContainerWriter(version=r.version)
+        w = ContainerWriter(version=min(r.version, 3))
         for name in r.names:
+            if name == "integrity":
+                continue
             payload = r[name]
             if name == "guarantee":
                 payload = _truncate_species_coeff(payload, sidx=2, keep=8)
@@ -204,8 +210,13 @@ class TestCorruptionIsolation:
         return w.to_bytes()
 
     def test_corrupt_species_raises_named(self, bad_blob):
-        with pytest.raises(ContainerFormatError, match="guarantee stream 2"):
+        with pytest.raises(ContainerFormatError, match="guarantee stream 2") \
+                as ei:
             codec.decompress(bad_blob, species=[2])
+        # the error is structured, not just a string: it names the stream
+        # and the random-access unit at fault
+        assert ei.value.stream == "guarantee"
+        assert ei.value.unit == 2
 
     def test_full_decode_of_corrupt_blob_raises(self, bad_blob):
         with pytest.raises(ContainerFormatError):
@@ -219,8 +230,10 @@ class TestCorruptionIsolation:
             np.testing.assert_array_equal(
                 pd.decode(species=[sidx]), full[[sidx]]
             )
-        with pytest.raises(ContainerFormatError, match="guarantee stream 2"):
+        with pytest.raises(ContainerFormatError, match="guarantee stream 2") \
+                as ei:
             pd.decode(species=[2])
+        assert (ei.value.stream, ei.value.unit) == ("guarantee", 2)
         # a mixed request containing the bad species raises too ...
         with pytest.raises(ContainerFormatError, match="guarantee stream 2"):
             pd.decode(species=[1, 2])

@@ -75,17 +75,27 @@ def _truncate_shard(latent_payload: bytes, k: int, keep: int) -> bytes:
 
 
 def _with_latent(blob: bytes, latent_payload: bytes) -> bytes:
-    """Re-emit the container with a replacement latent stream."""
+    """Re-emit the container with a replacement latent stream, downgraded
+    to v3 (integrity stream dropped): this suite pins the *structural*
+    shard-corruption detection pre-digest containers rely on — on a v4
+    blob the digests would (correctly) catch the same mutations first,
+    which test_integrity.py covers."""
     r = ContainerReader(blob)
-    w = ContainerWriter(version=r.version)
+    w = ContainerWriter(version=min(r.version, 3))
     for name in r.names:
+        if name == "integrity":
+            continue
         w.add(name, latent_payload if name == "latent" else r[name])
     return w.to_bytes()
 
 
 class TestShardedEncode:
     def test_default_version_is_sharded(self, blob):
-        assert ContainerReader(blob).version == 3
+        # v4 = the sharded v3 layout + an integrity stream
+        r = ContainerReader(blob)
+        assert r.version == 4
+        assert "integrity" in r.names
+        codec_format.LatentShardDirectory(r["latent"])  # sharded latents
 
     @pytest.mark.parametrize("tg", [1, 2, 3, 4, 99])
     def test_every_shard_size_decodes_bit_identical(
@@ -181,8 +191,11 @@ class TestShardCorruption:
         return _with_latent(blob, _truncate_shard(r["latent"], k=1, keep=3))
 
     def test_full_decode_raises_named_shard(self, bad_blob):
-        with pytest.raises(ContainerFormatError, match="latent shard 1"):
+        with pytest.raises(ContainerFormatError, match="latent shard 1") \
+                as ei:
             codec.decompress(bad_blob)
+        # structured: the error names the stream and the shard unit
+        assert (ei.value.stream, ei.value.unit) == ("latent", 1)
 
     def test_window_over_bad_shard_raises_named(self, bad_blob, full):
         pd = codec.PartialDecoder(bad_blob)
