@@ -203,6 +203,23 @@ def bench_integrity_v4(rows, full=False):
     ))
 
 
+def bench_analysis_gate(rows):
+    """Invariant checker (lint + wire schema + jaxpr audit) as a gate:
+    zero non-baselined findings, or the whole run turns nonzero; emits
+    BENCH_analysis.json with per-rule counts and tier wall-clocks."""
+    from benchmarks import bench_analysis
+
+    summary = bench_analysis.run()
+    n_rules = sum(summary["rule_counts"].values())
+    rows.append((
+        "analysis_gate",
+        (summary["lint_wall_clock_s"] + summary["schema_wall_clock_s"]
+         + summary["audit_wall_clock_s"]) * 1e6,
+        f"findings={n_rules} new={summary['new_findings']}"
+        f" programs={len(summary['audited_programs'])}",
+    ))
+
+
 def bench_sz(rows):
     from repro.core import sz
     from repro.data import s3d
@@ -242,6 +259,7 @@ def main() -> None:
     guarded("partial_decode", bench_partial_decode, rows, full=full)
     guarded("sharded_latents", bench_sharded_latents, rows, full=full)
     guarded("integrity", bench_integrity_v4, rows, full=full)
+    guarded("analysis", bench_analysis_gate, rows)
     guarded("bench_sz", bench_sz, rows)
 
     # paper-figure benchmarks (CR vs NRMSE + QoI + gradcomp)

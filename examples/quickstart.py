@@ -28,6 +28,13 @@ guarantee replay). Benchmark both ends against the retained pre-change
 paths with:
 
   PYTHONPATH=src python -m benchmarks.bench_throughput
+
+The invariants this pipeline rests on (decode reads only the blob, wire
+errors carry stream/unit coordinates, hot programs never retrace, the
+container layout matches its declarative schema) are machine-checked —
+run the invariant checker before trusting a modified tree:
+
+  PYTHONPATH=src python -m repro.analysis
 """
 
 import os

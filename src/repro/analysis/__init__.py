@@ -1,0 +1,46 @@
+"""Invariant checker for the GBATC codec: lint, trace audit, wire schema.
+
+Three analyzer tiers over one findings currency
+(:class:`~repro.analysis.findings.Finding`):
+
+1. **AST lint** (:mod:`repro.analysis.lint` + :mod:`repro.analysis.rules`)
+   — repo-specific rules over ``src/repro``: decode-path purity, wire
+   centralization, typed-error discipline, determinism hygiene,
+   reference pairing.
+2. **Trace-time audit** (:mod:`repro.analysis.jaxpr_audit`) — traces the
+   registered hot programs and walks their jaxprs: fp64 promotion, host
+   callbacks, mid-program transfers, undonated carries, folded
+   constants, retrace counting.
+3. **Wire-schema conformance** (:mod:`repro.analysis.wire_schema`) — a
+   declarative restatement of container v1–v4 diffed against the live
+   pack/parse constants; also owns the fault-region label vocabulary
+   (:class:`~repro.analysis.wire_schema.RegionKind`).
+
+Run as a tier-1 gate::
+
+    PYTHONPATH=src python -m repro.analysis && PYTHONPATH=src pytest -x -q
+
+Suppress a deliberate violation inline (``# repro: allow[rule]`` /
+``# repro: allow-file[rule]``) or grandfather it in
+``src/repro/analysis/baseline.json``; the CLI exits nonzero on any new
+finding. See ROADMAP "Codebase invariants" for the rule catalog.
+"""
+
+from repro.analysis.findings import Finding, Suppressions, scan_suppressions
+from repro.analysis.lint import LintResult, lint_tree
+from repro.analysis.wire_schema import (
+    GUARANTEE_PARTS,
+    RegionKind,
+    check_conformance,
+)
+
+__all__ = [
+    "Finding",
+    "GUARANTEE_PARTS",
+    "LintResult",
+    "RegionKind",
+    "Suppressions",
+    "check_conformance",
+    "lint_tree",
+    "scan_suppressions",
+]

@@ -1,0 +1,379 @@
+"""Trace-time program auditor: jaxpr walks over the registered hot paths.
+
+The codec's throughput story rests on properties no AST lint can see —
+they only exist after tracing. This tier builds each registered hot
+program at a tiny representative shape, traces it, and walks the
+resulting (closed) jaxprs:
+
+* **fp64 promotion**: any equation producing a float64 output is a
+  finding unless the program is allowlisted (the GBATC guarantee kernels
+  legitimately compute their error bounds in f64 under interpret mode);
+* **host callbacks**: ``debug_callback``/``pure_callback``/
+  ``io_callback`` equations are findings everywhere except the trainer's
+  ``log_every`` path, which may contain ``debug_callback`` only;
+* **d2h transfers**: ``device_put``/``infeed``/``outfeed`` mid-program;
+* **large folded constants**: a closed-over ndarray constant > 1 MiB
+  means tracing captured data that should have been an argument;
+* **undonated carries**: the trainer programs must donate
+  ``(params, state)`` — checked via the ``tf.aliasing_output`` marker in
+  the lowered StableHLO text;
+* **retrace counting**: each cached program must trace exactly once
+  across representative call patterns (two ``fit`` calls, repeated fused
+  decode) — asserted with a tracing counter and ``jit``'s
+  ``_cache_size``.
+
+Setup guard: the audit requires the default f32 world — it refuses to
+run (and reports) if ``jax_enable_x64`` is globally enabled, and
+verifies the flag is still off afterwards (the repo only ever enables
+x64 in *scoped* ``jax.experimental.enable_x64`` contexts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+RULE = "jaxpr-audit"
+
+_CALLBACK_PRIMS = frozenset({
+    "debug_callback", "pure_callback", "io_callback", "callback",
+})
+_TRANSFER_PRIMS = frozenset({"device_put", "infeed", "outfeed"})
+_LARGE_CONST_BYTES = 1 << 20
+_DONATION_MARKER = "tf.aliasing_output"
+
+
+@dataclasses.dataclass
+class ProgramStats:
+    """What the walk saw in one program."""
+
+    n_eqns: int = 0
+    callbacks: dict = dataclasses.field(default_factory=dict)
+    transfers: int = 0
+    f64_eqns: int = 0
+    const_bytes: int = 0
+    donated: Optional[bool] = None
+
+
+@dataclasses.dataclass
+class AuditReport:
+    findings: list = dataclasses.field(default_factory=list)
+    programs: dict = dataclasses.field(default_factory=dict)
+    wall_clock_s: float = 0.0
+
+
+def _walk_jaxpr(jaxpr, stats: ProgramStats) -> None:
+    """Recursively walk a Jaxpr's equations, descending into sub-jaxprs
+    carried in equation params (scan/cond/pjit bodies, pallas grids)."""
+    for eqn in jaxpr.eqns:
+        stats.n_eqns += 1
+        name = eqn.primitive.name
+        if name in _CALLBACK_PRIMS:
+            stats.callbacks[name] = stats.callbacks.get(name, 0) + 1
+        if name in _TRANSFER_PRIMS:
+            stats.transfers += 1
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            if dtype is not None and dtype == np.float64:
+                stats.f64_eqns += 1
+                break
+        for param in eqn.params.values():
+            for sub in _sub_jaxprs(param):
+                _walk_jaxpr(sub, stats)
+
+
+def _sub_jaxprs(param):
+    items = param if isinstance(param, (list, tuple)) else [param]
+    for item in items:
+        inner = getattr(item, "jaxpr", None)
+        if inner is not None and hasattr(inner, "eqns"):
+            yield inner  # ClosedJaxpr -> Jaxpr
+        elif hasattr(item, "eqns"):
+            yield item
+
+
+def _const_bytes(closed) -> int:
+    total = 0
+    for c in getattr(closed, "consts", ()):
+        if hasattr(c, "nbytes"):
+            total += int(c.nbytes)
+    return total
+
+
+@dataclasses.dataclass
+class ProgramSpec:
+    """One registered hot program.
+
+    ``build()`` returns ``(fn, args)`` traced as ``fn(*args)``.
+    ``lowered()`` (optional) returns StableHLO text for the donation
+    check. ``allow_f64`` exempts the program from the fp64-promotion
+    finding; ``allow_debug_callback`` permits ``debug_callback`` (the
+    sanctioned ``log_every`` primitive) but nothing else.
+    """
+
+    name: str
+    build: Callable[[], tuple]
+    lowered: Optional[Callable[[], str]] = None
+    allow_f64: bool = False
+    allow_debug_callback: bool = False
+    check_donation: bool = False
+
+
+def _audit_program(spec: ProgramSpec, report: AuditReport) -> None:
+    import jax
+
+    fn, args = spec.build()
+    closed = jax.make_jaxpr(fn)(*args)
+    stats = ProgramStats()
+    _walk_jaxpr(closed.jaxpr, stats)
+    stats.const_bytes = _const_bytes(closed)
+    report.programs[spec.name] = stats
+    here = "analysis/jaxpr_audit.py"
+
+    for prim, count in sorted(stats.callbacks.items()):
+        if prim == "debug_callback" and spec.allow_debug_callback:
+            continue
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"program {spec.name!r} contains {count}x host callback "
+            f"{prim!r}",
+        ))
+    if stats.transfers:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"program {spec.name!r} contains {stats.transfers} mid-program "
+            f"device transfer(s)",
+        ))
+    if stats.f64_eqns and not spec.allow_f64:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"program {spec.name!r} promotes to float64 in "
+            f"{stats.f64_eqns} equation(s) outside the guarantee-math "
+            f"allowlist",
+        ))
+    if stats.const_bytes > _LARGE_CONST_BYTES:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"program {spec.name!r} folds {stats.const_bytes} bytes of "
+            f"constants into the trace (> {_LARGE_CONST_BYTES})",
+        ))
+    if spec.check_donation and spec.lowered is not None:
+        text = spec.lowered()
+        stats.donated = _DONATION_MARKER in text
+        if not stats.donated:
+            report.findings.append(Finding(
+                RULE, here, 0,
+                f"program {spec.name!r} does not donate its carries "
+                f"(no {_DONATION_MARKER} in lowered text)",
+            ))
+
+
+# --------------------------------------------------------------------------
+# registered hot programs
+
+
+def _tiny_trainer():
+    """A MiniBatchTrainer over the real BlockAutoencoder loss at a tiny
+    shape, with a tracing counter wrapped around the loss."""
+    import jax
+
+    from repro.core import autoencoder as ae
+    from repro.train import train_loop
+
+    model = ae.BlockAutoencoder(ae.AEConfig(
+        n_species=2, block=(2, 4, 4), latent=8, conv_channels=(4,),
+    ))
+    params = model.init(jax.random.PRNGKey(0))
+    base_loss = ae._ae_loss(model)
+    traces = {"n": 0}
+
+    def loss_fn(p, batch):
+        traces["n"] += 1
+        return base_loss(p, batch)
+
+    blocks = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (32, 2, 2, 4, 4)),
+        dtype=np.float32,
+    )
+    return model, params, blocks, loss_fn, traces, train_loop
+
+
+def _program_specs() -> list:
+    import jax
+
+    from repro.core import correction
+    from repro.train import train_loop
+
+    model, params, blocks, loss_fn, _, _ = _tiny_trainer()
+    ocfg = train_loop.adamw_cfg(1e-3, 8)
+
+    specs = []
+
+    # trainer stream step (per-step dispatch mode)
+    tr_stream = train_loop.MiniBatchTrainer(loss_fn, ocfg, mode="stream")
+    from repro.train import optimizer as opt
+
+    state = opt.init_state(params)
+    idx = np.zeros(8, dtype=np.int32)
+    step = tr_stream._stream_step()
+    specs.append(ProgramSpec(
+        name="trainer_stream_step",
+        build=lambda: (step, (params, state, idx, blocks)),
+        lowered=lambda: step.lower(params, state, idx, blocks).as_text(),
+        check_donation=True,
+    ))
+
+    # trainer scan program, hot configuration: log_every=0 -> zero
+    # callbacks of any kind
+    tr_scan = train_loop.MiniBatchTrainer(loss_fn, ocfg, mode="scan")
+    run0 = tr_scan._scan_program(8, 32, 8, 0)
+    bkey = train_loop.batch_key(0)
+    specs.append(ProgramSpec(
+        name="trainer_scan_hot",
+        build=lambda: (run0, (params, state, bkey, blocks)),
+        lowered=lambda: run0.lower(params, state, bkey, blocks).as_text(),
+        check_donation=True,
+    ))
+
+    # trainer scan program with log_every: debug_callback only
+    run_log = tr_scan._scan_program(8, 32, 8, 4)
+    specs.append(ProgramSpec(
+        name="trainer_scan_log_every",
+        build=lambda: (run_log, (params, state, bkey, blocks)),
+        allow_debug_callback=True,
+    ))
+
+    # fused decode, with and without the correction network
+    from repro.codec import runtime as rt_mod
+
+    lat32 = np.zeros((16, model.cfg.latent), dtype=np.float32)
+    fused_plain = rt_mod.make_fused_decode(model, None)
+    specs.append(ProgramSpec(
+        name="fused_decode",
+        build=lambda: (fused_plain, (params, None, lat32)),
+    ))
+    corr_net = correction.TensorCorrectionNetwork(
+        correction.CorrectionConfig(n_species=model.cfg.n_species)
+    )
+    corr_params = corr_net.init(jax.random.PRNGKey(2))
+    fused_corr = rt_mod.make_fused_decode(model, corr_net)
+    specs.append(ProgramSpec(
+        name="fused_decode_corrected",
+        build=lambda: (fused_corr, (params, corr_params, lat32)),
+    ))
+
+    # GBATC Pallas kernels (interpret mode — the correctness path on CPU);
+    # guarantee math legitimately runs f64 here
+    from functools import partial
+
+    from repro.kernels import gbatc_project as gk
+
+    s, nb, d = 2, 8, 32
+    residual = np.zeros((s, nb, d), dtype=np.float64)
+    basis = np.tile(np.eye(d, dtype=np.float64), (s, 1, 1))
+    specs.append(ProgramSpec(
+        name="gbatc_project_batched",
+        build=lambda: (partial(gk.gbatc_project_batched, interpret=True),
+                       (residual, basis)),
+        allow_f64=True,
+    ))
+    coeffs = np.zeros((s, nb, d), dtype=np.float64)
+    specs.append(ProgramSpec(
+        name="gbatc_correct_batched",
+        build=lambda: (partial(gk.gbatc_correct_batched, interpret=True),
+                       (residual, coeffs, basis)),
+        allow_f64=True,
+    ))
+    rank = np.zeros((s, nb, d), dtype=np.int32)
+    m = np.zeros((s, nb), dtype=np.int32)
+    specs.append(ProgramSpec(
+        name="gbatc_select_accumulate",
+        build=lambda: (partial(gk.gbatc_select_accumulate, interpret=True),
+                       (residual, coeffs, rank, m, basis)),
+        allow_f64=True,
+    ))
+    return specs
+
+
+def _audit_retrace(report: AuditReport) -> None:
+    """Each cached program traces exactly once across representative call
+    patterns: two same-shape ``fit`` calls per mode must trace the loss
+    once per distinct program, and the jit caches must hold one entry."""
+    here = "analysis/jaxpr_audit.py"
+    model, params, blocks, loss_fn, traces, train_loop = _tiny_trainer()
+    ocfg = train_loop.adamw_cfg(1e-3, 4)
+
+    for mode, expected in (("stream", 1), ("scan", 1)):
+        traces["n"] = 0
+        tr = train_loop.MiniBatchTrainer(loss_fn, ocfg, mode=mode)
+        tr.fit(params, (blocks,), steps=4, batch_size=8, seed=0)
+        tr.fit(params, (blocks,), steps=4, batch_size=8, seed=1)
+        if traces["n"] != expected:
+            report.findings.append(Finding(
+                RULE, here, 0,
+                f"trainer mode {mode!r} traced the loss {traces['n']}x "
+                f"across two same-shape fits (expected {expected})",
+            ))
+        for key, prog in tr._programs.items():
+            size = getattr(prog, "_cache_size", lambda: None)()
+            if size is not None and size != 1:
+                report.findings.append(Finding(
+                    RULE, here, 0,
+                    f"trainer mode {mode!r} program {key!r} holds "
+                    f"{size} cache entries after two same-shape fits",
+                ))
+
+    # fused decode: repeated calls on one runtime re-use one executable
+    import jax
+
+    from repro.codec import runtime as rt_mod
+
+    fused = jax.jit(rt_mod.make_fused_decode(model, None))
+    lat32 = np.zeros((16, model.cfg.latent), dtype=np.float32)
+    fused(params, None, lat32)
+    fused(params, None, lat32)
+    size = fused._cache_size()
+    if size != 1:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"fused decode holds {size} jit cache entries after repeated "
+            f"same-shape calls (expected 1)",
+        ))
+
+
+def audit() -> AuditReport:
+    """Run the full trace-time audit; returns findings + per-program stats."""
+    import jax
+
+    report = AuditReport()
+    t0 = time.perf_counter()
+    here = "analysis/jaxpr_audit.py"
+
+    # x64 guard: the audit is only meaningful in the default f32 world
+    if jax.config.jax_enable_x64:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            "jax_enable_x64 is globally on — the repo must only enable "
+            "x64 in scoped contexts; audit aborted",
+        ))
+        report.wall_clock_s = time.perf_counter() - t0
+        return report
+
+    for spec in _program_specs():
+        _audit_program(spec, report)
+    _audit_retrace(report)
+
+    if jax.config.jax_enable_x64:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            "an audited program globally enabled jax_enable_x64 and "
+            "leaked it past its scope",
+        ))
+    report.wall_clock_s = time.perf_counter() - t0
+    return report

@@ -1,0 +1,22 @@
+"""Rule registry for the AST lint tier.
+
+Each rule module exposes ``RULE`` (its name, used in findings, inline
+``# repro: allow[rule]`` tags, and the baseline) and ``check_file(relpath,
+tree, source)`` returning a list of findings for one module.
+:mod:`repro.analysis.rules.pairing` is the one cross-file rule and
+instead exposes ``check_tree(src_root, tests_root)``.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules import determinism, errors, pairing, purity, wire
+
+#: Per-file rules, in report order.
+FILE_RULES = (purity, wire, errors, determinism)
+
+#: Cross-file rules (run once over the whole tree).
+TREE_RULES = (pairing,)
+
+ALL_RULE_NAMES = tuple(
+    [r.RULE for r in FILE_RULES] + [r.RULE for r in TREE_RULES]
+)

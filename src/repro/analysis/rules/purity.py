@@ -1,0 +1,74 @@
+"""decode-purity: decode derives structure from the blob alone.
+
+The decode path (``codec/decode.py``, ``codec/runtime.py``,
+``codec/partial.py``, ``codec/latents.py``) must reconstruct purely from
+container bytes — never from ambient pipeline configuration or the
+process environment. A decode that silently consulted
+``default_config()`` or an env var would produce blobs that only decode
+on the machine (or config) that wrote them, breaking the paper's
+self-describing-container contract.
+
+Flags, inside the decode-path modules only:
+
+* ``os.environ`` / ``os.getenv`` / ``os.environb`` reads;
+* importing ``GBATCPipeline`` or ``default_config`` (the encode-side
+  ambient config constructors);
+* calling ``PipelineConfig()`` with no arguments — a fresh
+  default-valued config is ambient state by construction; the decode
+  path must rebuild its config from the meta stream.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+RULE = "decode-purity"
+
+SCOPE = frozenset({
+    "codec/decode.py",
+    "codec/runtime.py",
+    "codec/partial.py",
+    "codec/latents.py",
+})
+
+_BANNED_IMPORTS = frozenset({"GBATCPipeline", "default_config"})
+_ENV_ATTRS = frozenset({"environ", "environb", "getenv"})
+
+
+def check_file(relpath: str, tree: ast.AST, source: str) -> list[Finding]:
+    if relpath not in SCOPE:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in _BANNED_IMPORTS:
+                    out.append(Finding(
+                        RULE, relpath, node.lineno,
+                        f"decode path imports ambient-config symbol "
+                        f"{alias.name!r}",
+                    ))
+        elif isinstance(node, ast.Attribute):
+            if (isinstance(node.value, ast.Name)
+                    and node.value.id == "os"
+                    and node.attr in _ENV_ATTRS):
+                out.append(Finding(
+                    RULE, relpath, node.lineno,
+                    f"decode path reads process environment via "
+                    f"os.{node.attr}",
+                ))
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            )
+            if (name == "PipelineConfig" and not node.args
+                    and not node.keywords):
+                out.append(Finding(
+                    RULE, relpath, node.lineno,
+                    "decode path constructs a default PipelineConfig(); "
+                    "config must come from the meta stream",
+                ))
+    return out

@@ -70,6 +70,25 @@ _META_HEAD = struct.Struct("<BBHHHHH")
 _META_SHAPE = struct.Struct("<IIIId")  # S, T, H, W, latent_bin
 
 
+def expected_stream_set(version: int, n_species: int,
+                        has_correction: bool) -> frozenset:
+    """The exact stream-name set a well-formed container of *version*
+    carries. Strictness contract (PR 4): every stream must be accounted
+    for by purpose — decode rejects blobs with stray or absent streams,
+    and :mod:`repro.analysis.wire_schema` conformance-checks this table
+    against its own declarative layout description."""
+    names = {"meta", "latent", "decoder"}
+    if has_correction:
+        names.add("correction")
+    if version >= container_format.FORMAT_VERSION_SELECTIVE:
+        names.add("guarantee")
+    else:
+        names.update(f"guarantee{sidx}" for sidx in range(n_species))
+    if version >= container_format.FORMAT_VERSION_INTEGRITY:
+        names.add("integrity")
+    return frozenset(names)
+
+
 # ---------------------------------------------------------------------------
 # meta stream
 # ---------------------------------------------------------------------------

@@ -216,32 +216,31 @@ def _decode_head(blob: bytes, *, huffman=None,
         raise ContainerFormatError(
             f"meta correction flag is {cfg.use_correction} but the "
             f"container {'carries' if 'correction' in r else 'lacks'} a "
-            f"correction stream"
+            f"correction stream",
+            stream="meta",
         )
     s, t, h, w = shape
     geom = cfg.geometry
     if t % geom.bt or h % geom.ph or w % geom.pw:
         raise ContainerFormatError(
             f"shape {shape} not divisible by block geometry "
-            f"({geom.bt}, {geom.ph}, {geom.pw})"
+            f"({geom.bt}, {geom.ph}, {geom.pw})",
+            stream="meta",
         )
     nb = (t // geom.bt) * (h // geom.ph) * (w // geom.pw)
 
-    expected_streams = {"meta", "latent", "decoder"}
-    if cfg.use_correction:
-        expected_streams.add("correction")
-    if r.version >= container_format.FORMAT_VERSION_SELECTIVE:
-        expected_streams.add("guarantee")
-    else:
-        expected_streams.update(f"guarantee{sidx}" for sidx in range(s))
-    if r.version >= container_format.FORMAT_VERSION_INTEGRITY:
-        expected_streams.add("integrity")
+    expected_streams = wire.expected_stream_set(
+        r.version, s, cfg.use_correction
+    )
     if set(r.names) != expected_streams:
         # strictness: every stream must be accounted for by purpose — no
-        # stray payloads hiding in the blob, no silently absent streams
+        # stray payloads hiding in the blob, no silently absent streams.
+        # Name the first offending stream so the error locates itself.
+        odd = sorted(set(r.names) ^ expected_streams)[0]
         raise ContainerFormatError(
             f"unexpected stream set {sorted(r.names)} "
-            f"(expected {sorted(expected_streams)})"
+            f"(expected {sorted(expected_streams)})",
+            stream=odd,
         )
 
     # the runtime cache is the single construction site for the decode

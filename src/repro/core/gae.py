@@ -128,7 +128,10 @@ class GuaranteeArtifact:
         return self.coeff_bytes() + self.index_bytes() + self.basis_bytes() + 16
 
     # --- wire format ---------------------------------------------------
-    _META = struct.Struct("<ddII")  # tau, coeff_bin, D, n_store
+    # the per-species guarantee artifact header predates the container
+    # and is parsed by from_bytes round-trips in tier-1; the container
+    # only frames its bytes.
+    _META = struct.Struct("<ddII")  # repro: allow[wire-centralization]
 
     def wire_parts(self) -> tuple[bytes, bytes, bytes]:
         """The (coeff, index, basis) payload streams — the single encode

@@ -311,7 +311,7 @@ def main():
                     continue
                 try:
                     run_cell(arch, shape_name, mp, args.out)
-                except Exception as e:  # noqa: BLE001 — record and continue
+                except Exception as e:  # noqa: BLE001  # repro: allow[typed-errors] — record and continue
                     failures.append((arch, shape_name, mesh_name, repr(e)))
                     traceback.print_exc()
     if failures:

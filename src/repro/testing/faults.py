@@ -31,6 +31,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.analysis.wire_schema import GUARANTEE_PARTS, RegionKind
 from repro.codec import format as wire
 from repro.core import container as container_format
 from repro.core.container import ContainerReader
@@ -81,36 +82,41 @@ def blob_regions(blob: bytes, *, fine: bool = True) -> list:
     """
     blob = bytes(blob)
     r = ContainerReader(blob)
-    regions = [Region("header", 0, r.header_bytes)]
+    regions = [Region(RegionKind.HEADER.label(), 0, r.header_bytes)]
     for name in r.names:
         lo, hi = r.stream_extent(name)
-        regions.append(Region(f"stream:{name}", lo, hi, stream=name))
+        regions.append(
+            Region(RegionKind.STREAM.label(name=name), lo, hi, stream=name)
+        )
     if not fine:
         return regions
     if r.version >= container_format.FORMAT_VERSION_SHARDED:
         lo, _ = r.stream_extent("latent")
         d = wire.LatentShardDirectory(r["latent"])
-        regions.append(
-            Region("latent:head", lo, lo + d.header_bytes, stream="latent")
-        )
+        regions.append(Region(
+            RegionKind.LATENT_HEAD.label(), lo, lo + d.header_bytes,
+            stream="latent",
+        ))
         for k in range(d.n_shards):
             slo, shi = d.shard_extent(k)
             regions.append(Region(
-                f"latent:shard{k}", lo + slo, lo + shi,
+                RegionKind.LATENT_SHARD.label(unit=k), lo + slo, lo + shi,
                 stream="latent", unit=k,
             ))
     if r.version >= container_format.FORMAT_VERSION_SELECTIVE:
         lo, _ = r.stream_extent("guarantee")
         g = wire.GuaranteeDirectory(r["guarantee"])
-        regions.append(
-            Region("guarantee:dir", lo, lo + g.dir_bytes, stream="guarantee")
-        )
+        regions.append(Region(
+            RegionKind.GUARANTEE_DIR.label(), lo, lo + g.dir_bytes,
+            stream="guarantee",
+        ))
         for s in range(g.n_species):
             for part, (plo, phi) in zip(
-                ("coeff", "index", "basis"), g.species_spans(s)
+                GUARANTEE_PARTS, g.species_spans(s)
             ):
                 regions.append(Region(
-                    f"guarantee:s{s}:{part}", lo + plo, lo + phi,
+                    RegionKind.GUARANTEE_SPECIES_PART.label(unit=s, part=part),
+                    lo + plo, lo + phi,
                     stream="guarantee", unit=s,
                 ))
     return [reg for reg in regions if len(reg) > 0]
@@ -174,7 +180,7 @@ class FaultInjector:
         if n is None:
             n = int(self._rng.integers(1, max(2, len(blob) // 4)))
         n = max(1, min(int(n), len(blob) - 1))
-        whole = Region("blob", 0, len(blob))
+        whole = Region(RegionKind.BLOB.label(), 0, len(blob))
         return bytes(blob[:-n]), Fault(
             "truncate", whole, len(blob) - n, f"last {n} bytes dropped"
         )

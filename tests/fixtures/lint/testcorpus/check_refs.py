@@ -1,0 +1,8 @@
+"""Fixture test corpus for the reference-pairing rule.
+
+Mentions ``paired_fixture_ref`` (so pairing stays quiet on it); the
+orphaned twin planted in ``tree/core/suppressed.py`` is deliberately
+absent from this corpus, so pairing must fire on it.
+"""
+
+from clean import paired_fixture_ref  # noqa: F401 — word match is the point

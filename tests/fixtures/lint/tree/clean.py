@@ -1,0 +1,13 @@
+"""A clean module: no rule may fire anywhere in this file (fixture)."""
+
+import numpy as np
+
+
+def paired_fixture_ref(x):
+    """Mentioned by the fixture test corpus — pairing must NOT fire."""
+    return np.asarray(x)
+
+
+def work(seed: int):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 10, size=4)

@@ -1,0 +1,11 @@
+"""Planted decode-purity violations (fixture — never imported)."""
+
+import os
+
+from repro.core.pipeline import default_config  # planted: ambient import
+
+
+def _decode_head(blob):
+    level = os.getenv("GBATC_LEVEL")  # planted: env read on decode path
+    cfg = default_config()
+    return blob, cfg, level

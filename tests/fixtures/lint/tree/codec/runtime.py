@@ -1,0 +1,19 @@
+"""Planted typed-errors parse-path violations (fixture — never imported)."""
+
+
+class ContainerFormatError(Exception):
+    pass
+
+
+def _decode_head(blob):
+    if not blob:
+        # planted: structured error without stream=/offset=/unit=
+        raise ContainerFormatError("empty blob")
+    if blob[:1] == b"?":
+        raise ValueError("bad magic")  # planted: untyped raise on parse path
+    return blob
+
+
+def helper(blob):
+    # not a parse scope: an untyped raise here must NOT fire the rule
+    raise ValueError("helpers may use plain errors")

@@ -1,0 +1,23 @@
+"""Planted handler-discipline violations (fixture — never imported)."""
+
+
+def swallow(fn):
+    try:
+        return fn()
+    except Exception:  # planted: broad swallow, no re-raise
+        return None
+
+
+def bare(fn):
+    try:
+        return fn()
+    except:  # noqa: E722 — planted: bare except
+        return None
+
+
+def convert_ok(fn):
+    try:
+        return fn()
+    except Exception as e:
+        # broad catch that re-raises is the sanctioned convert idiom
+        raise RuntimeError("wrapped") from e

@@ -1,0 +1,22 @@
+"""Planted determinism violations (fixture — never imported)."""
+
+import random  # planted: stdlib random import
+import time
+
+import numpy as np
+
+
+def sample(n: int):
+    x = np.random.rand(n)  # planted: legacy global-state numpy RNG
+    rng = np.random.default_rng()  # planted: unseeded generator
+    return x, rng, random.random()
+
+
+def cache_key() -> float:
+    return time.time()  # planted: wall-clock in core/
+
+
+def seeded_ok(n: int, seed: int):
+    # sanctioned forms: must NOT fire
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=n)

@@ -1,0 +1,14 @@
+"""Planted wire-centralization violations (fixture — never imported)."""
+
+import struct
+
+MAGIC = b"FIX1"  # planted: magic-shaped literal outside the wire modules
+
+
+def pack_header(n: int) -> bytes:
+    return MAGIC + struct.pack("<I", n)  # planted: struct call outside wire
+
+
+def on_error(e):
+    # referencing struct.error is NOT a wire operation and must not fire
+    return isinstance(e, struct.error)

@@ -1,0 +1,10 @@
+"""Planted-but-suppressed violations (fixture — never imported)."""
+
+import struct
+
+HDR = struct.Struct("<I")  # repro: allow[wire-centralization]
+
+
+def orphan_fixture_ref(x):
+    """A reference twin no fixture test mentions — pairing fires here."""
+    return x
