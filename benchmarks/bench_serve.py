@@ -1,0 +1,303 @@
+"""Decode-service benchmark: continuous-batched serving under synthetic
+traffic vs a naive serial ``PartialDecoder`` loop.
+
+The serving scenario the paper's consumers imply: many analysts issue
+small selective-decode queries — zipf-skewed species popularity, sliding
+time windows — against a fleet of container blobs with one hot blob.
+The load generator drives two closed-loop mixes with K client threads:
+
+* ``hot_zipf`` — every request hits the hot blob; zipfian species
+  (single + small subsets), sliding windows. The acceptance mix.
+* ``churn`` — the hot blob gets most of the traffic, the rest spreads
+  over cold sibling blobs (byte-different containers of the same
+  artifact at other shard granularities), forcing head-cache churn.
+
+Before any number is reported, the equivalence gates are asserted:
+every distinct request in both traces, decoded through the service, is
+**bitwise equal** to the serial ``PartialDecoder`` answer. Then the
+acceptance gates: on ``hot_zipf`` the batched+cached service must beat
+the serial loop by >= 2x QPS at equal-or-better p99 latency.
+
+Writes BENCH_serve.json (repo root) + results/bench/serve.csv.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import codec  # noqa: E402
+from repro.core.pipeline import PipelineConfig  # noqa: E402
+from repro.data import s3d  # noqa: E402
+from repro.serve import DecodeService  # noqa: E402
+
+TARGET = 3e-4
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+OUT_CSV = "results/bench/serve.csv"
+
+N_CLIENTS = 6
+ZIPF_A = 1.2
+
+
+class SerialServer:
+    """The baseline: a naive serial PartialDecoder loop. One request at a
+    time, in submission order — exactly the pre-service serving story
+    (clients contend for one decode loop; no batching, no coalescing)."""
+
+    def __init__(self):
+        self._blobs: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def register(self, blob_id: str, blob: bytes) -> None:
+        self._blobs[blob_id] = blob
+
+    def decode(self, blob_id: str, species=None, time_range=None):
+        with self._lock:  # serializes: the "loop"
+            pd = codec.PartialDecoder(self._blobs[blob_id])
+            return pd.decode(species=species, time_range=time_range)
+
+
+def _zipf_weights(n: int) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1) ** ZIPF_A
+    return w / w.sum()
+
+
+def _make_trace(rng, blob_ids, hot_frac, s, t, n_requests):
+    """Synthetic request trace: (blob_id, species, time_range) tuples.
+
+    Species ranks are zipf-reweighted per trace (rank->species shuffled
+    once so the hot species isn't always index 0); windows slide across
+    the series with a mix of lengths; ``hot_frac`` of requests pin the
+    first blob id, the rest spread uniformly over the others.
+    """
+    ranks = rng.permutation(s)
+    sw = _zipf_weights(s)
+    win = max(2, t // 4)
+    trace = []
+    for i in range(n_requests):
+        if len(blob_ids) == 1 or rng.random() < hot_frac:
+            bid = blob_ids[0]
+        else:
+            bid = blob_ids[1 + int(rng.integers(0, len(blob_ids) - 1))]
+        if rng.random() < 0.7:
+            species = int(ranks[rng.choice(s, p=sw)])
+        else:
+            k = int(rng.integers(2, 4))
+            picks = rng.choice(s, p=sw, size=k * 3)  # oversample, dedup
+            uniq = list(dict.fromkeys(int(ranks[p]) for p in picks))[:k]
+            species = uniq
+        t0 = (i * 2) % max(1, t - win)  # sliding window
+        time_range = (t0, t0 + win) if rng.random() < 0.8 else None
+        trace.append((bid, species, time_range))
+    return trace
+
+
+def _run_clients(decode_fn, trace):
+    """Closed-loop K-client run: each client issues its share of the
+    trace back to back; returns (wall_s, per-request latencies)."""
+    shares = [trace[i::N_CLIENTS] for i in range(N_CLIENTS)]
+    lats: "list[list[float]]" = [[] for _ in range(N_CLIENTS)]
+    errors: list = []
+
+    def client(i):
+        try:
+            for bid, sp, tr in shares[i]:
+                t0 = time.perf_counter()
+                decode_fn(bid, sp, tr)
+                lats[i].append(time.perf_counter() - t0)
+        except Exception as e:  # surfaced by the caller
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(N_CLIENTS)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return wall, [x for ls in lats for x in ls]
+
+
+def _percentiles(lats):
+    a = np.asarray(lats)
+    return {
+        "p50_ms": float(np.percentile(a, 50) * 1e3),
+        "p99_ms": float(np.percentile(a, 99) * 1e3),
+        "mean_ms": float(a.mean() * 1e3),
+    }
+
+
+def _measure(mix_name, trace, blobs):
+    """Serial baseline then batched service on one trace (each from a
+    cold decode cache); returns the mix's summary dict."""
+    # -- serial baseline -------------------------------------------------
+    codec.clear_decode_cache()
+    serial = SerialServer()
+    for bid, b in blobs.items():
+        serial.register(bid, b)
+    wall_serial, lats_serial = _run_clients(serial.decode, trace)
+
+    # -- batched + cached service ----------------------------------------
+    codec.clear_decode_cache()
+    with DecodeService(max_batch=2 * N_CLIENTS) as svc:
+        for bid, b in blobs.items():
+            svc.register(bid, b)
+        wall_svc, lats_svc = _run_clients(svc.decode, trace)
+    cache = codec.cache_stats()
+
+    n = len(trace)
+    out = {
+        "requests": n,
+        "clients": N_CLIENTS,
+        "serial": {"qps": n / wall_serial, "wall_s": wall_serial,
+                   **_percentiles(lats_serial)},
+        "service": {"qps": n / wall_svc, "wall_s": wall_svc,
+                    **_percentiles(lats_svc),
+                    "sched": svc.stats.as_dict()},
+        "qps_ratio": wall_serial / wall_svc,
+        "p99_ratio": (_percentiles(lats_svc)["p99_ms"]
+                      / _percentiles(lats_serial)["p99_ms"]),
+        "cache_hit_rates": {
+            tier: cache[tier]["hit_rate"]
+            for tier in ("head", "shard", "guarantee", "decode_table")
+        },
+    }
+    print(
+        f"[bench_serve] {mix_name}: serial {out['serial']['qps']:.1f} qps "
+        f"(p99 {out['serial']['p99_ms']:.0f}ms) vs service "
+        f"{out['service']['qps']:.1f} qps (p99 "
+        f"{out['service']['p99_ms']:.0f}ms) -> "
+        f"{out['qps_ratio']:.1f}x | dispatches "
+        f"{svc.stats.dispatches}/{svc.stats.requests} reqs | shard hits "
+        f"{cache['shard']['hit_rate']:.0%}"
+    )
+    return out
+
+
+def run(quick: bool = True, seed: int = 3):
+    scfg = (
+        s3d.S3DConfig(n_species=12, n_time=16, height=80, width=80,
+                      seed=seed)
+        if quick
+        else s3d.S3DConfig(n_species=16, n_time=24, height=120, width=120,
+                           seed=seed)
+    )
+    data = s3d.generate(scfg)["species"]
+    gbatc = codec.GBATCCodec(
+        PipelineConfig(
+            conv_channels=(16, 32),
+            ae_steps=150 if quick else 800,
+            corr_steps=80 if quick else 400,
+        )
+    )
+    t0 = time.time()
+    gbatc.fit(data)
+    fit_s = time.time() - t0
+    blob, rep = gbatc.compress_report(target_nrmse=TARGET)
+
+    # a fleet of byte-different containers of the same artifact (other
+    # shard granularities): cold siblings for the churn mix, free — no
+    # refit — and all decoding to the identical field
+    blobs = {"hot": blob}
+    for k in (2, 4):  # default is 1 tgroup/shard; these are byte-different
+        blobs[f"cold{k}"] = codec.encode(rep.artifact, version=4,
+                                         shard_tgroups=k)
+    assert len({bytes(b) for b in blobs.values()}) == len(blobs)
+
+    s, t = data.shape[0], data.shape[1]
+    rng = np.random.default_rng(seed)
+    n_req = 180 if quick else 600
+    trace_hot = _make_trace(rng, ["hot"], 1.0, s, t, n_req)
+    trace_churn = _make_trace(rng, list(blobs), 0.6, s, t, n_req)
+
+    # -- equivalence gates: asserted before any number is reported -------
+    full = codec.decompress(blob)
+    for name, b in blobs.items():
+        assert np.array_equal(codec.decompress(b), full), \
+            f"sibling blob {name} decode != hot decode"
+    distinct = {}
+    for bid, sp, tr in trace_hot + trace_churn:
+        key = (bid, json.dumps(sp), tr)
+        distinct.setdefault(key, (bid, sp, tr))
+    with DecodeService() as svc:
+        for bid, b in blobs.items():
+            svc.register(bid, b)
+        for bid, sp, tr in distinct.values():
+            got = svc.decode(bid, sp, tr)
+            want = codec.PartialDecoder(blobs[bid]).decode(
+                species=sp, time_range=tr
+            )
+            assert np.array_equal(got, want), \
+                f"service != serial for {(bid, sp, tr)}"
+    n_gated = len(distinct)
+
+    # -- measured mixes (also warmed by the gate pass above) -------------
+    mixes = {
+        "hot_zipf": _measure("hot_zipf", trace_hot, {"hot": blob}),
+        "churn": _measure("churn", trace_churn, blobs),
+    }
+
+    summary = {
+        "problem": {
+            "shape": list(data.shape),
+            "blob_bytes": len(blob),
+            "n_blobs": len(blobs),
+            "target_nrmse": TARGET,
+            "seed": seed,
+            "quick": quick,
+            "zipf_a": ZIPF_A,
+        },
+        "fit_s": fit_s,
+        "equivalence_gates_passed": True,
+        "distinct_requests_gated": n_gated,
+        "mixes": mixes,
+    }
+
+    # the acceptance contract: batched+cached serving beats the naive
+    # serial PartialDecoder loop on the hot-blob zipfian mix by >= 2x
+    # QPS at equal-or-better p99
+    hot = mixes["hot_zipf"]
+    assert hot["qps_ratio"] >= 2.0, (
+        f"hot_zipf QPS ratio {hot['qps_ratio']:.2f}x < 2x over the serial "
+        f"loop"
+    )
+    assert hot["service"]["p99_ms"] <= hot["serial"]["p99_ms"], (
+        f"hot_zipf service p99 {hot['service']['p99_ms']:.1f}ms worse "
+        f"than serial {hot['serial']['p99_ms']:.1f}ms"
+    )
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+    os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
+    cols = []
+    for mix, m in mixes.items():
+        for side in ("serial", "service"):
+            for k in ("qps", "p50_ms", "p99_ms"):
+                cols.append((f"{mix}_{side}_{k}", m[side][k]))
+        cols.append((f"{mix}_qps_ratio", m["qps_ratio"]))
+    with open(OUT_CSV, "w") as f:
+        f.write(",".join(k for k, _ in cols) + "\n")
+        f.write(",".join(f"{v:.3f}" for _, v in cols) + "\n")
+    print(
+        f"[bench_serve] hot_zipf {hot['qps_ratio']:.1f}x QPS at p99 "
+        f"{hot['service']['p99_ms']:.0f}ms vs serial "
+        f"{hot['serial']['p99_ms']:.0f}ms | {n_gated} distinct requests "
+        f"gated bitwise -> {OUT_JSON}"
+    )
+    return summary
+
+
+if __name__ == "__main__":
+    run(quick="--full" not in sys.argv)

@@ -203,6 +203,32 @@ def bench_integrity_v4(rows, full=False):
     ))
 
 
+def bench_serve_service(rows, full=False):
+    """Continuous-batched decode service vs the naive serial
+    PartialDecoder loop under synthetic traffic; emits BENCH_serve.json.
+    Bitwise service-vs-serial equivalence for every distinct request and
+    the >=2x-QPS-at-equal-p99 hot-mix gate are asserted inside before
+    any number is reported."""
+    from benchmarks import bench_serve
+
+    summary = bench_serve.run(quick=not full)
+    hot = summary["mixes"]["hot_zipf"]
+    rows.append((
+        "serve_hot_zipf_qps",
+        1e6 / hot["service"]["qps"],
+        f"speedup={hot['qps_ratio']:.1f}x"
+        f" p99={hot['service']['p99_ms']:.0f}ms"
+        f" shard_hits={hot['cache_hit_rates']['shard']:.0%}",
+    ))
+    churn = summary["mixes"]["churn"]
+    rows.append((
+        "serve_churn_qps",
+        1e6 / churn["service"]["qps"],
+        f"speedup={churn['qps_ratio']:.1f}x"
+        f" p99={churn['service']['p99_ms']:.0f}ms",
+    ))
+
+
 def bench_analysis_gate(rows):
     """Invariant checker (lint + wire schema + jaxpr audit) as a gate:
     zero non-baselined findings, or the whole run turns nonzero; emits
@@ -259,6 +285,7 @@ def main() -> None:
     guarded("partial_decode", bench_partial_decode, rows, full=full)
     guarded("sharded_latents", bench_sharded_latents, rows, full=full)
     guarded("integrity", bench_integrity_v4, rows, full=full)
+    guarded("serve", bench_serve_service, rows, full=full)
     guarded("analysis", bench_analysis_gate, rows)
     guarded("bench_sz", bench_sz, rows)
 

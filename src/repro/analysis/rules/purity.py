@@ -1,12 +1,14 @@
 """decode-purity: decode derives structure from the blob alone.
 
 The decode path (``codec/decode.py``, ``codec/runtime.py``,
-``codec/partial.py``, ``codec/latents.py``) must reconstruct purely from
-container bytes — never from ambient pipeline configuration or the
-process environment. A decode that silently consulted
-``default_config()`` or an env var would produce blobs that only decode
-on the machine (or config) that wrote them, breaking the paper's
-self-describing-container contract.
+``codec/partial.py``, ``codec/latents.py``, ``codec/cache.py``, and the
+whole serving layer ``serve/``) must reconstruct purely from container
+bytes — never from ambient pipeline configuration or the process
+environment. A decode that silently consulted ``default_config()`` or an
+env var would produce blobs that only decode on the machine (or config)
+that wrote them, breaking the paper's self-describing-container
+contract; the decode service serves whatever blobs are registered with
+it, so the same contract covers everything under ``serve/``.
 
 Flags, inside the decode-path modules only:
 
@@ -31,14 +33,21 @@ SCOPE = frozenset({
     "codec/runtime.py",
     "codec/partial.py",
     "codec/latents.py",
+    "codec/cache.py",
 })
+# the serving layer is decode path wholesale: every module under serve/
+SCOPE_PREFIXES = ("serve/",)
 
 _BANNED_IMPORTS = frozenset({"GBATCPipeline", "default_config"})
 _ENV_ATTRS = frozenset({"environ", "environb", "getenv"})
 
 
+def in_scope(relpath: str) -> bool:
+    return relpath in SCOPE or relpath.startswith(SCOPE_PREFIXES)
+
+
 def check_file(relpath: str, tree: ast.AST, source: str) -> list[Finding]:
-    if relpath not in SCOPE:
+    if not in_scope(relpath):
         return []
     out = []
     for node in ast.walk(tree):

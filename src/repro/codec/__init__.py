@@ -63,6 +63,8 @@ The package layers the codec by responsibility:
 * :mod:`repro.codec.params` — parameter-tree leaf packing;
 * :mod:`repro.codec.encode` — the fit-side planner (artifact -> streams,
   parallel shard packing) and the :class:`GBATCCodec` facade;
+* :mod:`repro.codec.cache` — the multi-tier byte-budgeted LRU engine
+  (head / latent-shard / guarantee tiers, admission, stats);
 * :mod:`repro.codec.runtime` — cached decode runtimes (models, jitted
   fused decode, Huffman tables), container-head parsing with the
   content-keyed head cache, lazy per-shard latent stores;
@@ -74,10 +76,17 @@ The package layers the codec by responsibility:
 
 Byte accounting is a *view over the container's stream table*
 (:func:`stream_breakdown`), so ``breakdown["total"] == len(blob)`` holds
-exactly. Decoding state (model instances, jitted callables, Huffman decode
-tables, parsed heads) is cached, so repeated ``decompress`` calls never
-re-trace and repeated queries on one blob never re-parse
-(:func:`clear_decode_cache` drops the head memo).
+exactly. Decoding state is cached in a multi-tier, byte-budgeted decode
+cache (:mod:`repro.codec.cache`): parsed heads, decoded latent shards,
+and guarantee artifacts each live in their own LRU tier, so repeated
+``decompress`` calls never re-trace and repeated queries on one blob
+never re-parse. :func:`cache_stats` surfaces per-tier hit/miss/eviction
+counters (plus the Huffman decode-table memos),
+:func:`configure_decode_cache` re-budgets the tiers, and
+:func:`clear_decode_cache` drops every tier. The decode service
+(:mod:`repro.serve.decode_service`) serves concurrent selective-decode
+requests on top of this cache, coalescing compatible requests into
+batched dispatches.
 
 ``GBATCPipeline.compress/decompress`` remain as thin compatibility wrappers
 over this package (see :mod:`repro.core.pipeline`).
@@ -119,7 +128,9 @@ from repro.codec.runtime import (
     _fused_vecs,
     _runtime,
     _runtime_reference,
+    cache_stats,
     clear_decode_cache,
+    configure_decode_cache,
     make_fused_decode,
 )
 from repro.core.container import ContainerFormatError
@@ -134,7 +145,9 @@ __all__ = [
     "PartialDecoder",
     "SpeciesReport",
     "DEFAULT_SHARD_TGROUPS",
+    "cache_stats",
     "clear_decode_cache",
+    "configure_decode_cache",
     "encode",
     "read",
     "salvage_decompress",

@@ -6,9 +6,20 @@ container both the guarantee streams *and* the latent stream are
 random-access — a time window entropy-decodes only the latent shards
 covering it — so a window query is O(window) end to end. Every slice is
 bitwise equal to slicing the full decode.
+
+The slice pipeline is exposed in stages — :func:`plan_slice` (normalize
+a request to its block-row window), :func:`replay_slice` (guarantee
+decode + correction replay over selected species), and
+:func:`finalize_slice` (blocks -> field, denormalize, window trim) — so
+the decode service (:mod:`repro.serve.decode_service`) can run the
+middle stages once over a *union* of coalesced requests and finalize
+each request from its slice of the shared result, bit-identically to
+the serial path below.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -84,34 +95,126 @@ def _any_corrections(head) -> bool:
     species') to stay byte-identical to slicing the full decode. Decided
     at the wire level without entropy-decoding anything: a species is
     empty iff its coefficient stream is the bare Huffman header. Memoized
-    on the head — the v1 recompute would copy every species' payload per
+    on the head (under its lock — concurrent decode threads share cached
+    heads) — the v1 recompute would copy every species' payload per
     query.
     """
-    if head.any_corrections is not None:
-        return head.any_corrections
-    if head.version >= container_format.FORMAT_VERSION_SELECTIVE:
-        gdir = _gdir(head)
-        result = any(
-            gdir.coeff_len(sidx) > _EMPTY_HUFFMAN_LEN
-            for sidx in range(gdir.n_species)
-        )
-    else:
-        result = False
-        for sidx in range(head.shape[0]):
-            try:
-                sizes = ContainerReader(
-                    head.reader[f"guarantee{sidx}"]
-                ).stream_sizes()
-            except ContainerFormatError:
-                # corrupt sibling: the full decode raises on this blob, so
-                # there is no full-decode output to match — skip it here
-                # and let the selected species' own parse decide
-                continue
-            if sizes.get("coeff", 0) > _EMPTY_HUFFMAN_LEN:
-                result = True
-                break
-    head.any_corrections = result
-    return result
+    with head.lock:
+        if head.any_corrections is not None:
+            return head.any_corrections
+        if head.version >= container_format.FORMAT_VERSION_SELECTIVE:
+            gdir = _gdir(head)
+            result = any(
+                gdir.coeff_len(sidx) > _EMPTY_HUFFMAN_LEN
+                for sidx in range(gdir.n_species)
+            )
+        else:
+            result = False
+            for sidx in range(head.shape[0]):
+                try:
+                    sizes = ContainerReader(
+                        head.reader[f"guarantee{sidx}"]
+                    ).stream_sizes()
+                except ContainerFormatError:
+                    # corrupt sibling: the full decode raises on this
+                    # blob, so there is no full-decode output to match —
+                    # skip it here and let the selected species' own
+                    # parse decide
+                    continue
+                if sizes.get("coeff", 0) > _EMPTY_HUFFMAN_LEN:
+                    result = True
+                    break
+        head.any_corrections = result
+        return result
+
+
+@dataclasses.dataclass(frozen=True)
+class SlicePlan:
+    """A normalized (species, window) request, resolved to block rows.
+
+    Pure function of (head geometry, request) — no decode work happens at
+    planning, so the service can plan every queued request, group plans
+    that share latent rows, and batch the expensive stages over unions.
+    """
+
+    idx: "tuple[int, ...]"   # normalized species indices (unique)
+    squeeze: bool            # single-int selection: squeeze species axis
+    t0: int                  # frame window [t0, t1)
+    t1: int
+    tg0: int                 # covering time block-groups [tg0, tg1)
+    tg1: int
+    b0: int                  # covering block rows [b0, b1) (time-major)
+    b1: int
+
+    @property
+    def key(self) -> tuple:
+        """Result identity: requests with equal keys (against one head)
+        decode to identical outputs and can share one computation."""
+        return (self.idx, self.squeeze, self.t0, self.t1)
+
+
+def plan_slice(head, species, time_range) -> SlicePlan:
+    """Normalize a selective-decode request against ``head``.
+
+    Raises ``ValueError`` for malformed selections (out-of-range species,
+    duplicate species, inverted windows) — before any decode work."""
+    s, t = head.shape[0], head.shape[1]
+    idx, squeeze = _normalize_species(species, s)
+    t0, t1 = _normalize_time_range(time_range, t)
+    tg0, tg1, b0, b1 = _window_rows(head, t0, t1)
+    return SlicePlan(idx=tuple(idx), squeeze=squeeze, t0=t0, t1=t1,
+                     tg0=tg0, tg1=tg1, b0=b0, b1=b1)
+
+
+def replay_slice(head, idx, block_range, vecs_sel):
+    """Guarantee decode + correction replay for species ``idx`` over
+    block rows ``block_range`` of ``vecs_sel`` (device array, species
+    axis already selected down to ``idx``'s order).
+
+    The replay is gated on the artifact-wide corrections bit, not the
+    selection's: the full decode replays (x + C@U^T, C possibly
+    all-zero) over every species whenever any species has corrections,
+    and a selective output must be byte-identical to its slice.
+    Species-batch independence makes each species' result independent of
+    which others ride in the batch — this is what lets the service
+    replay a coalesced species *union* once and hand each request its
+    positions of the result.
+    """
+    idx = list(idx)
+    b0, b1 = block_range
+    # entropy-decodes on host while any dispatched device work runs
+    arts = _decode_species_guarantees(head, idx)
+    if not _any_corrections(head):
+        return vecs_sel
+    import jax.numpy as jnp
+
+    geom = head.cfg.geometry
+    engine = gae.default_engine()
+    dense, basis = engine.dense_corrections(
+        arts, (len(idx), b1 - b0, geom.block_size), block_range=(b0, b1)
+    )
+    return engine.apply_device(
+        vecs_sel, jnp.asarray(dense), jnp.asarray(basis)
+    )
+
+
+def finalize_slice(head, plan: SlicePlan, vecs_sel) -> np.ndarray:
+    """Corrected block vectors -> the request's field slice: reassemble
+    blocks over the plan's window, denormalize with the selected species'
+    ranges, trim block-group padding to the exact frame window."""
+    geom = head.cfg.geometry
+    _, _, h, w = head.shape
+    sel = np.asarray(plan.idx)
+    rec_blocks = blocking.vectors_as_blocks(np.asarray(vecs_sel), geom)
+    sub_shape = (len(plan.idx), (plan.tg1 - plan.tg0) * geom.bt, h, w)
+    rec_normed = blocking.from_blocks(rec_blocks, sub_shape, geom)
+    out = (
+        rec_normed * head.norm_range[sel][:, None, None, None]
+        + head.norm_min[sel][:, None, None, None]
+    ).astype(np.float32)
+    out = out[:, plan.t0 - plan.tg0 * geom.bt
+              : plan.t1 - plan.tg0 * geom.bt]
+    return out[0] if plan.squeeze else out
 
 
 class PartialDecoder:
@@ -238,45 +341,24 @@ class PartialDecoder:
 
     def _decode(self, species, time_range) -> np.ndarray:
         head = self._head
-        s, t, h, w = head.shape
-        idx, squeeze = _normalize_species(species, s)
-        t0, t1 = _normalize_time_range(time_range, t)
-        geom = head.cfg.geometry
-        tg0, tg1, b0, b1 = _window_rows(head, t0, t1)
+        plan = plan_slice(head, species, time_range)
 
         # fused NN decode over the window's block rows only (async
         # dispatch; rows are independent, so the slice is bit-transparent).
         # v3: only the latent shards covering [b0, b1) entropy-decode.
-        lat32 = _latents32(head.latents.rows(b0, b1), head.latent_bin)
+        lat32 = _latents32(
+            head.latents.rows(plan.b0, plan.b1), head.latent_bin
+        )
         vecs_dev = _fused_vecs(
             head.runtime, head.ae_params, head.corr_params, lat32
         )
-        # requested species' guarantee streams entropy-decode while the
-        # dispatched NN decode runs
-        arts = _decode_species_guarantees(head, idx)
 
         import jax.numpy as jnp
 
-        vecs_sel = jnp.asarray(vecs_dev)[np.asarray(idx)]
-        # gate on the artifact-wide corrections bit, not the selection's:
-        # the full decode replays (x + C@U^T, C possibly all-zero) over
-        # every species whenever any species has corrections, and the
-        # selective output must be byte-identical to its slice
-        if _any_corrections(head):
-            engine = gae.default_engine()
-            dense, basis = engine.dense_corrections(
-                arts, (len(idx), b1 - b0, geom.block_size),
-                block_range=(b0, b1),
-            )
-            vecs_sel = engine.apply_device(
-                vecs_sel, jnp.asarray(dense), jnp.asarray(basis)
-            )
-        rec_blocks = blocking.vectors_as_blocks(np.asarray(vecs_sel), geom)
-        sub_shape = (len(idx), (tg1 - tg0) * geom.bt, h, w)
-        rec_normed = blocking.from_blocks(rec_blocks, sub_shape, geom)
-        out = (
-            rec_normed * head.norm_range[idx][:, None, None, None]
-            + head.norm_min[idx][:, None, None, None]
-        ).astype(np.float32)
-        out = out[:, t0 - tg0 * geom.bt : t1 - tg0 * geom.bt]
-        return out[0] if squeeze else out
+        # selection queues on device; the replay stage's guarantee
+        # entropy decode then runs on host while the device computes
+        vecs_sel = jnp.asarray(vecs_dev)[np.asarray(plan.idx)]
+        vecs_sel = replay_slice(
+            head, plan.idx, (plan.b0, plan.b1), vecs_sel
+        )
+        return finalize_slice(head, plan, vecs_sel)

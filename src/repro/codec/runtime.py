@@ -22,12 +22,14 @@ lazily and only for the block rows a query touches.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import struct
-from collections import OrderedDict
+import threading
 from typing import Any, Optional
 
 import numpy as np
 
+from repro.codec import cache as tier_cache
 from repro.codec import format as wire
 from repro.codec.latents import _ChainLatents, _ShardedLatents
 from repro.codec.params import _decoder_defs, unpack_params
@@ -58,6 +60,11 @@ class _DecodeRuntime:
 _RUNTIMES: dict[tuple, _DecodeRuntime] = {}
 _RUNTIMES_REF: dict[tuple, _DecodeRuntime] = {}
 _RUNTIMES_MAX = 8
+# the decode service issues concurrent decodes: runtime construction and
+# eviction must not interleave (a half-built runtime must never be
+# observable, and two threads racing a miss must agree on ONE runtime —
+# the cache is also an identity cache, `rt is rt` matters to jit reuse)
+_RUNTIMES_LOCK = threading.RLock()
 
 
 def _runtime_key(cfg: PipelineConfig, n_species: int, has_corr: bool) -> tuple:
@@ -129,14 +136,15 @@ def _build_runtime(cfg: PipelineConfig, n_species: int, has_corr: bool,
 def _cached_runtime(cache: dict, cfg: PipelineConfig, n_species: int,
                     has_corr: bool, conv_impl: str) -> _DecodeRuntime:
     key = _runtime_key(cfg, n_species, has_corr)
-    hit = cache.get(key)
-    if hit is not None:
-        return hit
-    rt = _build_runtime(cfg, n_species, has_corr, conv_impl)
-    while len(cache) >= _RUNTIMES_MAX:
-        cache.pop(next(iter(cache)))
-    cache[key] = rt
-    return rt
+    with _RUNTIMES_LOCK:
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+        rt = _build_runtime(cfg, n_species, has_corr, conv_impl)
+        while len(cache) >= _RUNTIMES_MAX:
+            cache.pop(next(iter(cache)))
+        cache[key] = rt
+        return rt
 
 
 def _runtime(cfg: PipelineConfig, n_species: int,
@@ -182,8 +190,49 @@ class _DecodedHead:
     # memoized artifact-wide "any species has corrections" bit (a pure
     # function of the blob; see partial._any_corrections)
     any_corrections: Optional[bool] = None
-    # per-species guarantee artifacts already decoded from this blob
+    # per-species guarantee artifacts already decoded from this blob —
+    # the local memo for uncached heads (fresh parses, salvage); cached
+    # heads migrate into the shared guarantee tier (see _attach_cache)
     arts_memo: dict = dataclasses.field(default_factory=dict)
+    # unique per-parse token: the shard/guarantee tier key prefix (content
+    # alone must not alias entries across re-parses of one blob, and a
+    # head eviction cascades by token)
+    token: int = dataclasses.field(default_factory=lambda: next(_TOKENS))
+    # the shared DecodeCache once this head is admitted to the head tier
+    # (None for fresh/salvage parses — those stay cache-isolated)
+    cache: Optional[tier_cache.DecodeCache] = None
+    # guards the lazy single-assignment memos (gdir, any_corrections)
+    # against concurrent decode threads; reentrant because the
+    # any_corrections probe holds it across a _gdir call
+    lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False
+    )
+
+
+_TOKENS = itertools.count()
+
+
+def _artifact_nbytes(art) -> int:
+    """Resident cost of a decoded guarantee artifact (array bytes)."""
+    return int(
+        art.basis.nbytes + art.coeff_q.nbytes
+        + art.index_offsets.nbytes + art.index_flat.nbytes
+    )
+
+
+def _memo_art_get(head: _DecodedHead, sidx: int):
+    if head.cache is not None:
+        return head.cache.guarantees.get((head.token, sidx))
+    return head.arts_memo.get(sidx)
+
+
+def _memo_art_put(head: _DecodedHead, sidx: int, art) -> None:
+    if head.cache is not None:
+        head.cache.guarantees.put(
+            (head.token, sidx), art, _artifact_nbytes(art)
+        )
+    else:
+        head.arts_memo[sidx] = art
 
 
 def _decode_head(blob: bytes, *, huffman=None,
@@ -285,12 +334,35 @@ def _decode_head(blob: bytes, *, huffman=None,
     )
 
 
-_HEADS: "OrderedDict[bytes, _DecodedHead]" = OrderedDict()
-_HEADS_MAX = 4
+# the shared multi-tier decode cache: head / latent-shard / guarantee
+# tiers with byte budgets, LRU eviction, and stats (see codec/cache.py);
+# _HEADS aliases the head tier — the PR-5 name the suite pins eviction
+# and isolation behaviour against
+_CACHE = tier_cache.DecodeCache()
+_HEADS = _CACHE.heads
+_HEADS_MAX = tier_cache.DEFAULT_HEAD_ENTRIES
+# serializes head *parses* per blob so N concurrent first queries on one
+# blob pay one parse, not N (decode work after the parse runs unlocked)
+_HEADS_PARSE_LOCK = threading.Lock()
+_HEADS_PARSING: dict[bytes, threading.Event] = {}
+
+
+def _attach_cache(head: _DecodedHead) -> None:
+    """Admit a head's sub-memos to the shared tiers (migrating anything
+    already decoded through the local memos)."""
+    head.cache = _CACHE
+    for sidx, art in list(head.arts_memo.items()):
+        _CACHE.guarantees.put(
+            (head.token, sidx), art, _artifact_nbytes(art)
+        )
+    head.arts_memo.clear()
+    attach = getattr(head.latents, "attach_cache", None)
+    if attach is not None:
+        attach(_CACHE.shards, head.token)
 
 
 def _cached_head(blob: bytes) -> _DecodedHead:
-    """Content-keyed LRU over parsed heads (bounded at ``_HEADS_MAX``).
+    """Content-keyed head tier of the shared decode cache.
 
     Repeated ``decompress``/window queries on the same blob skip the head
     parse, the parameter unpack, and every latent shard or guarantee
@@ -298,24 +370,91 @@ def _cached_head(blob: bytes) -> _DecodedHead:
     *bytes* themselves — content equality, so byte-different blobs can
     never share an entry — and CPython caches a bytes object's hash, so a
     caller re-presenting the same object pays O(1) per query rather than
-    re-hashing the container (the entry pins the blob anyway).
+    re-hashing the container (the entry pins the blob anyway). Entry cost
+    is the blob size (the head pins its blob); decoded latent shards and
+    guarantee artifacts are accounted in their own tiers and cascade out
+    when the head evicts. Concurrent first queries on one blob coalesce
+    onto a single parse.
     """
     key = bytes(blob)
-    hit = _HEADS.get(key)
-    if hit is not None:
-        _HEADS.move_to_end(key)
-        return hit
-    head = _decode_head(key)
-    while len(_HEADS) >= _HEADS_MAX:
-        _HEADS.popitem(last=False)
-    _HEADS[key] = head
-    return head
+    while True:
+        hit = _CACHE.heads.get(key)
+        if hit is not None:
+            return hit
+        with _HEADS_PARSE_LOCK:
+            # re-check under the lock: the parser that beat us published
+            hit = _CACHE.heads.get(key)
+            if hit is not None:
+                return hit
+            waiter = _HEADS_PARSING.get(key)
+            if waiter is None:
+                _HEADS_PARSING[key] = threading.Event()
+                break  # we are the parser
+        waiter.wait()
+    try:
+        head = _decode_head(key)
+        _attach_cache(head)
+        _CACHE.heads.put(key, head, len(key))
+        return head
+    finally:
+        with _HEADS_PARSE_LOCK:
+            _HEADS_PARSING.pop(key).set()
+
+
+def configure_decode_cache(*, head_bytes: Optional[int] = None,
+                           shard_bytes: Optional[int] = None,
+                           guarantee_bytes: Optional[int] = None,
+                           head_entries: Optional[int] = None) -> None:
+    """Re-budget the decode cache tiers (contents are dropped — a budget
+    change invalidates every admission decision already made). ``None``
+    keeps a tier's current budget; the head tier's entry bound can be
+    lifted entirely with ``head_entries=0``."""
+    global _HEADS_MAX
+    if head_bytes is not None:
+        _CACHE.heads.capacity_bytes = int(head_bytes)
+    if head_entries is not None:
+        _CACHE.heads.max_entries = int(head_entries) or None
+        _HEADS_MAX = _CACHE.heads.max_entries or (1 << 62)
+    if shard_bytes is not None:
+        _CACHE.shards.capacity_bytes = int(shard_bytes)
+    if guarantee_bytes is not None:
+        _CACHE.guarantees.capacity_bytes = int(guarantee_bytes)
+    clear_decode_cache()
+
+
+def cache_stats() -> dict:
+    """Hit/miss/eviction counters + occupancy for every decode cache
+    tier, plus the per-runtime Huffman decode-table memos (aggregated
+    over the cached decode runtimes)."""
+    stats = _CACHE.stats()
+    with _RUNTIMES_LOCK:
+        runtimes = list(_RUNTIMES.values()) + list(_RUNTIMES_REF.values())
+    hits = misses = entries = 0
+    for rt in runtimes:
+        d = rt.table_cache.stats()
+        hits += d["hits"]
+        misses += d["misses"]
+        entries += d["entries"]
+    total = hits + misses
+    stats["decode_table"] = {
+        "hits": hits,
+        "misses": misses,
+        "hit_rate": (hits / total) if total else 0.0,
+        "entries": entries,
+    }
+    return stats
 
 
 def clear_decode_cache() -> None:
-    """Drop memoized parsed heads (benchmarks use this to time cold
-    decodes; also frees the latents/params the cached heads pin)."""
-    _HEADS.clear()
+    """Drop every decode-cache tier: memoized parsed heads (and with
+    them the latent shards / guarantee artifacts their tiers hold), plus
+    the Huffman decode-table memos on the cached decode runtimes.
+    Benchmarks use this to time genuinely cold decodes."""
+    _CACHE.clear()
+    with _RUNTIMES_LOCK:
+        runtimes = list(_RUNTIMES.values()) + list(_RUNTIMES_REF.values())
+    for rt in runtimes:
+        rt.table_cache.clear()
 
 
 def _evict_head(blob: bytes) -> None:
@@ -323,8 +462,9 @@ def _evict_head(blob: bytes) -> None:
     corruption surfaces *after* the head parse (a bad latent shard or
     guarantee stream discovered lazily): the head must not stay serveable
     as if the blob were clean, and salvage must never be answered from —
-    or write into — the clean-head cache."""
-    _HEADS.pop(bytes(blob), None)
+    or write into — the clean-head cache. Cascades to the head's shard
+    and guarantee tier entries."""
+    _CACHE.heads.discard(bytes(blob))
 
 
 # ---------------------------------------------------------------------------
@@ -334,28 +474,30 @@ def _gdir(head: _DecodedHead) -> wire.GuaranteeDirectory:
     """Parse (once) the combined guarantee stream's directory (v2+).
 
     On v4 the directory region digest-checks (against its stored length)
-    before any record is interpreted."""
-    if head.gdir is None:
-        payload = head.reader["guarantee"]
-        if head.integrity is not None:
-            head.integrity.verify_gdir(payload)
-        gdir = wire.GuaranteeDirectory(payload)
-        if gdir.n_species != head.shape[0]:
-            raise ContainerFormatError(
-                f"guarantee directory covers {gdir.n_species} species, "
-                f"meta stream declares {head.shape[0]}",
-                stream="guarantee",
-            )
-        if (head.integrity is not None
-                and len(head.integrity.species_crcs) != gdir.n_species):
-            raise ContainerFormatError(
-                f"integrity stream carries "
-                f"{len(head.integrity.species_crcs)} species digests, "
-                f"guarantee directory has {gdir.n_species}",
-                stream="integrity",
-            )
-        head.gdir = gdir
-    return head.gdir
+    before any record is interpreted. Concurrent callers serialize on the
+    head lock so the directory parses exactly once."""
+    with head.lock:
+        if head.gdir is None:
+            payload = head.reader["guarantee"]
+            if head.integrity is not None:
+                head.integrity.verify_gdir(payload)
+            gdir = wire.GuaranteeDirectory(payload)
+            if gdir.n_species != head.shape[0]:
+                raise ContainerFormatError(
+                    f"guarantee directory covers {gdir.n_species} species, "
+                    f"meta stream declares {head.shape[0]}",
+                    stream="guarantee",
+                )
+            if (head.integrity is not None
+                    and len(head.integrity.species_crcs) != gdir.n_species):
+                raise ContainerFormatError(
+                    f"integrity stream carries "
+                    f"{len(head.integrity.species_crcs)} species digests, "
+                    f"guarantee directory has {gdir.n_species}",
+                    stream="integrity",
+                )
+            head.gdir = gdir
+        return head.gdir
 
 
 def _coeff_streams(head: _DecodedHead, indices) -> "Optional[list[bytes]]":
@@ -438,16 +580,24 @@ def _decode_species_guarantees(
     The selected coefficient streams decode in one lockstep chunk-parallel
     chain walk (:func:`entropy.huffman_decode_many`) with codebook tables
     served from the runtime cache; per-species parsing/validation then
-    consumes the pre-decoded symbols. Successful artifacts memoize on the
-    head (cached heads serve repeated queries without re-walking). When
-    the batch walk cannot read a stream, every species re-parses
-    individually so the canonical per-species ContainerFormatError
-    surfaces (and healthy siblings are still decodable)."""
-    memo = head.arts_memo if huffman is None else {}
-    todo = [s for s in indices if s not in memo]
+    consumes the pre-decoded symbols. Successful artifacts land in the
+    guarantee cache tier keyed under the head's token (cached heads serve
+    repeated queries without re-walking; a custom ``huffman`` bypasses
+    the shared tier entirely). When the batch walk cannot read a stream,
+    every species re-parses individually so the canonical per-species
+    ContainerFormatError surfaces (and healthy siblings are still
+    decodable)."""
+    shared = huffman is None
+    got: dict = {}
+    if shared:
+        for s in indices:
+            art = _memo_art_get(head, s)
+            if art is not None:
+                got[s] = art
+    todo = [s for s in indices if s not in got]
     if todo:
         coeffs: "Optional[list]" = None
-        if huffman is None and len(todo) > 1:
+        if shared and len(todo) > 1:
             streams = _coeff_streams(head, todo)
             if streams is not None:
                 try:
@@ -457,11 +607,14 @@ def _decode_species_guarantees(
                 except (ValueError, struct.error):
                     coeffs = None  # per-species path raises canonically
         for k, sidx in enumerate(todo):
-            memo[sidx] = _species_guarantee(
+            art = _species_guarantee(
                 head, sidx, huffman=huffman,
                 coeff_q=None if coeffs is None else coeffs[k],
             )
-    return [memo[s] for s in indices]
+            got[sidx] = art  # local ref: immune to immediate eviction
+            if shared:
+                _memo_art_put(head, sidx, art)
+    return [got[s] for s in indices]
 
 
 def _decode_guarantees(head: _DecodedHead, *, huffman=None) -> list:

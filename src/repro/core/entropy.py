@@ -267,19 +267,42 @@ class DecodeTableCache:
         self._max = max_entries
         self._tables: dict[bytes, tuple] = {}
         self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
 
     def get(self, lengths: np.ndarray):
         key = lengths.tobytes()
         with self._lock:
             hit = self._tables.get(key)
-        if hit is not None:
-            return hit
+            if hit is not None:
+                self._hits += 1
+                return hit
+            self._misses += 1
         table = _decode_table(lengths, _canonical_codes(lengths))
         with self._lock:
             while len(self._tables) >= self._max:
                 self._tables.pop(next(iter(self._tables)))
             self._tables[key] = table
         return table
+
+    def clear(self) -> None:
+        """Drop every memoized table (counters are cumulative and stay)."""
+        with self._lock:
+            self._tables.clear()
+
+    def stats(self) -> dict:
+        """Hit/miss counters + occupancy (schema mirrors the decode-cache
+        tiers so codec.cache_stats() can aggregate across runtimes)."""
+        with self._lock:
+            hits, misses, entries = self._hits, self._misses, \
+                len(self._tables)
+        total = hits + misses
+        return {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": (hits / total) if total else 0.0,
+            "entries": entries,
+        }
 
 
 def _window_values_ref(bit_arr: np.ndarray, width: int) -> np.ndarray:

@@ -1,0 +1,13 @@
+"""Serving layer: concurrent query workloads over compressed fields.
+
+:mod:`repro.serve.decode_service` is the codec-native path — a
+continuous-batched selective-decode server over GBATC container blobs
+(see its module docstring for the scheduler design and bit-identity
+contract). :mod:`repro.serve.serve_loop` and :mod:`repro.serve.kvcache`
+are the retained seed LM-serving templates the scheduler and the decode
+cache were modeled on.
+"""
+
+from repro.serve.decode_service import DecodeService, ServeStats
+
+__all__ = ["DecodeService", "ServeStats"]

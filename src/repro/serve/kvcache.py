@@ -5,6 +5,11 @@ is deliberately dropped on the hot path (decode needs random access; noted in
 DESIGN.md §Deviations). At kv=8 heads, 32k context, batch 128 this is the
 difference between 2.7 GB and 0.7 GB per device of cache — often the
 enabling factor for batch size, which is the real serving roofline lever.
+
+Seed template, retained as the record of where the codec's serving-side
+cache design came from: the byte-budgeted multi-tier decode cache
+(:mod:`repro.codec.cache`) generalizes this module's memory-as-the-
+roofline framing to the decode service's head/shard/guarantee tiers.
 """
 
 from __future__ import annotations

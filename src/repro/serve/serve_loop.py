@@ -2,6 +2,10 @@
 
 Single-controller logic; the jit'd prefill/decode steps are the same
 functions the dry-run lowers for the decode_* cells.
+
+Seed template, retained as the record of the scheduler idiom the codec's
+decode service (:mod:`repro.serve.decode_service`) is modeled on: one
+controller thread, batched jitted dispatches, stats counted at the loop.
 """
 
 from __future__ import annotations

@@ -1,0 +1,10 @@
+"""Planted decode-purity violations in the serving layer (fixture)."""
+
+import os
+
+from repro.core.pipeline import GBATCPipeline  # planted: ambient import
+
+
+def _serve(blob_id):
+    root = os.environ["GBATC_BLOB_ROOT"]  # planted: env read in serve/
+    return GBATCPipeline, root, blob_id

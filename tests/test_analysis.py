@@ -52,6 +52,8 @@ class TestFixtureRules(unittest.TestCase):
         self.assertEqual(sorted(self.by_rule["decode-purity"]), [
             ("codec/decode.py", 5),   # ambient default_config import
             ("codec/decode.py", 9),   # os.getenv on the decode path
+            ("serve/decode_service.py", 5),  # ambient import in serve/
+            ("serve/decode_service.py", 9),  # env read in serve/
         ])
 
     def test_wire_centralization_fires_exactly_at_plants(self):
@@ -85,7 +87,7 @@ class TestFixtureRules(unittest.TestCase):
         self.assertNotIn("clean.py", paths)
 
     def test_no_findings_beyond_the_plants(self):
-        self.assertEqual(len(self.result.findings), 13)
+        self.assertEqual(len(self.result.findings), 15)
 
     def test_inline_suppression_lands_in_suppressed(self):
         supp = [(f.rule, f.path) for f in self.result.suppressed]
@@ -281,7 +283,7 @@ class TestCLI(unittest.TestCase):
             with open(path, encoding="utf-8") as fh:
                 payload = json.load(fh)
             self.assertEqual(payload["rule_counts"]["determinism"], 4)
-            self.assertEqual(len(payload["new"]), 13)
+            self.assertEqual(len(payload["new"]), 15)
             self.assertIn("lint_wall_clock_s", payload)
         finally:
             os.unlink(path)

@@ -1,0 +1,208 @@
+"""Multi-tier decode cache suite (:mod:`repro.codec.cache`).
+
+The acceptance contract for the caching subsystem:
+
+* the tier engine is a byte-budgeted LRU: least-recently-used entries
+  evict first, the byte budget is enforced after every insert, and an
+  entry larger than the whole budget is rejected (admission control),
+  never thrashed through;
+* stats counters match the observed access sequence exactly — hits,
+  misses, insertions, evictions, rejections;
+* the wired-up decode cache keys heads by blob *content* (byte-different
+  blobs never alias) and sub-tier entries by per-head token (evicting a
+  head cascades its shard/guarantee entries out);
+* ``codec.clear_decode_cache()`` empties every tier including the
+  Huffman decode-table memos, and ``codec.cache_stats()`` reflects it.
+"""
+
+import numpy as np
+import pytest
+
+from repro import codec
+from repro.codec import cache as tier_cache
+from repro.codec import runtime as codec_runtime
+from repro.core.pipeline import PipelineConfig
+from repro.data import s3d
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    cfg = s3d.S3DConfig(n_species=8, n_time=8, height=40, width=32, seed=11)
+    return s3d.generate(cfg)["species"]
+
+
+@pytest.fixture(scope="module")
+def blob_and_report(small_data):
+    cfg = PipelineConfig(ae_steps=60, corr_steps=30, conv_channels=(16, 32))
+    return codec.GBATCCodec(cfg).fit(small_data).compress_report(
+        target_nrmse=1e-3
+    )
+
+
+@pytest.fixture(scope="module")
+def blob(blob_and_report):
+    return blob_and_report[0]
+
+
+# ---------------------------------------------------------------------------
+class TestCacheTier:
+    def test_lru_eviction_order(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=30)
+        t.put("a", 1, 10)
+        t.put("b", 2, 10)
+        t.put("c", 3, 10)
+        assert t.get("a") == 1      # refresh a -> b is now LRU
+        t.put("d", 4, 10)           # evicts b, not a
+        assert t.keys() == ["c", "a", "d"]
+        assert t.get("b") is None
+        assert t.stats.evictions == 1
+
+    def test_byte_budget_enforced(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=100)
+        for i in range(10):
+            t.put(i, i, 25)
+        assert t.nbytes <= 100
+        assert len(t) == 4
+
+    def test_admission_rejects_oversize(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=10)
+        t.put("small", 1, 8)
+        assert not t.put("huge", 2, 11)
+        assert "huge" not in t
+        assert "small" in t          # the resident entry survived
+        assert t.stats.rejections == 1
+        assert t.stats.evictions == 0
+
+    def test_entry_bound(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=1000, max_entries=2)
+        t.put("a", 1, 1)
+        t.put("b", 2, 1)
+        t.put("c", 3, 1)
+        assert len(t) == 2 and "a" not in t
+
+    def test_refresh_replaces_bytes(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=100)
+        t.put("a", 1, 60)
+        t.put("a", 2, 30)            # re-put: old cost released
+        assert t.nbytes == 30
+        assert t.get("a") == 2
+
+    def test_stats_match_observed_sequence(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=100)
+        assert t.get("x") is None                      # miss
+        t.put("x", 1, 10)                              # insert
+        assert t.get("x") == 1                         # hit
+        assert t.get("y") is None                      # miss
+        d = t.as_dict()
+        assert (d["hits"], d["misses"], d["insertions"]) == (1, 2, 1)
+        assert d["hit_rate"] == pytest.approx(1 / 3)
+
+    def test_peek_is_uncounted_but_refreshes(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=20)
+        t.put("a", 1, 10)
+        t.put("b", 2, 10)
+        assert t.peek("a") == 1
+        d = t.as_dict()
+        assert (d["hits"], d["misses"]) == (0, 0)
+        t.put("c", 3, 10)            # peek refreshed a -> b evicts
+        assert "a" in t and "b" not in t
+
+    def test_discard_group_drops_token_prefix(self):
+        t = tier_cache.CacheTier("t", capacity_bytes=100)
+        t.put((7, 0), "x", 10)
+        t.put((7, 1), "y", 10)
+        t.put((8, 0), "z", 10)
+        t.put("scalar", "w", 10)
+        assert t.discard_group(7) == 2
+        assert t.keys() == [(8, 0), "scalar"]
+        assert t.nbytes == 20
+
+    def test_head_eviction_cascades_subtiers(self):
+        dc = tier_cache.DecodeCache(head_bytes=100, shard_bytes=100,
+                                    guarantee_bytes=100, head_entries=1)
+
+        class H:
+            def __init__(self, token):
+                self.token = token
+
+        h1, h2 = H(1), H(2)
+        dc.heads.put(b"blob1", h1, 10)
+        dc.shards.put((1, 0), "s", 10)
+        dc.guarantees.put((1, 3), "g", 10)
+        dc.heads.put(b"blob2", h2, 10)   # evicts h1 -> cascade
+        assert (1, 0) not in dc.shards
+        assert (1, 3) not in dc.guarantees
+        assert b"blob2" in dc.heads
+
+
+# ---------------------------------------------------------------------------
+class TestWiredDecodeCache:
+    def test_content_keyed_cross_blob_isolation(self, blob, blob_and_report):
+        codec.clear_decode_cache()
+        # byte-different container from the SAME artifact: different shard
+        # granularity -> different bytes, identical decoded field
+        other = codec.encode(blob_and_report[1].artifact, version=4,
+                             shard_tgroups=2)
+        assert bytes(other) != bytes(blob)
+        a = codec.decompress(blob, species=2)
+        b = codec.decompress(other, species=2)
+        assert np.array_equal(a, b)
+        heads = codec_runtime._HEADS
+        assert bytes(blob) in heads and bytes(other) in heads
+        h1 = heads.get(bytes(blob))
+        h2 = heads.get(bytes(other))
+        assert h1.token != h2.token  # sub-tier keys can never alias
+
+    def test_repeat_query_hits_every_tier(self, blob):
+        codec.clear_decode_cache()
+        pd = codec.PartialDecoder(blob)
+        pd.decode(species=1, time_range=(2, 6))
+        before = codec.cache_stats()
+        pd.decode(species=1, time_range=(2, 6))
+        after = codec.cache_stats()
+        assert after["shard"]["hits"] > before["shard"]["hits"]
+        assert after["guarantee"]["hits"] > before["guarantee"]["hits"]
+        assert after["shard"]["misses"] == before["shard"]["misses"]
+        assert after["guarantee"]["misses"] == before["guarantee"]["misses"]
+
+    def test_clear_decode_cache_clears_all_tiers(self, blob):
+        codec.decompress(blob, species=0)
+        stats = codec.cache_stats()
+        assert stats["head"]["entries"] >= 1
+        codec.clear_decode_cache()
+        stats = codec.cache_stats()
+        assert stats["head"]["entries"] == 0
+        assert stats["shard"]["entries"] == 0
+        assert stats["guarantee"]["entries"] == 0
+        # decode-table memos cleared too: the next decode rebuilds tables
+        assert stats["decode_table"]["entries"] == 0
+        misses_before = stats["decode_table"]["misses"]
+        codec.decompress(blob, species=0)
+        assert (codec.cache_stats()["decode_table"]["misses"]
+                > misses_before)
+
+    def test_configure_decode_cache_rebudgets(self, blob):
+        try:
+            codec.configure_decode_cache(shard_bytes=1)
+            codec.decompress(blob, species=0, time_range=(0, 2))
+            stats = codec.cache_stats()
+            # every decoded shard is bigger than 1 byte: all rejected
+            assert stats["shard"]["entries"] == 0
+            assert stats["shard"]["rejections"] >= 1
+        finally:
+            codec.configure_decode_cache(
+                shard_bytes=tier_cache.DEFAULT_SHARD_BYTES
+            )
+
+    def test_eviction_only_costs_a_redecode(self, blob):
+        codec.clear_decode_cache()
+        want = codec.decompress(blob, species=3, time_range=(2, 6))
+        try:
+            codec.configure_decode_cache(shard_bytes=1, guarantee_bytes=1)
+            got = codec.decompress(blob, species=3, time_range=(2, 6))
+            assert np.array_equal(got, want)  # bitwise despite 0-capacity
+        finally:
+            codec.configure_decode_cache(
+                shard_bytes=tier_cache.DEFAULT_SHARD_BYTES,
+                guarantee_bytes=tier_cache.DEFAULT_GUARANTEE_BYTES,
+            )

@@ -1,0 +1,319 @@
+"""Decode-service suite (:mod:`repro.serve.decode_service`).
+
+The acceptance contract for the serving subsystem:
+
+* every slice the service returns — batched, coalesced, deduped, or
+  fallback — is **bitwise equal** to the serial ``PartialDecoder``
+  answer for the same request;
+* N concurrent threads issuing random species/window slices (through
+  the service *and* directly through ``PartialDecoder``) each get the
+  bitwise serial answer — no cache poisoning under contention;
+* a corrupt request coalesced into a batch gets its structured
+  :class:`ContainerFormatError` (or its salvage report) alone — healthy
+  batch-mates in the same dispatch still succeed;
+* scheduler stats show genuine coalescing: fewer fused dispatches than
+  requests under concurrent load.
+"""
+
+import threading
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro import codec
+from repro.codec import runtime as codec_runtime
+from repro.core.container import ContainerFormatError
+from repro.core.pipeline import PipelineConfig
+from repro.data import s3d
+from repro.serve import DecodeService
+from repro.serve.decode_service import _Pending, _merge_intervals
+from repro.testing.faults import FaultInjector, blob_regions
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    cfg = s3d.S3DConfig(n_species=8, n_time=8, height=40, width=32, seed=11)
+    return s3d.generate(cfg)["species"]
+
+
+@pytest.fixture(scope="module")
+def blob(small_data):
+    cfg = PipelineConfig(ae_steps=60, corr_steps=30, conv_channels=(16, 32))
+    return codec.GBATCCodec(cfg).fit(small_data).compress_report(
+        target_nrmse=1e-3
+    )[0]
+
+
+@pytest.fixture(scope="module")
+def full(blob):
+    return codec.decompress(blob)
+
+
+def _requests(rng, s, t, n):
+    """n random (species, time_range) selections over an (s, t) field."""
+    out = []
+    for _ in range(n):
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            species = int(rng.integers(0, s))
+        elif kind == 1:
+            k = int(rng.integers(1, 4))
+            species = list(rng.choice(s, size=k, replace=False))
+            species = [int(x) for x in species]
+        else:
+            species = None
+        if rng.integers(0, 2):
+            t0 = int(rng.integers(0, t - 1))
+            t1 = int(rng.integers(t0 + 1, t + 1))
+            window = (t0, t1)
+        else:
+            window = None
+        out.append((species, window))
+    return out
+
+
+def _sliced(full, species, time_range):
+    t0, t1 = time_range if time_range is not None else (0, full.shape[1])
+    if species is None:
+        return full[:, t0:t1]
+    if isinstance(species, int):
+        return full[species, t0:t1]
+    return full[list(species)][:, t0:t1]
+
+
+# ---------------------------------------------------------------------------
+class TestMergeIntervals:
+    def test_merges_overlap_and_adjacency(self):
+        assert _merge_intervals([(4, 8), (0, 2), (1, 5), (8, 9)]) == \
+            [(0, 9)]
+        assert _merge_intervals([(0, 2), (3, 5)]) == [(0, 2), (3, 5)]
+        assert _merge_intervals([(2, 4)]) == [(2, 4)]
+
+
+# ---------------------------------------------------------------------------
+class TestServiceEquivalence:
+    def test_random_mix_bitwise_equals_serial(self, blob, full):
+        rng = np.random.default_rng(7)
+        reqs = _requests(rng, full.shape[0], full.shape[1], 24)
+        with DecodeService() as svc:
+            svc.register("b", blob)
+            futs = [svc.submit("b", sp, tr) for sp, tr in reqs]
+            outs = [f.result(timeout=120) for f in futs]
+        for (sp, tr), out in zip(reqs, outs):
+            assert np.array_equal(out, _sliced(full, sp, tr)), (sp, tr)
+
+    def test_tick_coalesces_and_dedups(self, blob, full):
+        svc = DecodeService()
+        svc.register("b", blob)
+        reqs = [
+            _Pending("b", 3, (0, 4), "raise", Future()),
+            _Pending("b", 3, (0, 4), "raise", Future()),   # exact dup
+            _Pending("b", [1, 3], (0, 4), "raise", Future()),
+            _Pending("b", 5, (2, 6), "raise", Future()),
+        ]
+        svc._tick(reqs)
+        for req in reqs:
+            sp, tr = req.species, req.time_range
+            assert np.array_equal(req.future.result(0),
+                                  _sliced(full, sp, tr)), (sp, tr)
+        assert svc.stats.deduped == 1
+        assert svc.stats.coalesced >= 3
+        # 4 requests; windows (0,4) and (2,6) overlap into ONE merged
+        # row interval -> one fused dispatch total
+        assert svc.stats.dispatches == 1
+        assert svc.stats.completed == 4 and svc.stats.errors == 0
+
+    def test_unknown_blob_id_fails_alone(self, blob, full):
+        with DecodeService() as svc:
+            svc.register("b", blob)
+            bad = svc.submit("nope", 0)
+            good = svc.submit("b", 0)
+            with pytest.raises(KeyError):
+                bad.result(timeout=120)
+            assert np.array_equal(good.result(timeout=120), full[0])
+
+    def test_submit_requires_started(self, blob):
+        svc = DecodeService()
+        svc.register("b", blob)
+        with pytest.raises(RuntimeError):
+            svc.submit("b", 0)
+        svc.start()
+        try:
+            svc.submit("b", 0).result(timeout=120)
+        finally:
+            svc.stop()
+        with pytest.raises(RuntimeError):
+            svc.submit("b", 0)
+
+    def test_malformed_request_fails_alone(self, blob, full):
+        with DecodeService() as svc:
+            svc.register("b", blob)
+            bad = svc.submit("b", species=99)
+            dup = svc.submit("b", species=[2, 2])
+            good = svc.submit("b", species=2)
+            with pytest.raises(ValueError):
+                bad.result(timeout=120)
+            with pytest.raises(ValueError):
+                dup.result(timeout=120)
+            assert np.array_equal(good.result(timeout=120), full[2])
+
+
+# ---------------------------------------------------------------------------
+class TestConcurrency:
+    N_THREADS = 8
+    PER_THREAD = 6
+
+    def _expected(self, full, reqs):
+        return [_sliced(full, sp, tr) for sp, tr in reqs]
+
+    def test_threads_through_partial_decoder(self, blob, full):
+        codec.clear_decode_cache()
+        rng = np.random.default_rng(13)
+        plans = [
+            _requests(rng, full.shape[0], full.shape[1], self.PER_THREAD)
+            for _ in range(self.N_THREADS)
+        ]
+        results = [[None] * self.PER_THREAD for _ in range(self.N_THREADS)]
+        errors = []
+
+        def worker(i):
+            try:
+                pd = codec.PartialDecoder(blob)
+                for j, (sp, tr) in enumerate(plans[i]):
+                    results[i][j] = pd.decode(sp, tr)
+            except Exception as e:  # surfaced below, not swallowed
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        for i in range(self.N_THREADS):
+            for j, (sp, tr) in enumerate(plans[i]):
+                assert np.array_equal(results[i][j],
+                                      _sliced(full, sp, tr)), (i, sp, tr)
+
+    def test_threads_through_service(self, blob, full):
+        codec.clear_decode_cache()
+        rng = np.random.default_rng(17)
+        plans = [
+            _requests(rng, full.shape[0], full.shape[1], self.PER_THREAD)
+            for _ in range(self.N_THREADS)
+        ]
+        results = [[None] * self.PER_THREAD for _ in range(self.N_THREADS)]
+        errors = []
+        with DecodeService(max_batch=16) as svc:
+            svc.register("b", blob)
+
+            def worker(i):
+                try:
+                    for j, (sp, tr) in enumerate(plans[i]):
+                        results[i][j] = svc.decode("b", sp, tr)
+                except Exception as e:
+                    errors.append(e)
+
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(self.N_THREADS)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        assert errors == []
+        for i in range(self.N_THREADS):
+            for j, (sp, tr) in enumerate(plans[i]):
+                assert np.array_equal(results[i][j],
+                                      _sliced(full, sp, tr)), (i, sp, tr)
+        total = self.N_THREADS * self.PER_THREAD
+        assert svc.stats.completed == total
+        # closed-loop contention must actually coalesce work: strictly
+        # fewer fused dispatches than requests
+        assert svc.stats.dispatches < total
+
+
+# ---------------------------------------------------------------------------
+class TestCorruptIsolation:
+    @pytest.fixture(scope="class")
+    def bad_guarantee(self, blob):
+        regions = {r.label: r for r in blob_regions(blob)}
+        bad, _ = FaultInjector(seed=5).flip_bit(
+            blob, regions["guarantee:s3:coeff"]
+        )
+        return bad
+
+    def test_corrupt_species_fails_alone_in_batch(self, blob, full,
+                                                  bad_guarantee):
+        codec.clear_decode_cache()
+        svc = DecodeService()
+        svc.register("bad", bad_guarantee)
+        reqs = [
+            _Pending("bad", 1, None, "raise", Future()),
+            _Pending("bad", 3, None, "raise", Future()),   # the corrupt one
+            _Pending("bad", [2, 5], (0, 4), "raise", Future()),
+        ]
+        svc._tick(reqs)
+        with pytest.raises(ContainerFormatError) as exc:
+            reqs[1].future.result(0)
+        assert exc.value.unit == 3 and exc.value.stream == "guarantee"
+        # healthy batch-mates coalesced with it still succeed, bitwise
+        assert np.array_equal(reqs[0].future.result(0), full[1])
+        assert np.array_equal(reqs[2].future.result(0),
+                              full[[2, 5]][:, 0:4])
+        # serial raise-mode semantics preserved: the bad head is evicted
+        assert bytes(bad_guarantee) not in codec_runtime._HEADS
+        assert svc.stats.errors == 1 and svc.stats.completed == 2
+
+    def test_corrupt_latent_shard_fails_only_covering_windows(self, blob,
+                                                              full):
+        regions = {r.label: r for r in blob_regions(blob)}
+        shard_labels = [k for k in regions if k.startswith("latent:shard")]
+        assert len(shard_labels) >= 2  # time-sharded fixture
+        bad, _ = FaultInjector(seed=6).flip_bit(
+            blob, regions["latent:shard0"]
+        )
+        codec.clear_decode_cache()
+        svc = DecodeService()
+        svc.register("bad", bad)
+        t = full.shape[1]
+        covering = _Pending("bad", 2, (0, t // 2), "raise", Future())
+        clear = _Pending("bad", 2, (t // 2, t), "raise", Future())
+        svc._tick([covering, clear])
+        with pytest.raises(ContainerFormatError) as exc:
+            covering.future.result(0)
+        assert exc.value.stream == "latent"
+        assert np.array_equal(clear.future.result(0),
+                              full[2, t // 2:t])
+
+    def test_salvage_rides_with_clean_batchmates(self, blob, full,
+                                                 bad_guarantee):
+        codec.clear_decode_cache()
+        with DecodeService() as svc:
+            svc.register("bad", bad_guarantee)
+            svc.register("good", blob)
+            salv = svc.submit("bad", on_error="salvage")
+            clean = svc.submit("good", 4)
+            field, report = salv.result(timeout=120)
+            assert np.array_equal(clean.result(timeout=120), full[4])
+        assert report.quarantined == [3]
+        assert np.isnan(field[3]).all()
+        healthy = [s for s in range(full.shape[0]) if s != 3]
+        assert np.array_equal(field[healthy], full[healthy])
+        assert svc.stats.salvaged == 1
+        # salvage never writes the clean-decode head cache
+        assert bytes(bad_guarantee) not in codec_runtime._HEADS
+
+    def test_corrupt_head_fails_whole_group_structured(self, blob):
+        regions = {r.label: r for r in blob_regions(blob)}
+        bad, _ = FaultInjector(seed=8).flip_bit(blob, regions["stream:meta"])
+        codec.clear_decode_cache()
+        svc = DecodeService()
+        svc.register("bad", bad)
+        reqs = [_Pending("bad", s, None, "raise", Future())
+                for s in (0, 1)]
+        svc._tick(reqs)
+        for req in reqs:
+            with pytest.raises(ContainerFormatError):
+                req.future.result(0)
