@@ -1,0 +1,207 @@
+"""Encoder-family benchmark: conv vs attention vs SZ, same container.
+
+The family registry's pitch is that a second encoder architecture rides
+the *same* guarantee engine, wire format, and selective-decode machinery
+— so the comparison that matters is CR-vs-bound per family against the
+SZ baseline, with fit and decode wall-clock alongside:
+
+* **CR at 3 NRMSE bounds** per registered family (conv AE, block
+  attention), each through the full GBATC pipeline (latent quantization,
+  entropy coding, guarantee post-process), plus SZ at the same bounds
+  (per-species bisection on the abs error bound);
+* **fit wall-clock** per family (one fit, reused across bounds);
+* **decode wall-clock** per family, cold (cache cleared) and warm.
+
+Before any number is reported, the refactor gates are asserted:
+
+* **v1–v4 back-compat** — every legacy container version of the conv fit
+  decodes bitwise identical to the v5 decode;
+* **conv-v5 ≡ v4** — the conv-family v5 blob is the v4 blob of the same
+  fit plus exactly the one-byte family tag (every payload stream but
+  ``meta``/``integrity`` byte-identical, the meta body byte-identical
+  behind the tag), and their decodes are bitwise equal;
+* every GBATC point satisfies its per-species NRMSE bound.
+
+Writes BENCH_families.json (repo root) + results/bench/families.csv.
+
+  PYTHONPATH=src python -m benchmarks.bench_families
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import codec  # noqa: E402
+from repro.core import metrics, sz  # noqa: E402
+from repro.core.container import ContainerReader  # noqa: E402
+from repro.core.pipeline import PipelineConfig  # noqa: E402
+from repro.data import s3d  # noqa: E402
+
+BOUNDS = (1e-2, 5e-3, 1e-3)
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_families.json")
+OUT_CSV = "results/bench/families.csv"
+
+
+def _time(fn, repeat=3):
+    fn()  # warmup
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _assert_gates(rep, data):
+    """The refactor's correctness gates, on the fitted conv artifact."""
+    blob5 = codec.encode(rep.artifact)  # v5 default
+    blob4 = codec.encode(rep.artifact, version=4)
+    r5, r4 = ContainerReader(blob5), ContainerReader(blob4)
+    assert (r5.version, r4.version) == (5, 4)
+    # conv-v5 == v4 + the one-byte family tag
+    assert r5["meta"][:1] == b"\x01" and r5["meta"][1:] == r4["meta"], \
+        "conv v5 meta is not the tagged v4 meta body"
+    for name in r4.names:
+        if name in ("meta", "integrity"):
+            continue
+        assert r5[name] == r4[name], f"stream {name} drifted v4 -> v5"
+    ref = codec.decompress(blob5)
+    assert codec.decompress(blob4).tobytes() == ref.tobytes(), \
+        "conv v5 decode != v4 decode"
+    # v1-v4 back-compat: every legacy version decodes bitwise identical
+    for version in (1, 2, 3):
+        b = codec.encode(rep.artifact, version=version)
+        assert codec.decompress(b).tobytes() == ref.tobytes(), \
+            f"v{version} decode drifted from v5"
+    return blob5
+
+
+def _sz_point(data, target_nrmse, iters=7):
+    """Per-species bisection on the abs bound to hit the NRMSE target."""
+    s = data.shape[0]
+    rng = data.max(axis=(1, 2, 3)) - data.min(axis=(1, 2, 3))
+    lo = np.full(s, 1e-12) * rng
+    hi = 2.0 * target_nrmse * rng
+    for _ in range(iters):
+        mid = np.sqrt(lo * hi)
+        recon, _ = sz.compress_species(data, mid)
+        per = np.array([metrics.nrmse(data[i], recon[i]) for i in range(s)])
+        lo = np.where(per <= target_nrmse, mid, lo)
+        hi = np.where(per > target_nrmse, mid, hi)
+    return sz.compress_species(data, lo)
+
+
+def run(quick: bool = True, seed: int = 11):
+    scfg = (
+        s3d.S3DConfig(n_species=8, n_time=16, height=80, width=80,
+                      seed=seed)
+        if quick
+        else s3d.S3DConfig(n_species=12, n_time=24, height=120, width=120,
+                           seed=seed)
+    )
+    data = s3d.generate(scfg)["species"]
+
+    families_cfg = {
+        "conv": PipelineConfig(
+            conv_channels=(16, 32),
+            ae_steps=150 if quick else 800,
+            corr_steps=80 if quick else 400,
+            seed=0,
+        ),
+        "attention": PipelineConfig(
+            family="attention",
+            arch=(32, 2, 1, 64),
+            ae_steps=300 if quick else 1200,
+            corr_steps=80 if quick else 400,
+            seed=0,
+        ),
+    }
+
+    rows = []
+    fits = {}
+    gates_blob = None
+    for fam, cfg in families_cfg.items():
+        gbatc = codec.GBATCCodec(cfg)
+        t0 = time.perf_counter()
+        gbatc.fit(data)
+        fit_s = time.perf_counter() - t0
+        fits[fam] = {"fit_s": fit_s}
+        for bound in BOUNDS:
+            blob, rep = gbatc.compress_report(target_nrmse=bound)
+            per = rep.per_species_nrmse
+            assert per.max() <= bound * (1 + 1e-3), \
+                f"{fam} at bound {bound:g}: max NRMSE {per.max():.3e}"
+            if fam == "conv" and bound == BOUNDS[0]:
+                gates_blob = _assert_gates(rep, data)
+            codec.clear_decode_cache()
+            cold_s = _time(lambda b=blob: codec.decompress(b), repeat=1)
+            warm_s = _time(lambda b=blob: codec.decompress(b))
+            rows.append({
+                "method": fam,
+                "target_nrmse": bound,
+                "achieved_nrmse": float(per.mean()),
+                "max_species_nrmse": float(per.max()),
+                "compression_ratio": data.nbytes / len(blob),
+                "blob_bytes": len(blob),
+                "fit_s": fit_s,
+                "decode_cold_ms": cold_s * 1e3,
+                "decode_warm_ms": warm_s * 1e3,
+            })
+            print(f"[bench_families] {fam} bound={bound:.0e} "
+                  f"CR={rows[-1]['compression_ratio']:.1f} "
+                  f"nrmse={per.mean():.2e} "
+                  f"decode_warm={warm_s * 1e3:.1f}ms")
+    assert gates_blob is not None  # the gate ran before any report
+
+    for bound in BOUNDS:
+        recon, total = _sz_point(data, bound)
+        per = np.array([metrics.nrmse(data[i], recon[i])
+                        for i in range(data.shape[0])])
+        rows.append({
+            "method": "sz",
+            "target_nrmse": bound,
+            "achieved_nrmse": float(per.mean()),
+            "max_species_nrmse": float(per.max()),
+            "compression_ratio": data.nbytes / total,
+            "blob_bytes": int(total),
+            "fit_s": 0.0,
+            "decode_cold_ms": 0.0,
+            "decode_warm_ms": 0.0,
+        })
+        print(f"[bench_families] sz bound={bound:.0e} "
+              f"CR={rows[-1]['compression_ratio']:.1f} "
+              f"nrmse={per.mean():.2e}")
+
+    summary = {
+        "quick": quick,
+        "data_shape": list(data.shape),
+        "bounds": list(BOUNDS),
+        "families": sorted(families_cfg),
+        "points": rows,
+        "gates_passed": True,
+        "v1_v4_back_compat": True,
+        "conv_v5_equals_v4_plus_tag": True,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+    os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
+    with open(OUT_CSV, "w") as f:
+        keys = ["method", "target_nrmse", "achieved_nrmse",
+                "max_species_nrmse", "compression_ratio", "blob_bytes",
+                "fit_s", "decode_cold_ms", "decode_warm_ms"]
+        f.write(",".join(keys) + "\n")
+        for row in rows:
+            f.write(",".join(str(row[k]) for k in keys) + "\n")
+    return summary
+
+
+if __name__ == "__main__":
+    run(quick="--full" not in sys.argv)

@@ -229,6 +229,35 @@ def bench_serve_service(rows, full=False):
     ))
 
 
+def bench_encoder_families(rows, full=False):
+    """Registered encoder families (conv AE, block attention) vs the SZ
+    baseline: CR at 3 NRMSE bounds + fit/decode wall-clock; emits
+    BENCH_families.json. The v1–v4 back-compat and conv-v5 ≡ v4 + tag
+    byte-identity gates are asserted inside before any number is
+    reported."""
+    from benchmarks import bench_families
+
+    summary = bench_families.run(quick=not full)
+    by = {(r["method"], r["target_nrmse"]): r for r in summary["points"]}
+    b0 = summary["bounds"][0]
+    for fam in summary["families"]:
+        r = by[(fam, b0)]
+        crs = [by[(fam, b)]["compression_ratio"]
+               for b in summary["bounds"]]
+        rows.append((
+            f"families_{fam}",
+            r["decode_warm_ms"] * 1e3,
+            f"fit_s={r['fit_s']:.1f}"
+            " CR=" + "/".join(f"{c:.1f}" for c in crs),
+        ))
+    sz_crs = [by[("sz", b)]["compression_ratio"] for b in summary["bounds"]]
+    rows.append((
+        "families_sz_baseline",
+        0.0,
+        "CR=" + "/".join(f"{c:.1f}" for c in sz_crs),
+    ))
+
+
 def bench_analysis_gate(rows):
     """Invariant checker (lint + wire schema + jaxpr audit) as a gate:
     zero non-baselined findings, or the whole run turns nonzero; emits
@@ -286,6 +315,7 @@ def main() -> None:
     guarded("sharded_latents", bench_sharded_latents, rows, full=full)
     guarded("integrity", bench_integrity_v4, rows, full=full)
     guarded("serve", bench_serve_service, rows, full=full)
+    guarded("families", bench_encoder_families, rows, full=full)
     guarded("analysis", bench_analysis_gate, rows)
     guarded("bench_sz", bench_sz, rows)
 

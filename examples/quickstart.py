@@ -15,7 +15,11 @@ layout, so a time-window query entropy-decodes only the latent shards
 covering the window — O(window), not O(T) (step 5 below) — and carry v4
 integrity digests: every byte a decode reads is CRC-checked, corruption
 raises a structured error, and ``on_error="salvage"`` decodes everything
-that still verifies while quarantining the rest (step 6 below).
+that still verifies while quarantining the rest (step 6 below). The
+encoder architecture itself is pluggable: containers are written in the
+v5 family layout, whose meta stream names the encoder family, so a
+block-attention codec rides the same wire format, guarantee engine, and
+selective decode as the conv default (step 8 below).
 
 Performance expectations (2-core CI-class CPU; see BENCH_throughput.json
 for the currently measured numbers): the 500-step fit below runs on the
@@ -129,9 +133,10 @@ def main():
           "larger-than-memory series is the same API via time chunks: "
           "codec.GBATCCodec(cfg).fit_stream(s3d.S3DChunkLoader(...)).")
 
-    # 6. integrity + salvage: the blob above is container v4 — per-stream
-    #    and per-random-access-unit CRC32 digests ride in an `integrity`
-    #    stream (v1-v3 blobs still decode bit-identically). codec.write /
+    # 6. integrity + salvage: the blob above is container v5 (the v4
+    #    integrity layout + the meta family tag) — per-stream and
+    #    per-random-access-unit CRC32 digests ride in an `integrity`
+    #    stream (v1-v4 blobs still decode bit-identically). codec.write /
     #    codec.read are the atomic file path: tmp + fsync + rename on
     #    write, digest verification on read.
     codec.write(path, blob_on_disk)
@@ -187,6 +192,30 @@ def main():
           + " (see benchmarks/bench_serve.py for QPS/p99 vs the serial "
           "loop).")
     os.remove(path)
+
+    # 8. a second encoder family, same container: `family="attention"`
+    #    swaps the conv block AE for a patch-token block-attention
+    #    autoencoder — the guarantee engine, wire format, selective
+    #    decode, and integrity layer are untouched, so the bound holds
+    #    the same way. The blob's meta stream carries the family tag;
+    #    decompress dispatches on it with no fitted state, as always.
+    attn = codec.GBATCCodec(PipelineConfig(
+        family="attention", arch=(32, 2, 1, 64),  # d_model, heads, depth, mlp
+        ae_steps=300, corr_steps=100,
+    ))
+    attn_blob, attn_rep = attn.compress_report(data, target_nrmse=1e-3)
+    attn_decoded = codec.decompress(attn_blob)
+    attn_per = np.array([metrics.nrmse(data[s], attn_decoded[s])
+                         for s in range(data.shape[0])])
+    assert attn_per.max() <= 1e-3 * (1 + 1e-3), "bound violated!"
+    assert np.array_equal(codec.decompress(attn_blob, species=5),
+                          attn_decoded[5])  # selective decode, same machinery
+    print(f"\nattention family: CR "
+          f"{data.nbytes / len(attn_blob):.1f}x at bound 1e-3 "
+          f"(conv above: {data.nbytes / on_disk:.1f}x), worst species "
+          f"NRMSE {attn_per.max():.2e} — same container, same guarantee "
+          "(see benchmarks/bench_families.py for the CR-vs-bound sweep "
+          "against conv and SZ).")
 
 
 if __name__ == "__main__":

@@ -268,6 +268,22 @@ def _program_specs() -> list:
         build=lambda: (fused_corr, (params, corr_params, lat32)),
     ))
 
+    # attention-family fused decode: the registry seam must hold the same
+    # contract (no callbacks, no d2h) for the second family
+    from repro.models import block_attention as ba
+
+    attn_model = ba.BlockAttentionAE(ba.BlockAttentionConfig(
+        n_species=model.cfg.n_species, block=(2, 4, 4),
+        latent=model.cfg.latent, d_model=8, n_heads=2, depth=1,
+        mlp_hidden=16,
+    ))
+    attn_params = attn_model.init(jax.random.PRNGKey(3))
+    fused_attn = rt_mod.make_fused_decode(attn_model, None)
+    specs.append(ProgramSpec(
+        name="fused_decode_attention",
+        build=lambda: (fused_attn, (attn_params, None, lat32)),
+    ))
+
     # GBATC Pallas kernels (interpret mode — the correctness path on CPU);
     # guarantee math legitimately runs f64 here
     from functools import partial

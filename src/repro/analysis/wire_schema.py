@@ -1,4 +1,4 @@
-"""Wire-schema conformance: a declarative restatement of container v1–v4
+"""Wire-schema conformance: a declarative restatement of container v1–v5
 cross-checked against the live pack/parse constants.
 
 The container's byte layout is implemented twice on purpose:
@@ -44,6 +44,7 @@ class RegionKind(enum.Enum):
 
     HEADER = "header"
     STREAM = "stream:{name}"
+    META_FAMILY = "meta:family"
     LATENT_HEAD = "latent:head"
     LATENT_SHARD = "latent:shard{unit}"
     GUARANTEE_DIR = "guarantee:dir"
@@ -74,7 +75,8 @@ OUTER_RECORDS = (
 )
 
 STREAM_RECORDS = (
-    ("meta_head", "<BBHHHHH", 12),  # flags, dtype, latent, bt, ph, pw, n_conv
+    ("meta5_family", "<B", 1),      # v5: encoder-family tag prefixing meta
+    ("meta_head", "<BBHHHHH", 12),  # flags, dtype, latent, bt, ph, pw, n_arch
     ("meta_shape", "<IIIId", 24),   # S, T, H, W, latent_bin
     ("gdir_head", "<I", 4),         # species count
     ("gdir_rec", "<ddIIQQQ", 48),   # tau, eb, rank, nb, coeff/index/basis len
@@ -88,7 +90,16 @@ STREAM_RECORDS = (
 
 #: version -> (base streams, adds guarantee dir?, per-species streams?,
 #: integrity?). Expressed as an explicit table, one row per version.
-VERSIONS = (1, 2, 3, 4)
+VERSIONS = (1, 2, 3, 4, 5)
+
+#: declarative restatement of the registered encoder families and their
+#: v5 meta-stream wire tags (compare ``repro.codec.families.registered``);
+#: written out literally from the format docs, on purpose — an
+#: unregistered tag or a registry/schema drift must fail statically.
+FAMILY_TAGS = (
+    ("conv", 1),
+    ("attention", 2),
+)
 
 
 def expected_stream_set(version: int, n_species: int,
@@ -104,7 +115,7 @@ def expected_stream_set(version: int, n_species: int,
         names.update(f"guarantee{s}" for s in range(n_species))
     else:
         names.add("guarantee")
-    if version == 4:
+    if version >= 4:
         names.add("integrity")
     return frozenset(names)
 
@@ -121,6 +132,7 @@ def _live_records():
     return {
         "outer_head": container_format._HEAD,
         "outer_len": container_format._LEN,
+        "meta5_family": wire._META_FAMILY,
         "meta_head": wire._META_HEAD,
         "meta_shape": wire._META_SHAPE,
         "gdir_head": wire._GDIR_HEAD,
@@ -203,5 +215,22 @@ def check_conformance() -> list:
     # them — but the part order is wire-visible via the CRC chain)
     if GUARANTEE_PARTS != ("coeff", "index", "basis"):
         finding("guarantee part order drifted from the v4 CRC chain")
+
+    # encoder-family tags: the schema's literal table vs the live
+    # registry — a family registered without a schema row (or a tag
+    # renumbering) is wire drift, caught before any v5 blob exists
+    from repro.codec import families
+
+    live_families = families.registered()
+    if FAMILY_TAGS != live_families:
+        finding(f"family tags: schema {FAMILY_TAGS} != "
+                f"registry {live_families}")
+    for name, tag in FAMILY_TAGS:
+        fam = families.by_tag(tag)
+        if fam is None or fam.name != name:
+            finding(f"family tag {tag} ({name!r}) does not resolve through "
+                    f"families.by_tag")
+    if families.by_tag(0) is not None:
+        finding("family tag 0 is reserved as invalid but resolves")
 
     return out

@@ -11,8 +11,13 @@ decode a container because everything the decoder needs travels in it:
 ==============  ====================================================
 stream          payload
 ==============  ====================================================
-``meta``        geometry, AE structure, shape, latent bin, per-species
-                normalization (min/range) — fixed-layout struct
+``meta``        geometry, encoder structure, shape, latent bin,
+                per-species normalization (min/range) — fixed-layout
+                struct. On v5 (default) a one-byte **encoder-family
+                tag** prefixes it (see :mod:`repro.codec.families`:
+                conv=1, attention=2), selecting which family's decoder
+                the arch words configure; below v5 the family is
+                implicitly conv
 ``latent``      (v3+) time-sharded segmented stream: ONE shared
                 Huffman codebook + a byte-extent directory over fixed
                 block-row shards, each an independently decodable chain
@@ -43,8 +48,9 @@ reusable :class:`PartialDecoder`) parses only the header plus the
 requested streams; on a v3+ container a time-window query is **O(window)
 end to end** — latent shards, guarantee streams, and the fused NN decode
 all touch only the window. Every slice is bitwise equal to slicing the
-full decode; v1–v3 blobs decode through the same entry points unchanged,
-and a full v4 decode equals the v3 decode byte for byte on the same fit.
+full decode; v1–v4 blobs decode through the same entry points unchanged
+(implicitly conv-family), and a conv-family v5 decode equals the v4
+decode of the same fit byte for byte.
 
 Robustness: decoding raises a structured
 :class:`~repro.core.container.ContainerFormatError` (``.stream`` /
@@ -58,11 +64,17 @@ blob end to end without decoding it.
 
 The package layers the codec by responsibility:
 
-* :mod:`repro.codec.format` — wire schemas: meta struct, guarantee
-  directory, v3 latent shard directory, measured ``stream_breakdown``;
+* :mod:`repro.codec.families` — the encoder-family registry: per-family
+  wire tag, arch words, model construction, decode-side param defs, and
+  the fused-decode builder (conv + block attention);
+* :mod:`repro.codec.format` — wire schemas: meta struct (family tag on
+  v5), guarantee directory, v3 latent shard directory, measured
+  ``stream_breakdown``;
 * :mod:`repro.codec.params` — parameter-tree leaf packing;
+* :mod:`repro.codec.artifact` — :class:`CompressedArtifact`, the fitted
+  in-memory compression with its memoized wire streams;
 * :mod:`repro.codec.encode` — the fit-side planner (artifact -> streams,
-  parallel shard packing) and the :class:`GBATCCodec` facade;
+  parallel shard packing);
 * :mod:`repro.codec.cache` — the multi-tier byte-budgeted LRU engine
   (head / latent-shard / guarantee tiers, admission, stats);
 * :mod:`repro.codec.runtime` — cached decode runtimes (models, jitted
@@ -92,6 +104,8 @@ batched dispatches.
 over this package (see :mod:`repro.core.pipeline`).
 """
 
+from repro.codec import families
+from repro.codec.artifact import CompressedArtifact
 from repro.codec.decode import (
     decode_artifact,
     decode_artifact_reference,
@@ -100,7 +114,7 @@ from repro.codec.decode import (
     reconstruct,
     reconstruct_reference,
 )
-from repro.codec.encode import GBATCCodec, encode, read, write
+from repro.codec.encode import encode, read, write
 from repro.codec.format import (
     _GDIR_HEAD,
     _GDIR_REC,
@@ -135,8 +149,23 @@ from repro.codec.runtime import (
 )
 from repro.core.container import ContainerFormatError
 
+
+def __getattr__(name: str):
+    # GBATCCodec owns a fit, so it lives with the orchestration layer in
+    # repro.core.pipeline; resolved lazily (PEP 562) so nothing under
+    # codec/ imports the pipeline at module scope (decode-purity
+    # invariant — repro.analysis enforces it statically).
+    if name == "GBATCCodec":
+        import importlib
+
+        return importlib.import_module("repro.core.pipeline").GBATCCodec
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "GBATCCodec",
+    "CompressedArtifact",
+    "families",
     "ContainerFormatError",
     "DecodeReport",
     "GuaranteeDirectory",

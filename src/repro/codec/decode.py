@@ -28,7 +28,7 @@ from repro.codec.runtime import (
 )
 from repro.core.container import ContainerFormatError
 from repro.core import blocking, correction, entropy, gae
-from repro.core.pipeline import CompressedArtifact, _batched
+from repro.codec.artifact import CompressedArtifact, _batched
 from repro.core.quantization import dequantize
 
 

@@ -1,19 +1,25 @@
-"""Encode planner + codec facade: pipeline artifacts -> container bytes.
+"""Encode planner: pipeline artifacts -> container bytes.
 
 :func:`encode` maps a fitted :class:`CompressedArtifact` onto the wire
-streams of the requested container version — v4 (default) is v3 plus an
-``integrity`` stream of CRC32 digests (per stream + per random-access
-unit + the outer header), v3 shards the latent stream along time and
-packs the per-shard chains in parallel, v2 writes the single-chain
-selective layout, v1 the original per-species nested guarantee
-containers. All four stay writable so round-trip and back-compat gates
-can cover every version; a v4 full decode is bitwise equal to the v3
-decode of the same fit (the digests change no payload byte).
+streams of the requested container version — v5 (default) is v4's
+stream set with the ``meta`` stream prefixed by the encoder-family tag
+(see :mod:`repro.codec.families`; a conv-family v5 blob differs from
+the v4 encoding of the same fit by that one byte only), v4 is v3 plus
+an ``integrity`` stream of CRC32 digests (per stream + per
+random-access unit + the outer header), v3 shards the latent stream
+along time and packs the per-shard chains in parallel, v2 writes the
+single-chain selective layout, v1 the original per-species nested
+guarantee containers. All five stay writable so round-trip and
+back-compat gates can cover every version; non-conv families require
+v5 (the legacy meta layout has no family field).
 
 :func:`write`/:func:`read` are the file-level pair: an atomic
 tmp+fsync+rename publish (the ``train/checkpoint.py`` idiom), so a
 crash mid-write can never leave a half-blob that parses, and a
-digest-verifying read.
+digest-verifying read. The :class:`GBATCCodec` fit/compress facade
+lives with the orchestration layer in :mod:`repro.core.pipeline` —
+this module is decode-purity scoped (nothing under ``codec/`` imports
+the pipeline).
 """
 
 from __future__ import annotations
@@ -22,37 +28,32 @@ import os
 import tempfile
 from typing import Optional
 
-import numpy as np
-
+from repro.codec import families
 from repro.codec import format as wire
-from repro.codec.decode import decompress as _decompress
+from repro.codec.artifact import CompressedArtifact
 from repro.codec.params import pack_artifact_params
 from repro.core import container as container_format
 from repro.core.container import ContainerWriter
-from repro.core.pipeline import (
-    CompressedArtifact,
-    CompressionReport,
-    GBATCPipeline,
-    PipelineConfig,
-)
 
 
 def encode(artifact: CompressedArtifact,
-           version: int = container_format.FORMAT_VERSION_INTEGRITY,
+           version: int = container_format.FORMAT_VERSION_FAMILY,
            *, shard_tgroups: Optional[int] = None) -> bytes:
     """Serialize a :class:`CompressedArtifact` into a container blob.
 
-    ``version`` selects the layout: 4 (default) writes the time-sharded
-    latent stream + combined guarantee stream + integrity digests; 3 the
-    same without digests; 2 the single-chain latent + combined
-    guarantee; 1 the original per-species nested containers (all
-    retained byte-stable so back-compat round-trips stay testable).
-    ``shard_tgroups`` (v3+) sets the shard size in time block-groups
-    (``bt`` frames each); the default of
-    ``format.DEFAULT_SHARD_TGROUPS`` gives the finest window a block-row
-    decode can address. Oversized values clamp to one shard.
+    ``version`` selects the layout: 5 (default) prefixes the meta
+    stream with the encoder-family tag (required for non-conv
+    families); 4 writes the time-sharded latent stream + combined
+    guarantee stream + integrity digests; 3 the same without digests;
+    2 the single-chain latent + combined guarantee; 1 the original
+    per-species nested containers (all retained byte-stable so
+    back-compat round-trips stay testable). ``shard_tgroups`` (v3+)
+    sets the shard size in time block-groups (``bt`` frames each); the
+    default of ``format.DEFAULT_SHARD_TGROUPS`` gives the finest
+    window a block-row decode can address. Oversized values clamp to
+    one shard.
     """
-    cfg = artifact.cfg
+    cfg = families.structural(artifact.cfg)
     if version not in container_format.SUPPORTED_VERSIONS:
         raise ValueError(f"unknown container version {version}")
     if (shard_tgroups is not None
@@ -62,7 +63,7 @@ def encode(artifact: CompressedArtifact,
             f"{container_format.FORMAT_VERSION_SHARDED}+ only"
         )
     w = ContainerWriter(version=version)
-    w.add("meta", wire._pack_meta(artifact))
+    w.add("meta", wire._pack_meta(artifact, version))
     if version >= container_format.FORMAT_VERSION_SHARDED:
         geom = cfg.geometry
         _, _, h, wd = artifact.shape
@@ -144,7 +145,7 @@ def write(path, blob: bytes) -> None:
 
 def read(path, *, verify: bool = True) -> bytes:
     """Read container bytes from ``path``; ``verify=True`` (default)
-    digest-checks every payload byte on v4 blobs (structural parse only
+    digest-checks every payload byte on v4+ blobs (structural parse only
     below v4) before returning, raising
     :class:`~repro.core.container.ContainerFormatError` on corruption."""
     with open(os.fspath(path), "rb") as f:
@@ -155,124 +156,3 @@ def read(path, *, verify: bool = True) -> bytes:
         verify_blob(blob)
     return blob
 
-
-class GBATCCodec:
-    """Bytes-in/bytes-out GBATC (or GBA, via ``cfg.use_correction=False``).
-
-    Usage::
-
-        codec = GBATCCodec(PipelineConfig(...))
-        codec.fit(data)                       # train AE (+ correction) once
-        blob = codec.compress(target_nrmse=1e-3)   # -> container bytes
-        field = repro.codec.decompress(blob)       # anywhere, no codec
-
-    ``compress(data=...)`` fits on the given data first (refitting if the
-    codec was already fitted), so one-shot compression is a single call;
-    ``fit_stream(loader)`` consumes time-chunked input without ever
-    materializing the full field (see
-    :meth:`repro.core.pipeline.GBATCPipeline.fit_stream`). Error-bound
-    sweeps against one fitted model reuse the pipeline's cached
-    tau-independent guarantee state.
-    """
-
-    def __init__(self, cfg: Optional[PipelineConfig] = None,
-                 n_species: Optional[int] = None):
-        self.cfg = cfg if cfg is not None else PipelineConfig()
-        self._pipe: Optional[GBATCPipeline] = (
-            GBATCPipeline(self.cfg, n_species) if n_species is not None else None
-        )
-
-    @property
-    def pipeline(self) -> Optional[GBATCPipeline]:
-        """The underlying fit/orchestration layer (None before first fit)."""
-        return self._pipe
-
-    @property
-    def fitted(self) -> bool:
-        return self._pipe is not None and self._pipe._latents is not None
-
-    def fit(self, data: np.ndarray, verbose: bool = False) -> "GBATCCodec":
-        data = np.asarray(data)
-        if data.ndim != 4:
-            raise ValueError(
-                f"expected (S, T, H, W) species data, got "
-                f"{data.ndim}-d {type(data).__name__} of shape {data.shape}"
-                " (note: compress(target_nrmse=...) is keyword-only via the"
-                " data-first signature)"
-            )
-        if self._pipe is None or self._pipe.n_species != data.shape[0]:
-            self._pipe = GBATCPipeline(self.cfg, n_species=data.shape[0])
-        self._pipe.fit(data, verbose=verbose)
-        return self
-
-    def fit_stream(self, loader, verbose: bool = False, *,
-                   loader_retries: int = 2, retry_backoff: float = 0.1,
-                   _sleep=None) -> "GBATCCodec":
-        """Fit from time-chunked input without materializing the field.
-
-        ``loader`` must expose ``shape`` — the full (S, T, H, W) — and a
-        re-iterable ``chunks()`` yielding consecutive (S, Tc, H, W) time
-        chunks (each Tc divisible by the block geometry's ``bt``), e.g.
-        :class:`repro.data.s3d.S3DChunkLoader`. The fit is bit-identical
-        to ``fit(concatenate(chunks, axis=1))``.
-
-        Transient loader faults (I/O errors mid-iteration) restart the
-        failing pass from its beginning with exponential backoff — up to
-        ``loader_retries`` restarts per pass, ``retry_backoff`` seconds
-        doubling per attempt — and the result stays bit-identical to a
-        clean run (each pass is a pure function of the re-iterated
-        chunks). Shape/validation errors are never retried.
-        """
-        s = int(loader.shape[0])
-        if self._pipe is None or self._pipe.n_species != s:
-            self._pipe = GBATCPipeline(self.cfg, n_species=s)
-        self._pipe.fit_stream(
-            loader, verbose=verbose, loader_retries=loader_retries,
-            retry_backoff=retry_backoff, _sleep=_sleep,
-        )
-        return self
-
-    def compress(self, data: Optional[np.ndarray] = None,
-                 target_nrmse: float = 1e-3, **kw) -> bytes:
-        """Compress to container bytes; pass ``data`` to (re)fit first."""
-        blob, _ = self.compress_report(data, target_nrmse=target_nrmse, **kw)
-        return blob
-
-    def compress_report(
-        self, data: Optional[np.ndarray] = None,
-        target_nrmse: float = 1e-3, **kw,
-    ) -> tuple[bytes, CompressionReport]:
-        """Like :meth:`compress`, also returning the quality report."""
-        if data is not None:
-            self.fit(data)
-        if not self.fitted:
-            raise RuntimeError("codec not fitted: pass data or call fit() first")
-        rep = self._pipe.compress(target_nrmse=target_nrmse, **kw)
-        return rep.artifact.to_bytes(), rep
-
-    def write(self, path, data: Optional[np.ndarray] = None,
-              target_nrmse: float = 1e-3, **kw) -> bytes:
-        """Compress and atomically publish the container at ``path``
-        (tmp + fsync + rename — a crash can never leave a half-blob).
-        Pass ``data`` to (re)fit first. Returns the written bytes."""
-        blob = self.compress(data, target_nrmse=target_nrmse, **kw)
-        write(path, blob)
-        return blob
-
-    @staticmethod
-    def read(path, *, verify: bool = True) -> bytes:
-        """Read (and by default digest-verify) a container file; see
-        module :func:`read`."""
-        return read(path, verify=verify)
-
-    @staticmethod
-    def decompress(blob: bytes, *, species=None, time_range=None,
-                   on_error: str = "raise"):
-        """Decode a container blob (stateless; see module :func:`decompress`).
-
-        ``species``/``time_range`` select a slice to decode
-        randomly-accessed, bitwise equal to slicing the full decode;
-        ``on_error="salvage"`` quarantines corruption and returns
-        ``(field, DecodeReport)``."""
-        return _decompress(blob, species=species, time_range=time_range,
-                           on_error=on_error)

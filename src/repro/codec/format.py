@@ -58,16 +58,20 @@ from typing import Optional
 
 import numpy as np
 
+from repro.codec import families
 from repro.core import blocking, entropy
 from repro.core import container as container_format
 from repro.core.container import ContainerFormatError, ContainerReader
-from repro.core.pipeline import PipelineConfig
 
 _FLAG_CORRECTION = 1
 
-# flags, param_dtype_bytes, latent, bt, ph, pw, n_conv
+# flags, param_dtype_bytes, latent, bt, ph, pw, n_arch
 _META_HEAD = struct.Struct("<BBHHHHH")
 _META_SHAPE = struct.Struct("<IIIId")  # S, T, H, W, latent_bin
+# container v5 prefixes the legacy meta body with ONE family-tag byte
+# (see repro.codec.families); a conv-family v5 meta body is therefore
+# byte-identical to the v4 meta of the same fit
+_META_FAMILY = struct.Struct("<B")
 
 
 def expected_stream_set(version: int, n_species: int,
@@ -92,31 +96,43 @@ def expected_stream_set(version: int, n_species: int,
 # ---------------------------------------------------------------------------
 # meta stream
 # ---------------------------------------------------------------------------
-def _pack_meta(artifact) -> bytes:
-    cfg = artifact.cfg
-    geom = cfg.geometry
+def _pack_meta(artifact, version: int = container_format.FORMAT_VERSION
+               ) -> bytes:
+    scfg = families.structural(artifact.cfg)
+    fam = families.get(scfg.family)
+    geom = scfg.geometry
+    if (version < container_format.FORMAT_VERSION_FAMILY
+            and fam.name != "conv"):
+        raise ValueError(
+            f"container v{version} predates encoder families: only the "
+            f"conv family is representable (artifact is {fam.name!r}; "
+            f"use version {container_format.FORMAT_VERSION_FAMILY}+)"
+        )
     flags = _FLAG_CORRECTION if artifact.corr_params is not None else 0
     u16_fields = {
-        "latent": cfg.latent,
+        "latent": scfg.latent,
         "bt": geom.bt,
         "ph": geom.ph,
         "pw": geom.pw,
-        **{f"conv_channels[{i}]": c for i, c in enumerate(cfg.conv_channels)},
+        **{f"arch[{i}]": c for i, c in enumerate(scfg.arch)},
     }
     bad = {k: v for k, v in u16_fields.items() if not 0 < v <= 0xFFFF}
     if bad:
         raise ValueError(f"meta fields not representable as u16: {bad}")
-    parts = [
+    parts = []
+    if version >= container_format.FORMAT_VERSION_FAMILY:
+        parts.append(_META_FAMILY.pack(fam.tag))
+    parts += [
         _META_HEAD.pack(
             flags,
-            cfg.param_dtype_bytes,
-            cfg.latent,
+            scfg.param_dtype_bytes,
+            scfg.latent,
             geom.bt,
             geom.ph,
             geom.pw,
-            len(cfg.conv_channels),
+            len(scfg.arch),
         ),
-        np.asarray(cfg.conv_channels, dtype="<u2").tobytes(),
+        np.asarray(scfg.arch, dtype="<u2").tobytes(),
         _META_SHAPE.pack(*artifact.shape, artifact.latent_bin),
         np.ascontiguousarray(artifact.norm_min.astype("<f4")).tobytes(),
         np.ascontiguousarray(artifact.norm_range.astype("<f4")).tobytes(),
@@ -124,23 +140,38 @@ def _pack_meta(artifact) -> bytes:
     return b"".join(parts)
 
 
-def _unpack_meta(buf: bytes):
-    if len(buf) < _META_HEAD.size:
+def _unpack_meta(buf: bytes,
+                 version: int = container_format.FORMAT_VERSION):
+    base = 0
+    fam = families.CONV  # below v5 the family is implicit
+    if version >= container_format.FORMAT_VERSION_FAMILY:
+        if len(buf) < _META_FAMILY.size:
+            raise ContainerFormatError("meta stream truncated", stream="meta")
+        (tag,) = _META_FAMILY.unpack_from(buf, 0)
+        fam = families.by_tag(tag)
+        if fam is None:
+            raise ContainerFormatError(
+                f"unknown encoder family tag {tag} "
+                f"(registered: {families.registered()})",
+                stream="meta", offset=0,
+            )
+        base = _META_FAMILY.size
+    if len(buf) < base + _META_HEAD.size:
         raise ContainerFormatError("meta stream truncated", stream="meta")
-    flags, pdb, latent, bt, ph, pw, n_conv = _META_HEAD.unpack_from(buf, 0)
+    flags, pdb, latent, bt, ph, pw, n_arch = _META_HEAD.unpack_from(buf, base)
     if flags & ~_FLAG_CORRECTION:
         # unknown flag bits mean a newer writer (or corruption) — refuse
         # rather than decode under old-flag semantics
         raise ContainerFormatError(
-            f"unknown meta flags 0x{flags:02x}", stream="meta", offset=0
+            f"unknown meta flags 0x{flags:02x}", stream="meta", offset=base
         )
-    off = _META_HEAD.size
-    if len(buf) < off + 2 * n_conv + _META_SHAPE.size:
+    off = base + _META_HEAD.size
+    if len(buf) < off + 2 * n_arch + _META_SHAPE.size:
         raise ContainerFormatError("meta stream truncated", stream="meta")
-    conv = tuple(
-        int(c) for c in np.frombuffer(buf, dtype="<u2", count=n_conv, offset=off)
+    arch = tuple(
+        int(c) for c in np.frombuffer(buf, dtype="<u2", count=n_arch, offset=off)
     )
-    off += 2 * n_conv
+    off += 2 * n_arch
     s, t, h, w, latent_bin = _META_SHAPE.unpack_from(buf, off)
     off += _META_SHAPE.size
     if len(buf) != off + 8 * s:
@@ -153,11 +184,17 @@ def _unpack_meta(buf: bytes):
         raise ContainerFormatError(
             f"bad param dtype byte {pdb} (expected 2 or 4)", stream="meta"
         )
-    if min(bt, ph, pw, latent, n_conv, s, t, h, w) < 1 or min(conv) < 1:
+    if min(bt, ph, pw, latent, n_arch, s, t, h, w) < 1 or min(arch) < 1:
         raise ContainerFormatError(
             f"meta stream carries degenerate structure: geometry "
-            f"({bt},{ph},{pw}), latent {latent}, conv {conv}, shape "
+            f"({bt},{ph},{pw}), latent {latent}, arch {arch}, shape "
             f"({s},{t},{h},{w})",
+            stream="meta",
+        )
+    arch_err = fam.validate_arch(arch)
+    if arch_err:
+        raise ContainerFormatError(
+            f"meta stream carries bad {fam.name} arch: {arch_err}",
             stream="meta",
         )
     norm_min = np.frombuffer(buf, dtype="<f4", count=s, offset=off).copy()
@@ -174,10 +211,11 @@ def _unpack_meta(buf: bytes):
         raise ContainerFormatError(
             "non-finite or non-positive normalization", stream="meta"
         )
-    cfg = PipelineConfig(
+    cfg = families.StructuralConfig(
+        family=fam.name,
         geometry=blocking.BlockGeometry(bt=bt, ph=ph, pw=pw),
         latent=latent,
-        conv_channels=conv,
+        arch=arch,
         use_correction=bool(flags & _FLAG_CORRECTION),
         param_dtype_bytes=pdb,
     )

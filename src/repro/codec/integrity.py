@@ -185,7 +185,7 @@ def salvage_decompress(blob: bytes, *, species=None, time_range=None):
         # shared NN/latent state is gone: report shape from the (already
         # validated) meta stream and return an all-NaN field
         r = ContainerReader(blob)
-        cfg, shape, _, _, _ = wire._unpack_meta(r["meta"])
+        cfg, shape, _, _, _ = wire._unpack_meta(r["meta"], version=r.version)
         s, t, h, w = shape
         idx, squeeze = _normalize_species(species, s)
         t0, t1 = _normalize_time_range(time_range, t)

@@ -12,7 +12,6 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import autoencoder as ae
 from repro.core.container import ContainerFormatError
 from repro.core.quantization import param_storage_dtype
 from repro.nn import module as nn_module
@@ -65,7 +64,10 @@ def unpack_params(buf: bytes, defs, param_dtype_bytes: int):
     return out
 
 
-def _decoder_defs(model: ae.BlockAutoencoder):
+def _decoder_defs(model):
+    # family-agnostic: every registered family keys decode-side defs with
+    # a "dec" prefix (see repro.codec.families._decoder_defs, the
+    # registry-side twin the runtime dispatches through)
     return {k: v for k, v in model.defs.items() if k.startswith("dec")}
 
 

@@ -30,14 +30,14 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.codec import cache as tier_cache
+from repro.codec import families
 from repro.codec import format as wire
+from repro.codec.families import make_fused_decode  # noqa: F401  (canonical home moved; re-exported for the public codec API)
 from repro.codec.latents import _ChainLatents, _ShardedLatents
-from repro.codec.params import _decoder_defs, unpack_params
-from repro.core import autoencoder as ae
+from repro.codec.params import unpack_params
 from repro.core import correction, entropy, gae
 from repro.core import container as container_format
 from repro.core.container import ContainerFormatError, ContainerReader
-from repro.core.pipeline import PipelineConfig
 from repro.core.quantization import dequantize
 
 
@@ -46,7 +46,8 @@ from repro.core.quantization import dequantize
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class _DecodeRuntime:
-    model: ae.BlockAutoencoder
+    family: families.EncoderFamily
+    model: Any
     corr_net: Optional[correction.TensorCorrectionNetwork]
     jit_decode: Any
     jit_corr: Any
@@ -67,55 +68,30 @@ _RUNTIMES_MAX = 8
 _RUNTIMES_LOCK = threading.RLock()
 
 
-def _runtime_key(cfg: PipelineConfig, n_species: int, has_corr: bool) -> tuple:
-    geom = cfg.geometry
+def _runtime_key(cfg: Any, n_species: int, has_corr: bool) -> tuple:
+    """Structural signature a decode runtime is cached under.
+
+    ``cfg`` is anything :func:`families.structural` accepts; the family
+    name leads the key, so two families sharing geometry/latent/arch can
+    never alias one runtime (or each other's jitted programs)."""
+    scfg = families.structural(cfg)
+    geom = scfg.geometry
     return (
+        scfg.family,
         n_species,
         (geom.bt, geom.ph, geom.pw),
-        cfg.latent,
-        tuple(cfg.conv_channels),
+        scfg.latent,
+        tuple(scfg.arch),
         has_corr,
     )
 
 
-def make_fused_decode(model: ae.BlockAutoencoder,
-                      corr_net: Optional[correction.TensorCorrectionNetwork]):
-    """Traceable latents -> corrected (S, NB, D) block vectors.
-
-    The whole NN decode — AE decoder, pointwise tensor correction, and the
-    blocks->vectors layout change — as one function of device arrays, so a
-    single jit dispatch replaces chunked host round-trips. All reshuffles
-    are pure transposes; per-element arithmetic is identical to the staged
-    path (bit-identity asserted in tests and the benchmark).
-    """
-    s = model.cfg.n_species
-
-    def fused(dec_params, corr_params, lat):
-        x = model.decode(dec_params, lat)  # (NB, S, bt, ph, pw)
-        nb = x.shape[0]
-        if corr_net is not None:
-            vec = x.reshape(nb, s, -1).transpose(0, 2, 1).reshape(-1, s)
-            vec = corr_net(corr_params, vec)
-            x = vec.reshape(nb, -1, s).transpose(0, 2, 1).reshape(x.shape)
-        return x.reshape(nb, s, -1).transpose(1, 0, 2)  # (S, NB, D)
-
-    return fused
-
-
-def _build_runtime(cfg: PipelineConfig, n_species: int, has_corr: bool,
-                   conv_impl: str) -> _DecodeRuntime:
+def _build_runtime(scfg: families.StructuralConfig, n_species: int,
+                   has_corr: bool, backend: str) -> _DecodeRuntime:
     import jax
 
-    geom = cfg.geometry
-    model = ae.BlockAutoencoder(
-        ae.AEConfig(
-            n_species=n_species,
-            block=(geom.bt, geom.ph, geom.pw),
-            latent=cfg.latent,
-            conv_channels=cfg.conv_channels,
-            conv_impl=conv_impl,
-        )
-    )
+    fam = families.get(scfg.family)
+    model = fam.build_model(scfg, n_species, backend)
     corr_net = (
         correction.TensorCorrectionNetwork(
             correction.CorrectionConfig(n_species=n_species)
@@ -124,35 +100,37 @@ def _build_runtime(cfg: PipelineConfig, n_species: int, has_corr: bool,
         else None
     )
     return _DecodeRuntime(
+        family=fam,
         model=model,
         corr_net=corr_net,
         jit_decode=jax.jit(model.decode),
         jit_corr=jax.jit(corr_net.__call__) if corr_net is not None else None,
-        jit_fused=jax.jit(make_fused_decode(model, corr_net)),
+        jit_fused=jax.jit(fam.make_fused(model, corr_net)),
         table_cache=entropy.DecodeTableCache(),
     )
 
 
-def _cached_runtime(cache: dict, cfg: PipelineConfig, n_species: int,
-                    has_corr: bool, conv_impl: str) -> _DecodeRuntime:
-    key = _runtime_key(cfg, n_species, has_corr)
+def _cached_runtime(cache: dict, cfg: Any, n_species: int,
+                    has_corr: bool, backend: str) -> _DecodeRuntime:
+    scfg = families.structural(cfg)
+    key = _runtime_key(scfg, n_species, has_corr)
     with _RUNTIMES_LOCK:
         hit = cache.get(key)
         if hit is not None:
             return hit
-        rt = _build_runtime(cfg, n_species, has_corr, conv_impl)
+        rt = _build_runtime(scfg, n_species, has_corr, backend)
         while len(cache) >= _RUNTIMES_MAX:
             cache.pop(next(iter(cache)))
         cache[key] = rt
         return rt
 
 
-def _runtime(cfg: PipelineConfig, n_species: int,
+def _runtime(cfg: Any, n_species: int,
              has_corr: bool) -> _DecodeRuntime:
     return _cached_runtime(_RUNTIMES, cfg, n_species, has_corr, "2d")
 
 
-def _runtime_reference(cfg: PipelineConfig, n_species: int,
+def _runtime_reference(cfg: Any, n_species: int,
                        has_corr: bool) -> _DecodeRuntime:
     """Runtime for the retained pre-change decode path: XLA conv impl,
     staged host-chunked orchestration (see ``reconstruct_reference``)."""
@@ -168,7 +146,7 @@ class _DecodedHead:
 
     reader: ContainerReader
     blob: bytes
-    cfg: PipelineConfig
+    cfg: families.StructuralConfig
     shape: tuple[int, int, int, int]
     nb: int
     latent_bin: float
@@ -258,7 +236,9 @@ def _decode_head(blob: bytes, *, huffman=None,
         integ = wire.IntegrityDirectory(r["integrity"])
         integ.verify_outer(r._blob, r.header_bytes)
         integ.verify_stream("meta", r["meta"])
-    cfg, shape, latent_bin, norm_min, norm_range = wire._unpack_meta(r["meta"])
+    cfg, shape, latent_bin, norm_min, norm_range = wire._unpack_meta(
+        r["meta"], version=r.version
+    )
     if cfg.use_correction != ("correction" in r):
         # a flipped correction flag must not silently decode without the
         # shipped network (or with a phantom one)
@@ -321,7 +301,7 @@ def _decode_head(blob: bytes, *, huffman=None,
                 f"{name} stream: {e}", stream=name, offset=e.offset
             ) from e
 
-    ae_params = _params("decoder", _decoder_defs(rt.model))
+    ae_params = _params("decoder", rt.family.decoder_defs(rt.model))
     corr_params = None
     if cfg.use_correction:
         corr_params = _params("correction", rt.corr_net.defs)

@@ -20,7 +20,7 @@ stores each species' guarantee artifact that way), and the framing overhead
 of every level is measurable, so "metadata bytes" in the breakdown is a
 real number rather than a ``8*S + 64`` guess.
 
-Four versions share this byte layout; the version field declares the
+Five versions share this byte layout; the version field declares the
 *schema of the stream set* so readers pick the right interpretation:
 
 * version 1 — the original GBATC layout: one nested ``guarantee<s>``
@@ -38,9 +38,15 @@ Four versions share this byte layout; the version field declares the
   digests matching the random-access units (one per latent shard, one per
   species' guarantee byte-extent), plus a digest of this outer header —
   so a decoder verifies exactly the bytes it reads and no more (see
-  ``repro.codec.format`` for the wire layout).
+  ``repro.codec.format`` for the wire layout);
+* version 5 — the encoder-family layout: v4's stream set, with the
+  ``meta`` stream prefixed by a one-byte family tag (see
+  ``repro.codec.families``) selecting which encoder family's decoder the
+  remaining meta bytes configure. Below v5 the family is implicitly the
+  conv block autoencoder; a conv-family v5 blob's payload streams are
+  byte-identical to the v4 encoding of the same fit apart from that tag.
 
-:class:`ContainerReader` accepts all four and exposes ``.version``;
+:class:`ContainerReader` accepts all five and exposes ``.version``;
 anything else raises :class:`ContainerFormatError`.
 """
 
@@ -53,9 +59,10 @@ FORMAT_VERSION = 1
 FORMAT_VERSION_SELECTIVE = 2
 FORMAT_VERSION_SHARDED = 3
 FORMAT_VERSION_INTEGRITY = 4
+FORMAT_VERSION_FAMILY = 5
 SUPPORTED_VERSIONS = (
     FORMAT_VERSION, FORMAT_VERSION_SELECTIVE, FORMAT_VERSION_SHARDED,
-    FORMAT_VERSION_INTEGRITY,
+    FORMAT_VERSION_INTEGRITY, FORMAT_VERSION_FAMILY,
 )
 
 _HEAD = struct.Struct("<4sHH")  # magic, version, n_streams

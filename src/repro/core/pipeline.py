@@ -58,11 +58,14 @@ import dataclasses
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autoencoder as ae
-from repro.core import blocking, correction, entropy, gae, metrics
+from repro.codec.artifact import (  # noqa: F401  (canonical home moved;
+    CompressedArtifact,  # re-exported so pipeline-layer imports keep working)
+    _batched,
+)
+from repro.codec.families import get as _family, structural as _structural
+from repro.core import blocking, correction, gae, metrics
 from repro.core.quantization import dequantize, quantize, quantize_params
 
 
@@ -80,100 +83,13 @@ class PipelineConfig:
     # paper stores networks fp32; fp16 halves the fixed overhead with
     # negligible NRMSE impact (beyond-paper option, default off)
     param_dtype_bytes: int = 4
-
-
-@dataclasses.dataclass
-class CompressedArtifact:
-    latent_q: np.ndarray  # (NB, latent) int64
-    latent_bin: float
-    ae_params: Any
-    corr_params: Optional[Any]
-    species_guarantees: list[gae.GuaranteeArtifact]
-    norm_min: np.ndarray  # (S,)
-    norm_range: np.ndarray  # (S,)
-    shape: tuple[int, int, int, int]
-    cfg: PipelineConfig
-    # memoized wire streams (immutable once built): the Huffman'd latent
-    # payload, pre-packed (decoder, correction) parameter streams shared
-    # across a sweep's artifacts, and the full serialized container
-    _latent_blob: Optional[bytes] = dataclasses.field(
-        default=None, repr=False, compare=False
-    )
-    _param_streams: Optional[tuple] = dataclasses.field(
-        default=None, repr=False, compare=False
-    )
-    _wire: Optional[bytes] = dataclasses.field(
-        default=None, repr=False, compare=False
-    )
-    # shared latent wire memo: a target_nrmse sweep emits many artifacts
-    # off one fitted model with bit-identical latents, so the pipeline
-    # hands every artifact of a sweep key the same dict and the entropy
-    # pack (single chain or sharded) is paid once per layout, not per blob
-    _latent_memo: Optional[dict] = dataclasses.field(
-        default=None, repr=False, compare=False
-    )
-
-    def latent_blob(self) -> bytes:
-        """Single sequential Huffman chain (the v1/v2 ``latent`` stream)."""
-        if self._latent_blob is None:
-            memo = self._latent_memo
-            hit = memo.get("chain") if memo is not None else None
-            if hit is None:
-                hit = entropy.huffman_encode(self.latent_q)
-                if memo is not None:
-                    memo["chain"] = hit
-            self._latent_blob = hit
-        return self._latent_blob
-
-    def sharded_latent_stream(self, shard_rows: int) -> bytes:
-        """Time-sharded segmented stream (the v3 ``latent`` stream),
-        memoized per shard size across a sweep's artifacts."""
-        memo = self._latent_memo
-        # the packer clamps shard_rows to the row count, so clamp the key
-        # too: every oversized request is the same single-shard stream
-        shard_rows = min(max(int(shard_rows), 1), self.latent_q.shape[0])
-        key = ("sharded", shard_rows)
-        if memo is not None and key in memo:
-            return memo[key]
-        from repro import codec
-
-        stream = codec.pack_latent_stream(self.latent_q, shard_rows)
-        if memo is not None:
-            memo[key] = stream
-        return stream
-
-    def to_bytes(self) -> bytes:
-        """Serialize to the self-describing container (see repro.codec)."""
-        if self._wire is None:
-            from repro import codec
-
-            self._wire = codec.encode(self)
-        return self._wire
-
-    @classmethod
-    def from_bytes(cls, blob: bytes) -> "CompressedArtifact":
-        """Rebuild an artifact from container bytes (repro.codec wire format)."""
-        from repro import codec
-
-        return codec.decode_artifact(blob)
-
-    def byte_breakdown(
-        self,
-        model: Optional[ae.BlockAutoencoder] = None,
-        corr_net: Optional[correction.TensorCorrectionNetwork] = None,
-    ) -> dict:
-        """Measured per-stream byte accounting of the serialized container.
-
-        A view over the container's stream table — every entry is the real
-        on-wire length and ``breakdown["total"] == len(self.to_bytes())``
-        exactly. ``model``/``corr_net`` are accepted for backward
-        compatibility but unused: the container carries the parameter
-        streams itself.
-        """
-        del model, corr_net
-        from repro import codec
-
-        return codec.stream_breakdown(self.to_bytes())
+    # encoder family (see repro.codec.families): "conv" is the paper's
+    # block autoencoder; "attention" the patch-token block attention
+    # pair. ``arch`` carries the family's wire arch words — for conv it
+    # defaults to ``conv_channels`` (kept as the historical spelling),
+    # for attention to families.DEFAULT_ATTENTION_ARCH
+    family: str = "conv"
+    arch: Optional[tuple[int, ...]] = None
 
 
 @dataclasses.dataclass
@@ -187,20 +103,21 @@ class CompressionReport:
 
 
 class GBATCPipeline:
-    """GBATC when cfg.use_correction else GBA."""
+    """GBATC when cfg.use_correction else GBA.
+
+    Model-shaped decisions dispatch through the encoder-family registry
+    (:mod:`repro.codec.families`): ``cfg.family`` picks the handle, the
+    normalized :class:`~repro.codec.families.StructuralConfig` builds the
+    model, and ``family.fit`` trains it — conv by default, so existing
+    configs behave exactly as before.
+    """
 
     def __init__(self, cfg: PipelineConfig, n_species: int):
         self.cfg = cfg
         self.n_species = n_species
-        block = (cfg.geometry.bt, cfg.geometry.ph, cfg.geometry.pw)
-        self.model = ae.BlockAutoencoder(
-            ae.AEConfig(
-                n_species=n_species,
-                block=block,
-                latent=cfg.latent,
-                conv_channels=cfg.conv_channels,
-            )
-        )
+        self.family = _family(cfg.family)
+        self.scfg = _structural(cfg)
+        self.model = self.family.build_model(self.scfg, n_species, "2d")
         self.corr_net = (
             correction.TensorCorrectionNetwork(
                 correction.CorrectionConfig(n_species=n_species)
@@ -367,7 +284,7 @@ class GBATCPipeline:
                     data: Optional[np.ndarray], verbose: bool) -> dict:
         """Shared fit body over normalized blocks (full or streamed input)."""
         cfg = self.cfg
-        params, losses = ae.fit(
+        params, losses = self.family.fit(
             self.model,
             blocks,
             steps=cfg.ae_steps,
@@ -557,18 +474,22 @@ class GBATCPipeline:
         artifact that only differs in correction presence decodes fine, so
         GBA reports off a shared encoder keep working.
         """
-        a, p = artifact.cfg, self.cfg
-        if (
-            a.geometry != p.geometry
-            or a.latent != p.latent
-            or tuple(a.conv_channels) != tuple(p.conv_channels)
-            or len(artifact.norm_min) != self.n_species
-        ):
+        # family-aware structural identity; correction presence and param
+        # storage width may legitimately differ (GBA reports off a shared
+        # encoder, fp16-stored params), so neutralize those fields
+        a = dataclasses.replace(
+            _structural(artifact.cfg), use_correction=False,
+            param_dtype_bytes=4,
+        )
+        p = dataclasses.replace(
+            self.scfg, use_correction=False, param_dtype_bytes=4
+        )
+        if a != p or len(artifact.norm_min) != self.n_species:
             raise ValueError(
-                f"artifact structure (geometry={a.geometry}, latent={a.latent}, "
-                f"conv={tuple(a.conv_channels)}, S={len(artifact.norm_min)}) does "
-                f"not match this pipeline (geometry={p.geometry}, "
-                f"latent={p.latent}, conv={tuple(p.conv_channels)}, "
+                f"artifact structure (family={a.family}, geometry={a.geometry}, "
+                f"latent={a.latent}, arch={a.arch}, S={len(artifact.norm_min)}) "
+                f"does not match this pipeline (family={p.family}, "
+                f"geometry={p.geometry}, latent={p.latent}, arch={p.arch}, "
                 f"S={self.n_species}); use repro.codec.decompress / "
                 f"codec.reconstruct, which derive everything from the artifact"
             )
@@ -577,27 +498,137 @@ class GBATCPipeline:
         return codec.reconstruct(artifact)
 
 
-def _batched(fn, params, arrays, batch: int = 512):
-    """Apply an already-jitted (params, x) callable over leading-axis chunks.
 
-    Chunk shapes are kept fixed: a ragged last chunk is padded (edge-row
-    repeat) to the full batch size and the padding sliced off the result.
-    The seed dispatched the remainder at its own shape, re-tracing and
-    re-compiling the callable once per distinct tail length — the
-    trace-count regression test pins this to one trace per leading shape.
+class GBATCCodec:
+    """Bytes-in/bytes-out GBATC (or GBA, via ``cfg.use_correction=False``).
+
+    Usage::
+
+        codec = GBATCCodec(PipelineConfig(...))
+        codec.fit(data)                       # train AE (+ correction) once
+        blob = codec.compress(target_nrmse=1e-3)   # -> container bytes
+        field = repro.codec.decompress(blob)       # anywhere, no codec
+
+    ``compress(data=...)`` fits on the given data first (refitting if the
+    codec was already fitted), so one-shot compression is a single call;
+    ``fit_stream(loader)`` consumes time-chunked input without ever
+    materializing the full field (see :meth:`GBATCPipeline.fit_stream`).
+    Error-bound sweeps against one fitted model reuse the pipeline's
+    cached tau-independent guarantee state. ``PipelineConfig(family=
+    "attention")`` compresses through the block attention family instead
+    of the conv AE — same container, same guarantee engine (see
+    :mod:`repro.codec.families`).
+
+    The class lives with the orchestration layer (it owns a fit), and
+    ``repro.codec.GBATCCodec`` re-exports it; the decode side of the
+    codec package never imports this module.
     """
-    n = arrays.shape[0]
-    if n <= batch:
-        return np.asarray(fn(params, jnp.asarray(arrays)))
-    outs = []
-    for i in range(0, n, batch):
-        chunk = arrays[i : i + batch]
-        pad = batch - chunk.shape[0]
-        if pad:
-            chunk = np.concatenate(
-                [np.asarray(chunk),
-                 np.repeat(np.asarray(chunk[-1:]), pad, axis=0)]
+
+    def __init__(self, cfg: Optional[PipelineConfig] = None,
+                 n_species: Optional[int] = None):
+        self.cfg = cfg if cfg is not None else PipelineConfig()
+        self._pipe: Optional[GBATCPipeline] = (
+            GBATCPipeline(self.cfg, n_species) if n_species is not None else None
+        )
+
+    @property
+    def pipeline(self) -> Optional[GBATCPipeline]:
+        """The underlying fit/orchestration layer (None before first fit)."""
+        return self._pipe
+
+    @property
+    def fitted(self) -> bool:
+        return self._pipe is not None and self._pipe._latents is not None
+
+    def fit(self, data: np.ndarray, verbose: bool = False) -> "GBATCCodec":
+        data = np.asarray(data)
+        if data.ndim != 4:
+            raise ValueError(
+                f"expected (S, T, H, W) species data, got "
+                f"{data.ndim}-d {type(data).__name__} of shape {data.shape}"
+                " (note: compress(target_nrmse=...) is keyword-only via the"
+                " data-first signature)"
             )
-        out = np.asarray(fn(params, jnp.asarray(chunk)))
-        outs.append(out[: batch - pad] if pad else out)
-    return np.concatenate(outs, axis=0)
+        if self._pipe is None or self._pipe.n_species != data.shape[0]:
+            self._pipe = GBATCPipeline(self.cfg, n_species=data.shape[0])
+        self._pipe.fit(data, verbose=verbose)
+        return self
+
+    def fit_stream(self, loader, verbose: bool = False, *,
+                   loader_retries: int = 2, retry_backoff: float = 0.1,
+                   _sleep=None) -> "GBATCCodec":
+        """Fit from time-chunked input without materializing the field.
+
+        ``loader`` must expose ``shape`` — the full (S, T, H, W) — and a
+        re-iterable ``chunks()`` yielding consecutive (S, Tc, H, W) time
+        chunks (each Tc divisible by the block geometry's ``bt``), e.g.
+        :class:`repro.data.s3d.S3DChunkLoader`. The fit is bit-identical
+        to ``fit(concatenate(chunks, axis=1))``.
+
+        Transient loader faults (I/O errors mid-iteration) restart the
+        failing pass from its beginning with exponential backoff — up to
+        ``loader_retries`` restarts per pass, ``retry_backoff`` seconds
+        doubling per attempt — and the result stays bit-identical to a
+        clean run (each pass is a pure function of the re-iterated
+        chunks). Shape/validation errors are never retried.
+        """
+        s = int(loader.shape[0])
+        if self._pipe is None or self._pipe.n_species != s:
+            self._pipe = GBATCPipeline(self.cfg, n_species=s)
+        self._pipe.fit_stream(
+            loader, verbose=verbose, loader_retries=loader_retries,
+            retry_backoff=retry_backoff, _sleep=_sleep,
+        )
+        return self
+
+    def compress(self, data: Optional[np.ndarray] = None,
+                 target_nrmse: float = 1e-3, **kw) -> bytes:
+        """Compress to container bytes; pass ``data`` to (re)fit first."""
+        blob, _ = self.compress_report(data, target_nrmse=target_nrmse, **kw)
+        return blob
+
+    def compress_report(
+        self, data: Optional[np.ndarray] = None,
+        target_nrmse: float = 1e-3, **kw,
+    ) -> tuple[bytes, CompressionReport]:
+        """Like :meth:`compress`, also returning the quality report."""
+        if data is not None:
+            self.fit(data)
+        if not self.fitted:
+            raise RuntimeError("codec not fitted: pass data or call fit() first")
+        rep = self._pipe.compress(target_nrmse=target_nrmse, **kw)
+        return rep.artifact.to_bytes(), rep
+
+    def write(self, path, data: Optional[np.ndarray] = None,
+              target_nrmse: float = 1e-3, **kw) -> bytes:
+        """Compress and atomically publish the container at ``path``
+        (tmp + fsync + rename — a crash can never leave a half-blob).
+        Pass ``data`` to (re)fit first. Returns the written bytes."""
+        from repro.codec.encode import write as write_file
+
+        blob = self.compress(data, target_nrmse=target_nrmse, **kw)
+        write_file(path, blob)
+        return blob
+
+    @staticmethod
+    def read(path, *, verify: bool = True) -> bytes:
+        """Read (and by default digest-verify) a container file; see
+        :func:`repro.codec.read`."""
+        from repro.codec.encode import read as read_file
+
+        return read_file(path, verify=verify)
+
+    @staticmethod
+    def decompress(blob: bytes, *, species=None, time_range=None,
+                   on_error: str = "raise"):
+        """Decode a container blob (stateless; see
+        :func:`repro.codec.decompress`).
+
+        ``species``/``time_range`` select a slice to decode
+        randomly-accessed, bitwise equal to slicing the full decode;
+        ``on_error="salvage"`` quarantines corruption and returns
+        ``(field, DecodeReport)``."""
+        from repro.codec.decode import decompress
+
+        return decompress(blob, species=species, time_range=time_range,
+                          on_error=on_error)

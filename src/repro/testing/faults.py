@@ -72,6 +72,9 @@ def blob_regions(blob: bytes, *, fine: bool = True) -> list:
     with internal random-access structure are additionally split into the
     units the v4 digests cover:
 
+    * ``meta`` (v5+): the one-byte encoder-family tag prefixing the
+      stream (a flipped tag must fail as provable meta corruption, never
+      decode through the wrong family);
     * ``latent`` (v3+): the head (framing + codebook + shard table) and
       each shard's chain payload (``unit=k``);
     * ``guarantee`` (v2+): the species directory and each species' spans
@@ -90,6 +93,12 @@ def blob_regions(blob: bytes, *, fine: bool = True) -> list:
         )
     if not fine:
         return regions
+    if r.version >= container_format.FORMAT_VERSION_FAMILY:
+        lo, _ = r.stream_extent("meta")
+        regions.append(Region(
+            RegionKind.META_FAMILY.label(), lo, lo + wire._META_FAMILY.size,
+            stream="meta",
+        ))
     if r.version >= container_format.FORMAT_VERSION_SHARDED:
         lo, _ = r.stream_extent("latent")
         d = wire.LatentShardDirectory(r["latent"])

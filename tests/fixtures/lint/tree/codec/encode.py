@@ -1,0 +1,7 @@
+"""Planted decode-purity violation: pipeline-module import (fixture)."""
+
+from repro.core.pipeline import CompressedArtifact  # planted: module import
+
+
+def _encode(artifact):
+    return CompressedArtifact, artifact

@@ -52,6 +52,7 @@ class TestFixtureRules(unittest.TestCase):
         self.assertEqual(sorted(self.by_rule["decode-purity"]), [
             ("codec/decode.py", 5),   # ambient default_config import
             ("codec/decode.py", 9),   # os.getenv on the decode path
+            ("codec/encode.py", 3),   # core.pipeline module import
             ("serve/decode_service.py", 5),  # ambient import in serve/
             ("serve/decode_service.py", 9),  # env read in serve/
         ])
@@ -87,7 +88,7 @@ class TestFixtureRules(unittest.TestCase):
         self.assertNotIn("clean.py", paths)
 
     def test_no_findings_beyond_the_plants(self):
-        self.assertEqual(len(self.result.findings), 15)
+        self.assertEqual(len(self.result.findings), 16)
 
     def test_inline_suppression_lands_in_suppressed(self):
         supp = [(f.rule, f.path) for f in self.result.suppressed]
@@ -153,8 +154,8 @@ class TestWireSchema(unittest.TestCase):
     def test_conformance_clean_on_live_layout(self):
         self.assertEqual(wire_schema.check_conformance(), [])
 
-    def test_conformance_covers_all_four_versions(self):
-        self.assertEqual(wire_schema.VERSIONS, (1, 2, 3, 4))
+    def test_conformance_covers_all_five_versions(self):
+        self.assertEqual(wire_schema.VERSIONS, (1, 2, 3, 4, 5))
         from repro.core import container as container_format
         self.assertEqual(tuple(container_format.SUPPORTED_VERSIONS),
                          wire_schema.VERSIONS)
@@ -169,8 +170,10 @@ class TestWireSchema(unittest.TestCase):
         self.assertEqual(v4, frozenset({
             "meta", "latent", "decoder", "guarantee", "integrity",
         }))
+        # v5 keeps v4's stream set (the family tag rides inside meta)
+        self.assertEqual(wire_schema.expected_stream_set(5, 3, False), v4)
         with self.assertRaises(ValueError):
-            wire_schema.expected_stream_set(5, 1, False)
+            wire_schema.expected_stream_set(6, 1, False)
 
     def test_mutated_live_magic_is_caught(self):
         from repro.core import container as container_format
@@ -227,7 +230,8 @@ class TestJaxprAuditRegressions(unittest.TestCase):
                 jaxpr_audit._audit_program(spec, report)
                 audited.append(spec.name)
         self.assertEqual(sorted(audited),
-                         ["fused_decode", "fused_decode_corrected"])
+                         ["fused_decode", "fused_decode_attention",
+                          "fused_decode_corrected"])
         self.assertEqual(report.findings, [])
         for name in audited:
             stats = report.programs[name]
@@ -283,7 +287,7 @@ class TestCLI(unittest.TestCase):
             with open(path, encoding="utf-8") as fh:
                 payload = json.load(fh)
             self.assertEqual(payload["rule_counts"]["determinism"], 4)
-            self.assertEqual(len(payload["new"]), 15)
+            self.assertEqual(len(payload["new"]), 16)
             self.assertIn("lint_wall_clock_s", payload)
         finally:
             os.unlink(path)

@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro import codec
+from repro.core import container as container_format
 from repro.core import gae, metrics
 from repro.core.container import (
     ContainerFormatError,
@@ -197,41 +198,58 @@ class TestCodecRoundTrip:
 
     def test_version_back_compat(self, blob_and_report):
         """v1 (per-species nested guarantee), v2 (single-chain latent),
-        and v3 (sharded, no digests) containers must decode
-        bit-identically to the default v4 integrity layout through the
-        same entry point; all four versions stay writable so round-trips
-        cover each."""
+        v3 (sharded, no digests), and v4 (integrity) containers must
+        decode bit-identically to the default v5 family layout through
+        the same entry point; all five versions stay writable so
+        round-trips cover each, and a conv-family v5 blob's payload
+        streams are byte-identical to the v4 encoding of the same fit
+        apart from the one-byte family tag (and the digests it shifts)."""
         blob, rep = blob_and_report
         blob_v1 = codec.encode(rep.artifact, version=1)
         blob_v2 = codec.encode(rep.artifact, version=2)
         blob_v3 = codec.encode(rep.artifact, version=3)
+        blob_v4 = codec.encode(rep.artifact, version=4)
         assert ContainerReader(blob_v1).version == 1
         assert ContainerReader(blob_v2).version == 2
         assert ContainerReader(blob_v3).version == 3
-        assert ContainerReader(blob).version == 4
+        assert ContainerReader(blob_v4).version == 4
+        r5, r4 = ContainerReader(blob), ContainerReader(blob_v4)
+        assert r5.version == 5
+        # conv v5 meta = family tag (conv=1) + the exact v4 meta bytes;
+        # every other payload stream except the digests is byte-identical
+        assert r5["meta"][:1] == b"\x01"
+        assert r5["meta"][1:] == r4["meta"]
+        for name in r4.names:
+            if name not in ("meta", "integrity"):
+                assert r5[name] == r4[name]
         assert len(blob_v2) < len(blob_v1)  # combined layout shaves framing
         full = codec.decompress(blob)
-        # full v4 decode == v3 decode == v2 decode BYTE for byte on one fit
+        # v5 decode == v4 == v3 == v2 decode BYTE for byte on one fit
+        assert codec.decompress(blob_v4).tobytes() == full.tobytes()
         assert codec.decompress(blob_v3).tobytes() == full.tobytes()
         assert codec.decompress(blob_v2).tobytes() == full.tobytes()
         np.testing.assert_array_equal(codec.decompress(blob_v1), full)
         bb1 = codec.stream_breakdown(blob_v1)
         bb2 = codec.stream_breakdown(blob_v2)
         bb3 = codec.stream_breakdown(blob_v3)
-        bb4 = codec.stream_breakdown(blob)
+        bb4 = codec.stream_breakdown(blob_v4)
+        bb5 = codec.stream_breakdown(blob)
         for key in ("decoder", "correction", "coeff", "index", "basis"):
-            assert bb1[key] == bb2[key] == bb3[key] == bb4[key]
+            assert bb1[key] == bb2[key] == bb3[key] == bb4[key] == bb5[key]
         # v1/v2 count the latent stream whole (inline Huffman header); v3+
         # buckets only the shard chain payloads as latent, the shared
         # codebook + shard table land in meta — parts still sum exactly
         assert bb1["latent"] == bb2["latent"] >= bb3["latent"]
-        assert bb3["latent"] == bb4["latent"]
-        # the v4 digests are the only delta vs v3 and land in meta
+        assert bb3["latent"] == bb4["latent"] == bb5["latent"]
+        # the v4 digests are the only delta vs v3 and land in meta; the
+        # v5 family tag adds exactly one more byte there
         assert bb4["meta"] > bb3["meta"]
+        assert bb5["meta"] == bb4["meta"] + 1
         assert bb1["total"] == len(blob_v1)
         assert bb2["total"] == len(blob_v2)
         assert bb3["total"] == len(blob_v3)
-        assert bb4["total"] == len(blob)
+        assert bb4["total"] == len(blob_v4)
+        assert bb5["total"] == len(blob)
 
     def test_compress_with_data_fits_first(self, small_data):
         c = codec.GBATCCodec(
@@ -364,16 +382,21 @@ class TestCorruption:
 
     def _rebuild(self, blob, mutate):
         """Re-emit the outer container with ``mutate(name, payload)``,
-        downgraded to v3 (integrity stream dropped): these tests pin the
+        downgraded to v3 (integrity stream dropped, v5 meta family tag
+        stripped back to the legacy layout): these tests pin the
         *structural* validation layer that pre-digest containers rely on
-        — on a v4 blob the digests would (correctly) catch the same
+        — on a v4+ blob the digests would (correctly) catch the same
         mutations first, which test_integrity.py covers."""
         r = ContainerReader(blob)
         w = ContainerWriter(version=min(r.version, 3))
+        family_ver = container_format.FORMAT_VERSION_FAMILY
         for name in r.names:
             if name == "integrity":
                 continue
-            res = mutate(name, r[name])
+            payload = r[name]
+            if name == "meta" and r.version >= family_ver:
+                payload = payload[1:]  # drop the tag; v3 meta is the body
+            res = mutate(name, payload)
             if res is not None:
                 w.add(name, res)
         return w

@@ -92,22 +92,27 @@ def _region(regions, label):
 
 
 class TestV4Wire:
-    def test_default_is_v4_and_verifies(self, blob):
-        assert ContainerReader(blob).version == 4
-        assert codec.verify_blob(blob) == 4
+    def test_default_is_v5_and_verifies(self, blob):
+        assert ContainerReader(blob).version == 5
+        assert codec.verify_blob(blob) == 5
 
     def test_below_v4_structural_only(self, blob_v3):
         # no digests to check: verify_blob is just the structural parse
         assert codec.verify_blob(blob_v3) == 3
 
     def test_stripping_digests_yields_exact_v3_blob(self, blob, blob_v3):
-        """The integrity stream is strictly additive: dropping it (and
-        the version bump) reproduces the v3 container byte for byte."""
+        """The v5 additions are strictly additive on a conv fit: dropping
+        the integrity stream, the meta family-tag byte, and the version
+        bump reproduces the v3 container byte for byte."""
         r = ContainerReader(blob)
         w = ContainerWriter(version=3)
         for name in r.names:
-            if name != "integrity":
-                w.add(name, r[name])
+            if name == "integrity":
+                continue
+            payload = r[name]
+            if name == "meta":
+                payload = payload[1:]  # the conv family tag
+            w.add(name, payload)
         assert w.to_bytes() == blob_v3
 
     def test_full_decode_bit_identical_to_v3(self, blob, blob_v3, clean):
@@ -121,16 +126,16 @@ class TestV4Wire:
             b = pd3.decode(species=sel, time_range=win)
             assert a.tobytes() == b.tobytes()
 
-    def test_fit_stream_writes_identical_v4(self, small_cfg, pipe_cfg,
-                                            fitted):
-        """The streaming-fit path lands on the same v4 bytes as the
-        materialized fit — the integrity layer is orthogonal to how the
-        model was trained."""
+    def test_fit_stream_writes_identical_blob(self, small_cfg, pipe_cfg,
+                                              fitted):
+        """The streaming-fit path lands on the same container bytes as
+        the materialized fit — the integrity layer is orthogonal to how
+        the model was trained."""
         loader = s3d.S3DChunkLoader(small_cfg, chunk_frames=4)
         c = codec.GBATCCodec(pipe_cfg).fit_stream(loader)
         blob_stream = c.compress(target_nrmse=1e-2)
         blob_full = fitted.compress(target_nrmse=1e-2)
-        assert ContainerReader(blob_stream).version == 4
+        assert ContainerReader(blob_stream).version == 5
         assert blob_stream == blob_full
 
     def test_digest_overhead_is_marginal(self, blob, blob_v3):
@@ -303,7 +308,7 @@ class TestSalvage:
 
     def test_clean_blob_salvage_is_clean_decode(self, blob, clean):
         field, rep = codec.decompress(blob, on_error="salvage")
-        assert rep.ok and rep.integrity and rep.version == 4
+        assert rep.ok and rep.integrity and rep.version == 5
         assert rep.quarantined == []
         assert field.tobytes() == clean.tobytes()
         for i, sr in rep.species.items():

@@ -156,7 +156,7 @@ class TestPartialDecoder:
         )
         assert pd.shape == full.shape
         assert pd.n_species == full.shape[0]
-        assert pd.version == 4  # writers default to the integrity layout
+        assert pd.version == 5  # writers default to the family layout
 
     def test_bytes_parsed_shrinks_with_selection(self, blob):
         pd = codec.PartialDecoder(blob)
@@ -204,6 +204,8 @@ class TestCorruptionIsolation:
             if name == "integrity":
                 continue
             payload = r[name]
+            if name == "meta" and r.version >= 5:
+                payload = payload[1:]  # drop the family tag for v3
             if name == "guarantee":
                 payload = _truncate_species_coeff(payload, sidx=2, keep=8)
             w.add(name, payload)

@@ -85,15 +85,18 @@ def _with_latent(blob: bytes, latent_payload: bytes) -> bytes:
     for name in r.names:
         if name == "integrity":
             continue
-        w.add(name, latent_payload if name == "latent" else r[name])
+        payload = latent_payload if name == "latent" else r[name]
+        if name == "meta" and r.version >= 5:
+            payload = payload[1:]  # drop the family tag for v3
+        w.add(name, payload)
     return w.to_bytes()
 
 
 class TestShardedEncode:
     def test_default_version_is_sharded(self, blob):
-        # v4 = the sharded v3 layout + an integrity stream
+        # v5 = the sharded v3 layout + integrity + a family tag
         r = ContainerReader(blob)
-        assert r.version == 4
+        assert r.version == 5
         assert "integrity" in r.names
         codec_format.LatentShardDirectory(r["latent"])  # sharded latents
 
