@@ -37,6 +37,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro import codec  # noqa: E402
+from repro.core import container  # noqa: E402
 from repro.core.container import ContainerReader  # noqa: E402
 from repro.core.pipeline import PipelineConfig  # noqa: E402
 from repro.data import s3d  # noqa: E402
@@ -91,11 +92,13 @@ def run(quick: bool = True, seed: int = 1):
     blobs = {tg: codec.encode(art, version=3, shard_tgroups=tg)
              for tg in shard_sizes}
     assert blobs[codec.DEFAULT_SHARD_TGROUPS] == blob_v3  # default shards
-    # the default writer is now v4 = this v3 layout + integrity digests,
-    # decoding bit-identically (the v4 delta is bench_integrity's subject)
-    assert ContainerReader(blob_default).version == 4
+    # the default writer is now v5 = this v3 layout + integrity digests
+    # (bench_integrity's subject) + the family tag (bench_families'),
+    # still decoding bit-identically
+    assert ContainerReader(blob_default).version == \
+        container.FORMAT_VERSION_FAMILY
     assert codec.decompress(blob_default).tobytes() == full_v2.tobytes(), \
-        "v4 default full decode != v2 decode byte-for-byte"
+        "default-version full decode != v2 decode byte-for-byte"
     for tg, b in blobs.items():
         full_v3 = codec.decompress(b)
         assert full_v3.tobytes() == full_v2.tobytes(), \

@@ -258,6 +258,37 @@ def bench_encoder_families(rows, full=False):
     ))
 
 
+def bench_mesh_scaling(rows, full=False):
+    """Mesh-sharded fit/compress: DP fit steps/s at 1/2/4/8 forced host
+    devices, sharded-vs-default compress wall-clock, quantized-vs-fp32
+    wire bytes; emits BENCH_mesh.json. The P=1 fit bit-identity, the
+    sharded-container byte-identity, and the parts-mode pack parity are
+    asserted inside the child before any number is reported."""
+    from benchmarks import bench_mesh
+
+    summary = bench_mesh.run(quick=not full)
+    best = max(summary["dp_fit"]["per_device_count"],
+               key=lambda c: c["steps_per_s"])
+    rows.append((
+        "mesh_dp_fit",
+        summary["dp_fit"]["per_device_count"][-1]["fit_s"] * 1e6,
+        f"best={best['steps_per_s']:.0f}steps/s"
+        f"@{best['n_devices']}dev cores={summary['cpu_cores']}",
+    ))
+    rows.append((
+        "mesh_sharded_compress",
+        summary["compress"]["sharded_engine_s"] * 1e6,
+        f"default_s={summary['compress']['default_engine_s']:.3f}"
+        f" byte_identical={summary['compress']['byte_identical']}",
+    ))
+    rows.append((
+        "mesh_wire_quantized",
+        0.0,
+        f"ratio_p2={summary['wire']['p2']['wire_ratio']:.2f}"
+        f" ratio_p8={summary['wire']['p8']['wire_ratio']:.2f}",
+    ))
+
+
 def bench_analysis_gate(rows):
     """Invariant checker (lint + wire schema + jaxpr audit) as a gate:
     zero non-baselined findings, or the whole run turns nonzero; emits
@@ -316,6 +347,7 @@ def main() -> None:
     guarded("integrity", bench_integrity_v4, rows, full=full)
     guarded("serve", bench_serve_service, rows, full=full)
     guarded("families", bench_encoder_families, rows, full=full)
+    guarded("mesh", bench_mesh_scaling, rows, full=full)
     guarded("analysis", bench_analysis_gate, rows)
     guarded("bench_sz", bench_sz, rows)
 

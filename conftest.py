@@ -1,0 +1,26 @@
+"""Root pytest conftest: opt-in forced host-device meshes.
+
+Setting ``REPRO_HOST_DEVICES=N`` (N > 1) makes the whole tier-1 suite —
+and the mesh-sharded fit/compress paths it exercises — run on an N-way
+forced host-platform device mesh, the CPU stand-in for a real
+accelerator pod. The flag must land in ``XLA_FLAGS`` before *any*
+``import jax`` anywhere in the process, which is why this lives in the
+repo-root conftest (imported by pytest before test collection) rather
+than in a fixture. ``python -m repro.analysis`` honors the same variable
+via the identical hook in ``repro/analysis/__main__.py``.
+"""
+
+import os
+
+
+def _force_host_devices() -> None:
+    n = os.environ.get("REPRO_HOST_DEVICES", "")
+    if not n.isdigit() or int(n) <= 1:
+        return
+    flag = f"--xla_force_host_platform_device_count={int(n)}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()
+
+
+_force_host_devices()

@@ -19,7 +19,10 @@ that still verifies while quarantining the rest (step 6 below). The
 encoder architecture itself is pluggable: containers are written in the
 v5 family layout, whose meta stream names the encoder family, so a
 block-attention codec rides the same wire format, guarantee engine, and
-selective decode as the conv default (step 8 below).
+selective decode as the conv default (step 8 below). For fields that
+outgrow one device, the whole fit/compress path shards over a
+``("data",)`` mesh — DP trainer, species-sharded guarantee engine,
+streamed sharded ingest — with byte-identical containers (step 9 below).
 
 Performance expectations (2-core CI-class CPU; see BENCH_throughput.json
 for the currently measured numbers): the 500-step fit below runs on the
@@ -216,6 +219,32 @@ def main():
           f"NRMSE {attn_per.max():.2e} — same container, same guarantee "
           "(see benchmarks/bench_families.py for the CR-vs-bound sweep "
           "against conv and SZ).")
+
+    # 9. mesh-sharded fit: the same pipeline over a ("data",) device mesh
+    #    — DP trainer programs, a species/row-sharded guarantee engine,
+    #    and streaming ingest that lands each chunk straight in a
+    #    row-sharded device buffer, so each device holds only NB/P block
+    #    rows and the full normalized field never exists on host. The
+    #    device count is locked at first jax init, so the demo runs in a
+    #    subprocess with 8 forced host devices; it prints the per-device
+    #    ingest memory high-water against the single-device total and the
+    #    sharded-compress NRMSE (container byte-identity with the
+    #    single-device engine is asserted in tier-1 and in
+    #    benchmarks/bench_mesh.py before any perf number).
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    mesh_demo = subprocess.run(
+        [sys.executable, "-m", "repro.parallel.mesh_fit"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert mesh_demo.returncode == 0, mesh_demo.stderr
+    print("\nmesh-sharded fit (8 forced host devices):")
+    print(mesh_demo.stdout.strip())
 
 
 if __name__ == "__main__":

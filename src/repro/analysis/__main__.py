@@ -20,6 +20,19 @@ import os
 import sys
 import time
 
+# REPRO_HOST_DEVICES=N forces an N-way host-platform device mesh, so the
+# audit's mesh-trainer / sharded-engine specs run multi-device on CPU.
+# Must be applied before the analyzer imports (which import jax); the
+# repo-root conftest.py carries the identical hook for pytest.
+_n_dev = os.environ.get("REPRO_HOST_DEVICES", "")
+if _n_dev.isdigit() and int(_n_dev) > 1 and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_n_dev)}"
+    ).strip()
+
 from repro.analysis import jaxpr_audit, wire_schema
 from repro.analysis.findings import apply_baseline, load_baseline, save_baseline
 from repro.analysis.lint import lint_tree

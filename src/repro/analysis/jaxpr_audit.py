@@ -15,12 +15,21 @@ resulting (closed) jaxprs:
 * **large folded constants**: a closed-over ndarray constant > 1 MiB
   means tracing captured data that should have been an argument;
 * **undonated carries**: the trainer programs must donate
-  ``(params, state)`` — checked via the ``tf.aliasing_output`` marker in
-  the lowered StableHLO text;
+  ``(params, state)`` — checked via the ``tf.aliasing_output`` /
+  ``jax.buffer_donor`` markers in the lowered StableHLO text;
+* **collectives where expected**: the mesh DP trainer program must
+  contain cross-device collectives (psum/all_gather/...) exactly when
+  the mesh spans more than one device — a 1-device mesh program with
+  collectives would break the P=1 bit-identity gate, a multi-device one
+  without them silently trains on per-shard gradients. The per-shard
+  guarantee kernels must stay collective-free (shards are independent
+  by construction). Runs under ``REPRO_HOST_DEVICES=8`` CI, both sides
+  of the expectation are exercised;
 * **retrace counting**: each cached program must trace exactly once
-  across representative call patterns (two ``fit`` calls, repeated fused
-  decode) — asserted with a tracing counter and ``jit``'s
-  ``_cache_size``.
+  across representative call patterns (two ``fit`` calls per mode —
+  including the mesh DP mode and the sharded guarantee engine's chunk
+  dispatches — and repeated fused decode) — asserted with a tracing
+  counter and ``jit``'s ``_cache_size``.
 
 Setup guard: the audit requires the default f32 world — it refuses to
 run (and reports) if ``jax_enable_x64`` is globally enabled, and
@@ -44,8 +53,18 @@ _CALLBACK_PRIMS = frozenset({
     "debug_callback", "pure_callback", "io_callback", "callback",
 })
 _TRANSFER_PRIMS = frozenset({"device_put", "infeed", "outfeed"})
+# prefix-matched: shard_map/jit lowerings have spelled these psum /
+# psum_invariant / all_gather(_invariant) across jax versions
+_COLLECTIVE_PREFIXES = (
+    "psum", "pmean", "all_gather", "all_reduce", "reduce_scatter",
+    "all_to_all", "ppermute",
+)
 _LARGE_CONST_BYTES = 1 << 20
-_DONATION_MARKER = "tf.aliasing_output"
+# single-device lowering resolves donation to tf.aliasing_output at
+# lowering time; multi-device (mesh) lowering defers aliasing to compile
+# and marks the donated inputs jax.buffer_donor instead — either proves
+# the carries are donated
+_DONATION_MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
 
 
 @dataclasses.dataclass
@@ -57,6 +76,7 @@ class ProgramStats:
     transfers: int = 0
     f64_eqns: int = 0
     const_bytes: int = 0
+    collectives: int = 0
     donated: Optional[bool] = None
 
 
@@ -77,6 +97,8 @@ def _walk_jaxpr(jaxpr, stats: ProgramStats) -> None:
             stats.callbacks[name] = stats.callbacks.get(name, 0) + 1
         if name in _TRANSFER_PRIMS:
             stats.transfers += 1
+        if name.startswith(_COLLECTIVE_PREFIXES):
+            stats.collectives += 1
         for var in eqn.outvars:
             aval = getattr(var, "aval", None)
             dtype = getattr(aval, "dtype", None)
@@ -123,6 +145,9 @@ class ProgramSpec:
     allow_f64: bool = False
     allow_debug_callback: bool = False
     check_donation: bool = False
+    # True: cross-device collectives REQUIRED; False: collectives
+    # FORBIDDEN; None: not checked
+    expect_collectives: Optional[bool] = None
 
 
 def _audit_program(spec: ProgramSpec, report: AuditReport) -> None:
@@ -163,14 +188,27 @@ def _audit_program(spec: ProgramSpec, report: AuditReport) -> None:
             f"program {spec.name!r} folds {stats.const_bytes} bytes of "
             f"constants into the trace (> {_LARGE_CONST_BYTES})",
         ))
+    if spec.expect_collectives is True and stats.collectives == 0:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"program {spec.name!r} contains no cross-device collectives "
+            f"but the mesh spans multiple devices — shards would train "
+            f"on unexchanged gradients",
+        ))
+    if spec.expect_collectives is False and stats.collectives:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"program {spec.name!r} contains {stats.collectives} "
+            f"collective(s) but must be device-independent",
+        ))
     if spec.check_donation and spec.lowered is not None:
         text = spec.lowered()
-        stats.donated = _DONATION_MARKER in text
+        stats.donated = any(m in text for m in _DONATION_MARKERS)
         if not stats.donated:
             report.findings.append(Finding(
                 RULE, here, 0,
                 f"program {spec.name!r} does not donate its carries "
-                f"(no {_DONATION_MARKER} in lowered text)",
+                f"(none of {_DONATION_MARKERS} in lowered text)",
             ))
 
 
@@ -249,6 +287,33 @@ def _program_specs() -> list:
         allow_debug_callback=True,
     ))
 
+    # mesh DP trainer programs: collectives present exactly when the mesh
+    # spans >1 device (REPRO_HOST_DEVICES=8 CI exercises the multi-device
+    # side), carries donated, no mid-program transfers. The quantized
+    # variant trades the psum for all_gather of int8 payload + scales.
+    from repro.parallel import mesh_fit
+
+    mesh = mesh_fit.host_mesh()
+    n_p = mesh_fit.mesh_size(mesh)
+    tr_mesh = train_loop.MiniBatchTrainer(loss_fn, ocfg, mode="scan")
+    run_mesh = tr_mesh._mesh_program(8, 32, 8, 0, mesh, False, 1)
+    specs.append(ProgramSpec(
+        name="trainer_mesh_dp",
+        build=lambda: (run_mesh, (params, state, bkey, blocks)),
+        lowered=lambda: run_mesh.lower(params, state, bkey, blocks).as_text(),
+        check_donation=True,
+        expect_collectives=(n_p > 1),
+    ))
+    run_mesh_q = tr_mesh._mesh_program(8, 32, 8, 0, mesh, True, 1)
+    specs.append(ProgramSpec(
+        name="trainer_mesh_dp_quantized",
+        build=lambda: (run_mesh_q, (params, state, bkey, blocks)),
+        lowered=lambda: run_mesh_q.lower(
+            params, state, bkey, blocks).as_text(),
+        check_donation=True,
+        expect_collectives=(n_p > 1),
+    ))
+
     # fused decode, with and without the correction network
     from repro.codec import runtime as rt_mod
 
@@ -314,6 +379,26 @@ def _program_specs() -> list:
                        (residual, coeffs, rank, m, basis)),
         allow_f64=True,
     ))
+
+    # the sharded guarantee engine's per-shard programs: the same batched
+    # kernels at a species/row chunk shape — they must stay collective-free
+    # (shards are independent; their concatenated outputs ARE the batched
+    # result, which is what makes the sharded container byte-identical)
+    specs.append(ProgramSpec(
+        name="gbatc_project_shard",
+        build=lambda: (partial(gk.gbatc_project_batched, interpret=True),
+                       (residual[:1], basis[:1])),
+        allow_f64=True,
+        expect_collectives=False,
+    ))
+    specs.append(ProgramSpec(
+        name="gbatc_select_accumulate_shard",
+        build=lambda: (partial(gk.gbatc_select_accumulate, interpret=True),
+                       (residual[:1], coeffs[:1], rank[:1], m[:1],
+                        basis[:1])),
+        allow_f64=True,
+        expect_collectives=False,
+    ))
     return specs
 
 
@@ -344,6 +429,55 @@ def _audit_retrace(report: AuditReport) -> None:
                     f"trainer mode {mode!r} program {key!r} holds "
                     f"{size} cache entries after two same-shape fits",
                 ))
+
+    # mesh DP trainer: two same-shape mesh fits trace the loss once and
+    # every cached mesh program holds one jit entry (retrace-exactly-once
+    # per mesh shape — a second mesh would legitimately add a program)
+    from repro.parallel import mesh_fit
+
+    mesh = mesh_fit.host_mesh()
+    traces["n"] = 0
+    tr = train_loop.MiniBatchTrainer(loss_fn, ocfg, mode="scan")
+    tr.fit(params, (blocks,), steps=4, batch_size=8, seed=0, mesh=mesh)
+    tr.fit(params, (blocks,), steps=4, batch_size=8, seed=1, mesh=mesh)
+    if traces["n"] != 1:
+        report.findings.append(Finding(
+            RULE, here, 0,
+            f"mesh trainer traced the loss {traces['n']}x across two "
+            f"same-shape mesh fits (expected 1)",
+        ))
+    for key, prog in tr._programs.items():
+        size = getattr(prog, "_cache_size", lambda: None)()
+        if size is not None and size != 1:
+            report.findings.append(Finding(
+                RULE, here, 0,
+                f"mesh trainer program {key!r} holds {size} cache "
+                f"entries after two same-shape fits",
+            ))
+
+    # sharded guarantee engine: chunk dispatches across two prepare/select
+    # rounds re-use one traced program per kernel per device (balanced
+    # chunking keeps every chunk the same shape; jit caches one executable
+    # per distinct committed device, so round-robin staging legitimately
+    # holds min(n_shards, n_devices) entries)
+    eng = mesh_fit.ShardedGuaranteeEngine(n_shards=2)
+    expected = min(eng._n_shards, len(eng._devices))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2, 8, 32))
+    x_rec = (x + 0.01 * rng.standard_normal((2, 8, 32))).astype(np.float32)
+    for tau in (0.01, 0.02):
+        prep = eng.prepare(x, x_rec)
+        eng.select(prep, tau)
+    for jit_name in ("_project_jit", "_correct_jit"):
+        prog = getattr(eng, jit_name)
+        size = getattr(prog, "_cache_size", lambda: None)()
+        if size is not None and size != expected:
+            report.findings.append(Finding(
+                RULE, here, 0,
+                f"sharded guarantee engine {jit_name} holds {size} cache "
+                f"entries after two chunked prepare/select rounds "
+                f"(expected {expected})",
+            ))
 
     # fused decode: repeated calls on one runtime re-use one executable
     import jax

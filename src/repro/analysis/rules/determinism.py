@@ -11,10 +11,12 @@ of ambient nondeterminism are banned:
   ``permutation``), and zero-argument ``default_rng()`` (OS-entropy
   seeded). Seeded ``np.random.default_rng(seed)`` and
   ``jax.random.PRNGKey`` are the sanctioned sources.
-* **Wall-clock in codec/core state** (``codec/``, ``core/`` only):
-  ``time.time``/``perf_counter``/``monotonic`` and ``datetime.now``/
-  ``utcnow`` — a timestamp reaching a cache key or a wire byte makes
-  identical inputs produce different artifacts. Benchmark and launch
+* **Wall-clock in codec/core/parallel state** (``codec/``, ``core/``,
+  ``parallel/``): ``time.time``/``perf_counter``/``monotonic`` and
+  ``datetime.now``/``utcnow`` — a timestamp reaching a cache key or a
+  wire byte makes identical inputs produce different artifacts, and the
+  mesh-sharded fit/compress programs (``parallel/``) carry the same
+  bit-identity gates as the single-device paths. Benchmark and launch
   code may time things freely.
 """
 
@@ -30,7 +32,7 @@ _NP_RANDOM_LEGACY = frozenset({
     "seed", "rand", "randn", "randint", "random", "normal", "uniform",
     "choice", "shuffle", "permutation", "random_sample", "standard_normal",
 })
-_CLOCK_SCOPES = ("codec/", "core/")
+_CLOCK_SCOPES = ("codec/", "core/", "parallel/")
 _TIME_FUNCS = frozenset({"time", "perf_counter", "monotonic"})
 _DATETIME_FUNCS = frozenset({"now", "utcnow", "today"})
 

@@ -367,7 +367,7 @@ def _pool() -> ThreadPoolExecutor:
 
 
 def pack_latent_stream(
-    latent_q: np.ndarray, shard_rows: int, *, parallel: Optional[bool] = None
+    latent_q, shard_rows: int, *, parallel: Optional[bool] = None
 ) -> bytes:
     """Pack quantized latents as the v3 time-sharded segmented stream.
 
@@ -378,29 +378,70 @@ def pack_latent_stream(
     construction, so they encode in parallel on the shared worker pool
     (``parallel=None`` decides by size; the output bytes are identical
     either way — each shard's payload is a pure function of its rows).
+
+    ``latent_q`` is one (NB, latent) array, or — from a sharded fit — a
+    *sequence of per-shard row blocks* sharing the column count. The
+    parts path never concatenates the full matrix on host: the codebook
+    merges per-part symbol counts (:func:`entropy.huffman_codebook_parts`)
+    and each Huffman chain assembles only its own shard's rows, so the
+    emitted bytes are identical to packing the concatenated array.
     """
-    latent_q = np.ascontiguousarray(np.asarray(latent_q, dtype=np.int64))
-    if latent_q.ndim != 2 or latent_q.size == 0:
-        raise ValueError(
-            f"latent_q must be a non-empty (NB, latent) array, "
-            f"got shape {latent_q.shape}"
-        )
-    nb, n_cols = latent_q.shape
+    if hasattr(latent_q, "ndim"):  # one (NB, latent) array (np or device)
+        latent_q = np.ascontiguousarray(np.asarray(latent_q, dtype=np.int64))
+        if latent_q.ndim != 2 or latent_q.size == 0:
+            raise ValueError(
+                f"latent_q must be a non-empty (NB, latent) array, "
+                f"got shape {latent_q.shape}"
+            )
+        parts = [latent_q]
+    else:
+        parts = [np.ascontiguousarray(np.asarray(p, dtype=np.int64))
+                 for p in latent_q]
+        if not parts or any(p.ndim != 2 or p.shape[0] == 0 for p in parts):
+            raise ValueError(
+                "latent_q parts must be non-empty 2-D row blocks, got "
+                f"shapes {[getattr(p, 'shape', None) for p in parts]}"
+            )
+        if len({p.shape[1] for p in parts}) != 1:
+            raise ValueError(
+                "latent_q parts disagree on the latent width: "
+                f"{sorted({p.shape[1] for p in parts})}"
+            )
+    bounds = []
+    row = 0
+    for p in parts:
+        bounds.append((row, row + p.shape[0]))
+        row += p.shape[0]
+    nb, n_cols = row, parts[0].shape[1]
+    if nb == 0 or n_cols == 0:
+        raise ValueError("latent_q must cover at least one row and column")
     shard_rows = int(min(max(int(shard_rows), 1), nb))
-    symbols, lengths = entropy.huffman_codebook(latent_q)
+    if len(parts) == 1:
+        symbols, lengths = entropy.huffman_codebook(parts[0])
+    else:
+        symbols, lengths = entropy.huffman_codebook_parts(parts)
     # canonical codes are shard-invariant: build the (python-loop) table
     # once here rather than once per shard inside the workers
     codes = entropy._canonical_codes(lengths)
     extents = [(r0, min(r0 + shard_rows, nb))
                for r0 in range(0, nb, shard_rows)]
 
-    def pack(ext):
-        return entropy.huffman_payload(
-            latent_q[ext[0]:ext[1]], symbols, lengths, codes
-        )
+    def rows_for(ext):
+        r0, r1 = ext
+        picked = [
+            p[max(r0, p0) - p0:min(r1, p1) - p0]
+            for (p0, p1), p in zip(bounds, parts)
+            if max(r0, p0) < min(r1, p1)
+        ]
+        # O(shard) concat only when a chain crosses a part boundary
+        return picked[0] if len(picked) == 1 else np.concatenate(picked)
 
+    def pack(ext):
+        return entropy.huffman_payload(rows_for(ext), symbols, lengths, codes)
+
+    total_size = nb * n_cols
     if parallel is None:
-        parallel = len(extents) > 1 and latent_q.size >= (1 << 15)
+        parallel = len(extents) > 1 and total_size >= (1 << 15)
     if parallel and len(extents) > 1:
         payloads = list(_pool().map(pack, extents))
     else:

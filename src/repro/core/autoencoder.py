@@ -134,12 +134,15 @@ def fit(
     seed: int = 0,
     log_every: int = 0,
     mode: Optional[str] = None,
+    mesh=None,
 ) -> tuple[Any, np.ndarray]:
     """Train the AE with AdamW on MSE. Returns (params, loss_history).
 
     Runs on the compiled mini-batch engine; ``mode`` picks "scan" / "stream"
     explicitly (default: by backend). The engine (and its compiled programs)
-    is cached on the model, so refitting is warm-start fast.
+    is cached on the model, so refitting is warm-start fast. ``mesh``
+    switches to the data-parallel mesh program (blocks sharded over the
+    mesh's data axis; bit-identical to ``mode="scan"`` on one device).
     """
     params = model.init(jax.random.PRNGKey(seed))
     key = (lr, steps, mode)
@@ -154,7 +157,7 @@ def fit(
         model._trainers[key] = trainer
     return trainer.fit(
         params, (blocks,), steps=steps, batch_size=batch_size, seed=seed,
-        log_every=log_every,
+        log_every=log_every, mesh=mesh,
     )
 
 

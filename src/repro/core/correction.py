@@ -97,11 +97,13 @@ def fit(
     seed: int = 1,
     log_every: int = 0,
     mode: Optional[str] = None,
+    mesh=None,
 ) -> tuple[Any, np.ndarray]:
     """Train the correction net on (reconstructed -> original) species
     vectors through the compiled mini-batch engine. Returns
     (params, loss_history); the trainer is cached on the network, so
-    refitting never re-traces."""
+    refitting never re-traces. ``mesh`` runs the data-parallel mesh
+    program (vector rows sharded over the data axis)."""
     params = net.init(jax.random.PRNGKey(seed))
     cache = net.__dict__.setdefault("_trainers", {})
     key = (lr, steps, mode)
@@ -116,7 +118,7 @@ def fit(
         cache[key] = trainer
     return trainer.fit(
         params, (x_rec, x_orig), steps=steps, batch_size=batch_size,
-        seed=seed, log_every=log_every,
+        seed=seed, log_every=log_every, mesh=mesh,
     )
 
 

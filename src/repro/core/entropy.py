@@ -204,6 +204,30 @@ def huffman_codebook(values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return symbols.astype(np.int64), _code_lengths(freqs)
 
 
+def huffman_codebook_parts(parts) -> tuple[np.ndarray, np.ndarray]:
+    """:func:`huffman_codebook` over a sequence of array parts without
+    concatenating them: per-part sorted-unique symbol counts merge into
+    the global (symbol, count) table, and Huffman tie-breaking orders by
+    (count, sorted-symbol index) either way — so the codebook is bitwise
+    the one ``huffman_codebook(concatenate(parts))`` builds. This is how
+    sharded fits feed the v3 latent stream: each shard's latent block
+    contributes counts, the full latent matrix never lands in one host
+    array."""
+    merged: dict[int, int] = {}
+    for part in parts:
+        values = np.asarray(part).ravel()
+        if values.size == 0:
+            continue
+        syms, counts = np.unique(values, return_counts=True)
+        for s, c in zip(syms.astype(np.int64), counts):
+            merged[int(s)] = merged.get(int(s), 0) + int(c)
+    if not merged:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    symbols = np.array(sorted(merged), dtype=np.int64)
+    freqs = np.array([merged[int(s)] for s in symbols], dtype=np.int64)
+    return symbols, _code_lengths(freqs)
+
+
 def huffman_payload(
     values: np.ndarray, symbols: np.ndarray, lengths: np.ndarray,
     codes: Optional[np.ndarray] = None,

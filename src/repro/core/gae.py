@@ -437,6 +437,25 @@ class GuaranteeEngine:
         self._correct_jit = jax.jit(correct_fn)
         self._apply_jit = jax.jit(apply_fn)
 
+    # -- dispatch/staging seams (subclass points for sharded engines) ----
+    def _stage(self, arr):
+        """Stage a prepared tensor for kernel dispatch. The default engine
+        keeps prepared tensors device-resident; a sharded engine
+        (``repro.parallel.mesh_fit.ShardedGuaranteeEngine``) keeps them on
+        host and chunk-uploads per dispatch instead."""
+        import jax.numpy as jnp
+
+        return jnp.asarray(arr)
+
+    def _dispatch(self, kernel: str, *args):
+        """Run one batched kernel program (``project`` / ``select`` /
+        ``correct`` / ``apply``). The default engine issues the single
+        batched jit; a sharded engine splits the batch over species and
+        block rows into per-shard programs — the kernels are per-species
+        and per-block-row pure, so the concatenated results are bitwise
+        the batched ones."""
+        return getattr(self, f"_{kernel}_jit")(*args)
+
     # -- tau-independent stage -----------------------------------------
     def prepare(
         self,
@@ -506,9 +525,10 @@ class GuaranteeEngine:
         basis_stale, _ = pca.pca_basis_stack(residual, executor=_pool())
 
         with enable_x64():
-            residual_dev = jnp.asarray(residual)
-            basis_dev = jnp.asarray(basis_stale)
-            coeffs_stale_dev = self._project_jit(residual_dev, basis_dev)
+            residual_dev = self._stage(residual)
+            basis_dev = self._stage(basis_stale)
+            coeffs_stale_dev = self._dispatch("project", residual_dev,
+                                              basis_dev)
             # np.array, not asarray: a zero-copy view of the jax buffer has
             # pathological ufunc throughput (unaligned); copy once here
             coeffs_stale = np.array(coeffs_stale_dev)
@@ -558,16 +578,16 @@ class GuaranteeEngine:
                 # S*NB*D fp64 transfer on the accelerator path
                 coeffs_dev=(
                     (coeffs_stale_dev if full_recompute
-                     else jnp.asarray(coeffs))
+                     else self._stage(coeffs))
                     if jit_backend else None
                 ),
                 coeffs_sorted_dev=(
-                    jnp.asarray(coeffs_sorted) if jit_backend else None
+                    self._stage(coeffs_sorted) if jit_backend else None
                 ),
-                inv_rank_dev=jnp.asarray(inv_rank),
-                norms2_dev=jnp.asarray(norms2) if jit_backend else None,
-                x_rec_dev=jnp.asarray(x_rec32),
-                basis32_dev=jnp.asarray(basis.astype(np.float32)),
+                inv_rank_dev=self._stage(inv_rank),
+                norms2_dev=self._stage(norms2) if jit_backend else None,
+                x_rec_dev=self._stage(x_rec32),
+                basis32_dev=self._stage(basis.astype(np.float32)),
             )
         return prepared
 
@@ -598,7 +618,8 @@ class GuaranteeEngine:
             )
         else:
             with enable_x64():
-                corrected, cq, m_eff, achieved = self._select_jit(
+                corrected, cq, m_eff, achieved = self._dispatch(
+                    "select",
                     prep.coeffs_dev,
                     prep.coeffs_sorted_dev,
                     prep.inv_rank_dev,
@@ -673,8 +694,10 @@ class GuaranteeEngine:
         tasks = [(sidx, r0) for sidx in range(s) for r0 in range(0, nb, chunk)]
         list(_pool().map(work, tasks))
         corrected = np.asarray(
-            self._correct_jit(
-                prep.x_rec_dev, cqv32, prep.inv_rank_dev, m_eff, prep.basis32_dev
+            self._dispatch(
+                "correct",
+                prep.x_rec_dev, cqv32, prep.inv_rank_dev, m_eff,
+                prep.basis32_dev,
             )
         )
         return corrected, cq, m_eff, achieved
@@ -770,8 +793,9 @@ class GuaranteeEngine:
         if all(art.coeff_q.size == 0 for art in arts):
             return x_rec.copy()
         dense, basis_pad = self.dense_corrections(arts, x_rec.shape)
-        out = self._apply_jit(
-            jnp.asarray(x_rec), jnp.asarray(dense), jnp.asarray(basis_pad)
+        out = self._dispatch(
+            "apply",
+            self._stage(x_rec), self._stage(dense), self._stage(basis_pad),
         )
         return np.asarray(out)
 

@@ -69,6 +69,14 @@ from repro.core import blocking, correction, gae, metrics
 from repro.core.quantization import dequantize, quantize, quantize_params
 
 
+def _host_alloc(shape, dtype):
+    """Host allocation seam for the streaming ingest buffer. The mesh
+    fit_stream path must never call this at full-field size (blocks land
+    sharded on device instead) — the allocation-tracking test hooks this
+    function to assert exactly that."""
+    return np.empty(shape, dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     geometry: blocking.BlockGeometry = blocking.PAPER_GEOMETRY
@@ -112,9 +120,10 @@ class GBATCPipeline:
     configs behave exactly as before.
     """
 
-    def __init__(self, cfg: PipelineConfig, n_species: int):
+    def __init__(self, cfg: PipelineConfig, n_species: int, mesh=None):
         self.cfg = cfg
         self.n_species = n_species
+        self.mesh = mesh
         self.family = _family(cfg.family)
         self.scfg = _structural(cfg)
         self.model = self.family.build_model(self.scfg, n_species, "2d")
@@ -128,7 +137,16 @@ class GBATCPipeline:
         # jitted once per instance: rebuilding jax.jit(...) per call would
         # re-trace (and re-compile) on every compress/decompress
         self._jit_encode = jax.jit(self.model.encode)
-        self._gengine = gae.default_engine()
+        if mesh is not None:
+            # mesh-sharded orchestration: DP trainer programs, a
+            # species/row-sharded guarantee engine, and sharded streaming
+            # ingest (fit_stream) — artifacts stay byte-identical to the
+            # single-device path (see repro.parallel.mesh_fit)
+            from repro.parallel.mesh_fit import ShardedGuaranteeEngine
+
+            self._gengine = ShardedGuaranteeEngine(mesh=mesh)
+        else:
+            self._gengine = gae.default_engine()
         # populated by fit()
         self._ae_params: Any = None
         self._corr_params: Any = None
@@ -148,6 +166,15 @@ class GBATCPipeline:
         self._packed_params: Optional[tuple] = None
 
     _PREPARED_CACHE_MAX = 4  # GBATC + GBA at a couple of latent bins
+
+    def set_guarantee_engine(self, engine) -> None:
+        """Swap the guarantee engine (e.g. a mesh-sharded one). Clears the
+        tau-independent prepared cache: PreparedGuarantee tensors are
+        staged per engine (device-resident vs host-chunked), so prepared
+        state never crosses engines."""
+        self._gengine = engine
+        self._prepared.clear()
+        self._last_prepared = None
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -253,25 +280,45 @@ class GBATCPipeline:
         per_frame = (h // geom.ph) * (w // geom.pw)
         nb = (t_total // geom.bt) * per_frame
 
-        def pass_blocks():
-            # preallocate and fill per chunk: peak memory stays one full
-            # block array plus one chunk, never the transient 2x a concat
-            # would cost. Allocated inside the pass so a restart refills
-            # from row 0 of a fresh array.
-            blocks = np.empty(
-                (nb, self.n_species, geom.bt, geom.ph, geom.pw), np.float32
-            )
-            row = 0
+        def normed_parts():
             for chunk in loader.chunks():
                 chunk = np.asarray(chunk)
                 normed = (
                     (chunk - mn[:, None, None, None])
                     / rngs[:, None, None, None]
                 ).astype(np.float32)
-                part = blocking.to_blocks(normed, geom)
-                blocks[row : row + part.shape[0]] = part
-                row += part.shape[0]
-            return blocks
+                yield blocking.to_blocks(normed, geom)
+
+        if self.mesh is not None:
+            from repro.parallel.mesh_fit import ShardedBlockStore
+
+            def pass_blocks():
+                # mesh ingest: each chunk's blocks land straight in the
+                # row-sharded device buffer — the host holds one chunk at
+                # a time and the full normalized field only ever exists
+                # sharded across the mesh. A restart refills a fresh store.
+                store = ShardedBlockStore(
+                    nb, (self.n_species, geom.bt, geom.ph, geom.pw),
+                    self.mesh,
+                )
+                for part in normed_parts():
+                    store.append(part)
+                return store.finish()
+        else:
+            def pass_blocks():
+                # preallocate and fill per chunk: peak memory stays one full
+                # block array plus one chunk, never the transient 2x a
+                # concat would cost. Allocated inside the pass so a restart
+                # refills from row 0 of a fresh array.
+                blocks = _host_alloc(
+                    (nb, self.n_species, geom.bt, geom.ph, geom.pw),
+                    np.float32,
+                )
+                row = 0
+                for part in normed_parts():
+                    blocks[row : row + part.shape[0]] = part
+                    row += part.shape[0]
+                return blocks
 
         blocks = retry_with_backoff(pass_blocks, **retry)
         return self._fit_blocks(
@@ -282,8 +329,18 @@ class GBATCPipeline:
     def _fit_blocks(self, blocks: np.ndarray, mn: np.ndarray,
                     rngs: np.ndarray, *, shape, data_nbytes: int,
                     data: Optional[np.ndarray], verbose: bool) -> dict:
-        """Shared fit body over normalized blocks (full or streamed input)."""
+        """Shared fit body over normalized blocks (full or streamed input).
+
+        ``blocks`` is a host array, or — on the mesh fit_stream path — a
+        row-sharded device array: then the trainers run their DP mesh
+        programs over it and the correction/guarantee feed tensors stay
+        device-resident transposed views (bitwise the host layouts, the
+        values being pure data movement away), so the full normalized
+        field is never materialized on host during fit.
+        """
         cfg = self.cfg
+        on_device = not isinstance(blocks, np.ndarray)
+        fit_kw = {} if self.mesh is None else {"mesh": self.mesh}
         params, losses = self.family.fit(
             self.model,
             blocks,
@@ -292,6 +349,7 @@ class GBATCPipeline:
             lr=cfg.lr,
             seed=cfg.seed,
             log_every=200 if verbose else 0,
+            **fit_kw,
         )
         # honest sub-fp32 storage: round params through the container's
         # storage dtype *before* any of them are used, so the latents,
@@ -304,14 +362,24 @@ class GBATCPipeline:
         if self.corr_net is not None:
             # decode through the shared fused runtime (one dispatch, no
             # chunked host round-trips); pointwise vecs are a transpose away
-            ae_vecs = self._decode_vecs(params, latents, None)
-            vec_rec = np.ascontiguousarray(
-                ae_vecs.transpose(1, 2, 0).reshape(-1, self.n_species)
-            )
-            vec_orig = correction.blocks_to_pointwise(blocks)
+            ae_vecs = self._decode_vecs(params, latents, None,
+                                        device=on_device)
+            nb, s = blocks.shape[:2]
+            if on_device:
+                vec_rec = ae_vecs.transpose(1, 2, 0).reshape(-1, s)
+                vec_orig = (
+                    blocks.reshape(nb, s, -1).transpose(0, 2, 1)
+                    .reshape(-1, s)
+                )  # blocks_to_pointwise, device-resident
+            else:
+                vec_rec = np.ascontiguousarray(
+                    ae_vecs.transpose(1, 2, 0).reshape(-1, self.n_species)
+                )
+                vec_orig = correction.blocks_to_pointwise(blocks)
             corr_params, _ = correction.fit(
                 self.corr_net, vec_rec, vec_orig,
                 steps=cfg.corr_steps, seed=cfg.seed + 1,
+                **fit_kw,
             )
             corr_params = quantize_params(corr_params, cfg.param_dtype_bytes)
 
@@ -319,7 +387,14 @@ class GBATCPipeline:
         self._corr_params = corr_params
         self._latents = latents
         self._blocks = blocks
-        self._vecs_orig = blocking.blocks_as_vectors(blocks)
+        if on_device:
+            nb, s = blocks.shape[:2]
+            # blocks_as_vectors, device-resident; gae.prepare converts at
+            # compress time (compress-stage host mirrors are by design —
+            # the out-of-core constraint is ingest/fit)
+            self._vecs_orig = blocks.reshape(nb, s, -1).transpose(1, 0, 2)
+        else:
+            self._vecs_orig = blocking.blocks_as_vectors(blocks)
         self._data = data
         self._shape = tuple(shape)
         self._data_nbytes = int(data_nbytes)
@@ -331,16 +406,19 @@ class GBATCPipeline:
 
     # ------------------------------------------------------------------
     def _decode_vecs(self, ae_params, latents: np.ndarray,
-                     corr_params=None) -> np.ndarray:
+                     corr_params=None, device: bool = False) -> np.ndarray:
         """Latents -> corrected (S, NB, D) vectors via the shared fused
         decode runtime (the same compiled program ``codec.decompress``
-        replays, so encode-side guarantees see bit-identical x_rec)."""
+        replays, so encode-side guarantees see bit-identical x_rec).
+        ``device=True`` skips the host fetch (mesh fit keeps the
+        correction feed device-resident)."""
         from repro import codec
 
         rt = codec._runtime(self.cfg, self.n_species,
                             corr_params is not None)
         lat32 = np.ascontiguousarray(np.asarray(latents, dtype=np.float32))
-        return np.asarray(codec._fused_vecs(rt, ae_params, corr_params, lat32))
+        out = codec._fused_vecs(rt, ae_params, corr_params, lat32)
+        return out if device else np.asarray(out)
 
     def _prepare_guarantee(self, latent_bin_rel: float, skip_correction: bool):
         """Decode + tau-independent guarantee prep, cached per sweep key.
@@ -445,7 +523,7 @@ class GBATCPipeline:
             # normalization makes the range exactly 1, so the normalized
             # block-vector RMS *is* the NRMSE (up to float rounding; the
             # guarantee itself is enforced in normalized units either way)
-            err = corrected - self._vecs_orig
+            err = corrected - np.asarray(self._vecs_orig)
             per_species = np.sqrt(np.mean(np.square(err), axis=(1, 2)))
         return CompressionReport(
             recon=recon.astype(np.float32),
@@ -525,10 +603,12 @@ class GBATCCodec:
     """
 
     def __init__(self, cfg: Optional[PipelineConfig] = None,
-                 n_species: Optional[int] = None):
+                 n_species: Optional[int] = None, mesh=None):
         self.cfg = cfg if cfg is not None else PipelineConfig()
+        self.mesh = mesh
         self._pipe: Optional[GBATCPipeline] = (
-            GBATCPipeline(self.cfg, n_species) if n_species is not None else None
+            GBATCPipeline(self.cfg, n_species, mesh=mesh)
+            if n_species is not None else None
         )
 
     @property
@@ -550,7 +630,8 @@ class GBATCCodec:
                 " data-first signature)"
             )
         if self._pipe is None or self._pipe.n_species != data.shape[0]:
-            self._pipe = GBATCPipeline(self.cfg, n_species=data.shape[0])
+            self._pipe = GBATCPipeline(self.cfg, n_species=data.shape[0],
+                                       mesh=self.mesh)
         self._pipe.fit(data, verbose=verbose)
         return self
 
@@ -574,7 +655,8 @@ class GBATCCodec:
         """
         s = int(loader.shape[0])
         if self._pipe is None or self._pipe.n_species != s:
-            self._pipe = GBATCPipeline(self.cfg, n_species=s)
+            self._pipe = GBATCPipeline(self.cfg, n_species=s,
+                                       mesh=self.mesh)
         self._pipe.fit_stream(
             loader, verbose=verbose, loader_retries=loader_retries,
             retry_backoff=retry_backoff, _sleep=_sleep,

@@ -229,6 +229,7 @@ def fit(
     seed: int = 0,
     log_every: int = 0,
     mode: Optional[str] = None,
+    mesh=None,
 ) -> tuple[Any, np.ndarray]:
     """Train with AdamW on MSE through the compiled mini-batch engine —
     the exact :func:`repro.core.autoencoder.fit` contract, so the
@@ -248,5 +249,5 @@ def fit(
         model._trainers[key] = trainer
     return trainer.fit(
         params, (blocks,), steps=steps, batch_size=batch_size, seed=seed,
-        log_every=log_every,
+        log_every=log_every, mesh=mesh,
     )

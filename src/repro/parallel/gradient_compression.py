@@ -7,12 +7,20 @@ quantization error is fed back into the next step's residual, so the method
 is unbiased over time (EF-SGD family) and the per-step l-inf error is bounded
 by scale/2 per block.
 
-Two integration modes:
+Three integration modes:
   * ``compress_tree`` — post-allreduce quantization inside the jit'd train
     step (models the numerics; SPMD collectives unchanged);
-  * ``quantized_all_reduce`` — shard_map all-gather of int8 shards + local
-    dequant-sum: the actual 4x wire saving for DP gradient exchange, used by
-    the hillclimb variants and validated in tests on an 8-device CPU mesh.
+  * ``quantized_psum`` — the per-shard exchange body (quantize, all-gather
+    int payload + scales, dequant-sum locally), callable *inside* an
+    enclosing ``shard_map`` — this is what the mesh DP trainer
+    (``parallel/mesh_fit.py``) routes its gradient exchange through when
+    ``quantized_exchange=True``;
+  * ``quantized_all_reduce`` — standalone ``shard_map(quantized_psum)``:
+    the actual 4x wire saving for DP gradient exchange, validated in tests
+    on an 8-device CPU mesh.
+
+Wire accounting for the DP exchange lives in
+``mesh_fit.dp_wire_report`` (static, from the gradient leaf shapes).
 """
 
 from __future__ import annotations
@@ -70,6 +78,32 @@ def compress_tree(grads, residuals, cfg: CompressionConfig):
             tree.unflatten([o[1] for o in outs]))
 
 
+def quantized_psum(local: jax.Array, axis: str = "data",
+                   n_bits: int = 8, block: int = 64) -> jax.Array:
+    """Quantized psum of a per-shard value, inside an enclosing shard_map.
+
+    The shard quantizes its local tensor (int payload + one fp32 scale per
+    ``block`` values), all-gathers the quantized payloads over ``axis``,
+    and sums the dequantized contributions locally — the wire carries
+    int8 + scales instead of fp32. Every shard returns the same full sum,
+    so this is a drop-in for ``jax.lax.psum`` (up to quantization error;
+    the mesh DP trainer's convergence test covers the numerics).
+    """
+    qmax = float(2 ** (n_bits - 1) - 1)
+    flat = local.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    xb = flat.reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), -1, keepdims=True), 1e-30) / qmax
+    q = jnp.clip(jnp.round(xb / scale), -qmax - 1, qmax).astype(jnp.int8)
+    q_all = jax.lax.all_gather(q, axis)  # (P, nb, block) int8 on the wire
+    s_all = jax.lax.all_gather(scale, axis)
+    total = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    return total.reshape(-1)[: local.size].reshape(local.shape).astype(
+        local.dtype)
+
+
 def quantized_all_reduce(x: jax.Array, mesh: Mesh, axis: str = "data",
                          n_bits: int = 8, block: int = 64) -> jax.Array:
     """All-reduce over `axis` with int8 wire format.
@@ -79,24 +113,10 @@ def quantized_all_reduce(x: jax.Array, mesh: Mesh, axis: str = "data",
     Wire volume: n*(P-1)/P bytes int8 + scales vs 2*n*(P-1)/P * 4 bytes for
     a ring all-reduce in fp32 -> ~8x reduction at 8 bits.
     """
-    qmax = float(2 ** (n_bits - 1) - 1)
-
-    def inner(local):
-        flat = local.reshape(-1).astype(jnp.float32)
-        pad = (-flat.size) % block
-        if pad:
-            flat = jnp.pad(flat, (0, pad))
-        xb = flat.reshape(-1, block)
-        scale = jnp.maximum(jnp.max(jnp.abs(xb), -1, keepdims=True), 1e-30) / qmax
-        q = jnp.clip(jnp.round(xb / scale), -qmax - 1, qmax).astype(jnp.int8)
-        q_all = jax.lax.all_gather(q, axis)  # (P, nb, block) int8 on the wire
-        s_all = jax.lax.all_gather(scale, axis)
-        total = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
-        return total.reshape(-1)[: local.size].reshape(local.shape).astype(
-            local.dtype)
-
     from jax.experimental.shard_map import shard_map
 
+    inner = functools.partial(quantized_psum, axis=axis, n_bits=n_bits,
+                              block=block)
     # input sharded on dim 0 over `axis`; every shard returns the full sum
     return shard_map(
         inner, mesh=mesh, in_specs=P(axis), out_specs=P(axis),

@@ -237,6 +237,20 @@ class MiniBatchTrainer:
             self._programs[key] = prog
         return prog
 
+    def _mesh_program(self, steps: int, n: int, bs: int, log_every: int,
+                      mesh, quantized: bool, n_data: int):
+        from repro.parallel import mesh_fit
+
+        key = ("mesh-scan", steps, n, bs, log_every, bool(quantized),
+               n_data, mesh_fit.mesh_cache_key(mesh))
+        prog = self._programs.get(key)
+        if prog is None:
+            prog = mesh_fit.dp_scan_program(
+                self, steps, n, bs, log_every, mesh, quantized, n_data
+            )
+            self._programs[key] = prog
+        return prog
+
     # -- the public entry ------------------------------------------------
     def fit(
         self,
@@ -247,12 +261,30 @@ class MiniBatchTrainer:
         batch_size: int,
         seed: int,
         log_every: int = 0,
+        mesh=None,
+        quantized_exchange: bool = False,
     ):
         """Run ``steps`` of SGD from ``params``; returns (params, losses).
 
         ``losses`` is a host float32 array of shape (steps,), fetched in one
         transfer after the run (no per-step sync).
+
+        ``mesh`` switches to the data-parallel program
+        (:func:`repro.parallel.mesh_fit.dp_scan_program`): rows are sharded
+        over the mesh's ``"data"`` axis, each shard draws its local batch
+        through the same :func:`batch_indices` law, and gradients are
+        exchanged as ``psum/P`` — int8-quantized with error-bounded block
+        scales when ``quantized_exchange`` is set (a no-op on a 1-device
+        mesh, where the program is bit-identical to ``mode="scan"``).
+        Global rows/batch are trimmed/rounded to multiples of the mesh
+        size.
         """
+        if mesh is not None:
+            return self._fit_mesh(
+                params, data, steps=steps, batch_size=batch_size, seed=seed,
+                log_every=log_every, mesh=mesh,
+                quantized_exchange=quantized_exchange,
+            )
         data = tuple(jnp.asarray(a) for a in data)
         n = int(data[0].shape[0])
         bs = min(batch_size, n)
@@ -279,6 +311,46 @@ class MiniBatchTrainer:
                 self._log_fn(t, float(loss))  # the only host sync, opt-in
         losses = np.asarray(jax.device_get(jnp.stack(losses)))
         return params, losses
+
+    def _fit_mesh(self, params, data, *, steps, batch_size, seed, log_every,
+                  mesh, quantized_exchange):
+        from repro.parallel import mesh_fit
+
+        n_p = mesh_fit.mesh_size(mesh)
+        data = tuple(jnp.asarray(a) for a in data)
+        n = int(data[0].shape[0])
+        if n_p > 1:
+            n = (n // n_p) * n_p  # equal per-shard row counts
+            if n == 0:
+                raise ValueError(
+                    f"{int(data[0].shape[0])} rows cannot shard over "
+                    f"{n_p} devices"
+                )
+            data = tuple(a[:n] for a in data)
+        bs = min(batch_size, n)
+        if n_p > 1:
+            bs = max((bs // n_p) * n_p, n_p)
+        bkey = batch_key(seed)
+        state = opt.init_state(params)
+        # copy both carries replicated over the mesh: the copies are
+        # donation-safe (device_put alone can alias an already-committed
+        # array, letting donation delete the caller's buffers) AND already
+        # laid out as the program's input sharding, so donation is honored
+        # rather than dropped on reshard
+        rep = mesh_fit.replicated(mesh)
+        copy = lambda t: jax.tree.map(
+            lambda a: jax.device_put(jnp.copy(a), rep), t)
+        params = copy(params)
+        state = copy(state)
+        if steps == 0:
+            return params, np.zeros(0, dtype=np.float32)
+        data = tuple(
+            jax.device_put(a, mesh_fit.data_sharding(mesh)) for a in data
+        )
+        run = self._mesh_program(steps, n, bs, log_every, mesh,
+                                 quantized_exchange, len(data))
+        params, state, losses = run(params, state, bkey, *data)
+        return params, np.asarray(jax.device_get(losses))
 
 
 def make_prefill_step(model):

@@ -152,12 +152,123 @@ def scenario_moe_ep_sharded():
     print("SCENARIO_OK moe_ep_sharded")
 
 
+def _mesh_fit_problem():
+    """Tiny linear-AE trainer problem shared by the mesh-fit scenarios."""
+    from repro.train import train_loop
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 12)).astype(np.float32)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {"w_enc": jax.random.normal(k1, (12, 4)) * 0.1,
+              "w_dec": jax.random.normal(k2, (4, 12)) * 0.1}
+
+    def loss_fn(p, b):
+        rec = b @ p["w_enc"] @ p["w_dec"]
+        return jnp.mean(jnp.square(rec - b))
+
+    tr = train_loop.MiniBatchTrainer(
+        loss_fn, train_loop.adamw_cfg(5e-3, 16), mode="scan")
+    return tr, params, x
+
+
+def scenario_mesh_dp_fit():
+    """DP fit over all 8 devices trains; a 1-device sub-mesh fit stays
+    bitwise the plain scan fit (the P=1 identity gate, on a real forced
+    mesh rather than the suite's default single device)."""
+    from repro.parallel import mesh_fit
+
+    tr, params, x = _mesh_fit_problem()
+    kw = dict(steps=16, batch_size=16, seed=0)
+    mesh8 = mesh_fit.host_mesh()
+    assert mesh_fit.mesh_size(mesh8) == 8
+    _, l8 = tr.fit(params, (x,), mesh=mesh8, **kw)
+    assert np.isfinite(l8).all() and l8[-1] < l8[0]
+    p_ref, l_ref = tr.fit(params, (x,), **kw)
+    p1, l1 = tr.fit(params, (x,), mesh=mesh_fit.host_mesh(1), **kw)
+    np.testing.assert_array_equal(l_ref, l1)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("SCENARIO_OK mesh_dp_fit")
+
+
+def scenario_mesh_quantized_fit():
+    """DP fit with the int8 quantized gradient exchange on 8 devices:
+    trains to a finite decreasing loss, and the static wire accounting
+    shows the exchange is the cheaper one for realistically-sized params."""
+    from repro.parallel import mesh_fit
+
+    tr, params, x = _mesh_fit_problem()
+    mesh8 = mesh_fit.host_mesh()
+    _, losses = tr.fit(params, (x,), steps=16, batch_size=16, seed=0,
+                       mesh=mesh8, quantized_exchange=True)
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
+    big = {"w": np.zeros((256, 256), np.float32)}
+    # the int8 all-gather beats the fp32 ring all-reduce at small P (the
+    # ring moves ~2n bytes regardless of P, the gather P*n/4); at P=8 the
+    # two are a wash — assert each regime where it actually holds, plus
+    # the ~4x win over an fp32 all-gather of the same pattern
+    rep2 = mesh_fit.dp_wire_report(big, 2)
+    assert rep2["wire_ratio"] > 3.5
+    rep8 = mesh_fit.dp_wire_report(big, 8)
+    fp32_gather = 7 * rep8["grad_fp32_bytes"]
+    assert rep8["quantized_bytes_per_step"] < fp32_gather / 3.5
+    print("SCENARIO_OK mesh_quantized_fit")
+
+
+def scenario_mesh_sharded_compress():
+    """Sharded guarantee engine with chunks placed across all 8 devices:
+    the serialized container is byte-identical to the default engine's."""
+    from repro.core.pipeline import GBATCPipeline, PipelineConfig
+    from repro.data import s3d
+    from repro.parallel import mesh_fit
+
+    data = s3d.generate(s3d.S3DConfig(
+        n_species=4, n_time=8, height=20, width=16, seed=5))["species"]
+    cfg = PipelineConfig(ae_steps=40, corr_steps=20, conv_channels=(8, 16))
+    pipe = GBATCPipeline(cfg, n_species=4)
+    pipe.fit(data)
+    ref = pipe.compress(target_nrmse=1e-3).artifact.to_bytes()
+    pipe.set_guarantee_engine(
+        mesh_fit.ShardedGuaranteeEngine(mesh=mesh_fit.host_mesh()))
+    got = pipe.compress(target_nrmse=1e-3).artifact.to_bytes()
+    assert got == ref, "sharded compress drifted from the default engine"
+    print("SCENARIO_OK mesh_sharded_compress")
+
+
+def scenario_mesh_fit_stream():
+    """Mesh fit_stream on 8 devices: ingest lands row-sharded across the
+    full mesh, the compressed output meets the bound, and re-compressing
+    the same fitted state on the default engine is byte-identical."""
+    from repro.core import gae
+    from repro.core.pipeline import GBATCPipeline, PipelineConfig
+    from repro.data import s3d
+    from repro.parallel import mesh_fit
+
+    scfg = s3d.S3DConfig(n_species=4, n_time=8, height=20, width=16, seed=5)
+    loader = s3d.S3DChunkLoader(scfg, chunk_frames=4)
+    cfg = PipelineConfig(ae_steps=30, corr_steps=15, conv_channels=(8, 16))
+    pipe = GBATCPipeline(cfg, n_species=4, mesh=mesh_fit.host_mesh())
+    pipe.fit_stream(loader)
+    devs = {int(s.device.id) for s in pipe._blocks.addressable_shards}
+    assert len(devs) == 8, f"ingest store only spans devices {devs}"
+    rep = pipe.compress(target_nrmse=1e-3)
+    assert rep.mean_nrmse <= 1e-3 * (1 + 1e-3)
+    ref = rep.artifact.to_bytes()
+    pipe.set_guarantee_engine(gae.default_engine())
+    assert pipe.compress(target_nrmse=1e-3).artifact.to_bytes() == ref
+    print("SCENARIO_OK mesh_fit_stream")
+
+
 SCENARIOS = {
     "sharded_train_step": scenario_sharded_train_step,
     "quantized_all_reduce": scenario_quantized_all_reduce,
     "checkpoint_elastic": scenario_checkpoint_elastic,
     "dryrun_small_mesh": scenario_dryrun_small_mesh,
     "moe_ep_sharded": scenario_moe_ep_sharded,
+    "mesh_dp_fit": scenario_mesh_dp_fit,
+    "mesh_quantized_fit": scenario_mesh_quantized_fit,
+    "mesh_sharded_compress": scenario_mesh_sharded_compress,
+    "mesh_fit_stream": scenario_mesh_fit_stream,
 }
 
 if __name__ == "__main__":

@@ -44,6 +44,10 @@ def _run_scenario(name, timeout=420):
     "checkpoint_elastic",
     "dryrun_small_mesh",
     "moe_ep_sharded",
+    "mesh_dp_fit",
+    "mesh_quantized_fit",
+    "mesh_sharded_compress",
+    "mesh_fit_stream",
 ])
 def test_multi_device_scenario(scenario):
     _run_scenario(scenario)

@@ -1,0 +1,297 @@
+"""Mesh-sharded fit/compress: bit-identity gates and out-of-core ingest.
+
+Everything here runs on whatever device set the process has — one CPU
+device by default, eight under ``REPRO_HOST_DEVICES=8`` (root conftest).
+The P=1 gates pin the mesh programs to a 1-device sub-mesh explicitly,
+so they are binding in both configurations; the multi-device tests skip
+on a single device and light up under the forced mesh. The 8-device
+end-to-end scenarios (DP fit, sharded compress, sharded fit_stream) also
+run as subprocess scenarios in test_distribution.py.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.codec import format as fmt
+from repro.core import gae
+from repro.core import pipeline as pipeline_mod
+from repro.core.pipeline import GBATCPipeline, PipelineConfig
+from repro.data import s3d
+from repro.parallel import mesh_fit
+from repro.train import train_loop
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 2, reason="needs a multi-device mesh (REPRO_HOST_DEVICES=8)"
+)
+
+
+def _problem(seed=0):
+    """Tiny linear-AE training problem for trainer-level gates."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((32, 12)).astype(np.float32)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    params = {
+        "w_enc": jax.random.normal(k1, (12, 4)) * 0.1,
+        "w_dec": jax.random.normal(k2, (4, 12)) * 0.1,
+    }
+
+    def loss_fn(p, batch):
+        rec = batch @ p["w_enc"] @ p["w_dec"]
+        return jnp.mean(jnp.square(rec - batch))
+
+    return params, x, loss_fn
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+class TestDPTrainer:
+    def test_p1_mesh_fit_bitwise_vs_scan(self):
+        """The 1-device mesh program traces trainer._step verbatim, so the
+        loss trajectory AND every param leaf are bitwise the plain scan
+        fit — quantized exchange included (a trace-time no-op at P=1)."""
+        params, x, loss_fn = _problem()
+        ocfg = train_loop.adamw_cfg(1e-3, 6)
+        tr = train_loop.MiniBatchTrainer(loss_fn, ocfg, mode="scan")
+        kw = dict(steps=6, batch_size=8, seed=0)
+        p_ref, l_ref = tr.fit(params, (x,), **kw)
+        mesh = mesh_fit.host_mesh(1)
+        p_mesh, l_mesh = tr.fit(params, (x,), mesh=mesh, **kw)
+        assert np.array_equal(l_ref, l_mesh)
+        assert _trees_equal(p_ref, p_mesh)
+        p_q, l_q = tr.fit(params, (x,), mesh=mesh, quantized_exchange=True,
+                          **kw)
+        assert np.array_equal(l_ref, l_q)
+        assert _trees_equal(p_ref, p_q)
+
+    def test_p1_fit_does_not_invalidate_caller_params(self):
+        """The mesh program donates its carries; the trainer must copy, so
+        a caller-held params tree survives two mesh fits."""
+        params, x, loss_fn = _problem()
+        tr = train_loop.MiniBatchTrainer(
+            loss_fn, train_loop.adamw_cfg(1e-3, 4), mode="scan"
+        )
+        mesh = mesh_fit.host_mesh(1)
+        for seed in (0, 1):
+            tr.fit(params, (x,), steps=4, batch_size=8, seed=seed, mesh=mesh)
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(params))
+
+    @multi_device
+    def test_dp_fit_runs_and_trains(self):
+        """Full-mesh DP fit: finite, decreasing losses; odd row counts are
+        trimmed to a multiple of the mesh size rather than erroring."""
+        params, x, loss_fn = _problem()
+        x_odd = np.concatenate([x, x[:3]])  # 35 rows, not divisible by 8
+        tr = train_loop.MiniBatchTrainer(
+            loss_fn, train_loop.adamw_cfg(5e-3, 12), mode="scan"
+        )
+        mesh = mesh_fit.host_mesh()
+        p_dp, losses = tr.fit(params, (x_odd,), steps=12,
+                              batch_size=16, seed=0, mesh=mesh)
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0]
+        _, l_q = tr.fit(params, (x_odd,), steps=12, batch_size=16, seed=0,
+                        mesh=mesh, quantized_exchange=True)
+        assert np.isfinite(l_q).all()
+
+    @multi_device
+    def test_dp_program_rejects_indivisible_extents(self):
+        params, x, loss_fn = _problem()
+        tr = train_loop.MiniBatchTrainer(
+            loss_fn, train_loop.adamw_cfg(1e-3, 4), mode="scan"
+        )
+        mesh = mesh_fit.host_mesh()
+        with pytest.raises(ValueError, match="must divide"):
+            mesh_fit.dp_scan_program(tr, 4, 33, 8, 0, mesh, False)
+
+    def test_dp_wire_report_static_accounting(self):
+        params = {"a": np.zeros(64, np.float32), "b": np.zeros(10, np.float32)}
+        rep = mesh_fit.dp_wire_report(params, 8, n_bits=8, block=64)
+        assert rep["grad_fp32_bytes"] == 74 * 4
+        # both leaves round up to one 64-value block: 64 int8 + 4 scale
+        assert rep["quantized_bytes_per_step"] == (68 + 68) * 7
+        assert rep["fp32_bytes_per_step"] == 2 * 74 * 4 * 7 // 8
+        assert rep["wire_ratio"] == pytest.approx(
+            rep["fp32_bytes_per_step"] / rep["quantized_bytes_per_step"]
+        )
+        rep1 = mesh_fit.dp_wire_report(params, 1)
+        assert rep1["quantized_bytes_per_step"] == 0
+        assert rep1["wire_ratio"] == float("inf")
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    cfg = s3d.S3DConfig(n_species=4, n_time=8, height=20, width=16, seed=5)
+    return s3d.generate(cfg)["species"]
+
+
+@pytest.fixture(scope="module")
+def fitted_pipe(small_data):
+    cfg = PipelineConfig(ae_steps=40, corr_steps=20, conv_channels=(8, 16))
+    pipe = GBATCPipeline(cfg, n_species=small_data.shape[0])
+    pipe.fit(small_data)
+    return pipe
+
+
+class TestShardedEngine:
+    def test_container_byte_identity_across_shard_counts(self, fitted_pipe):
+        """The species/row-chunked dispatches concatenate to the exact
+        batched artifact: serialized containers match byte for byte —
+        n_shards=3 splits species only, n_shards=5 also splits rows."""
+        ref = fitted_pipe.compress(target_nrmse=1e-3).artifact.to_bytes()
+        try:
+            for n_shards in (3, 5):
+                fitted_pipe.set_guarantee_engine(
+                    mesh_fit.ShardedGuaranteeEngine(n_shards=n_shards)
+                )
+                got = fitted_pipe.compress(
+                    target_nrmse=1e-3
+                ).artifact.to_bytes()
+                assert got == ref, f"container drift at n_shards={n_shards}"
+        finally:
+            fitted_pipe.set_guarantee_engine(gae.default_engine())
+
+    @multi_device
+    def test_container_byte_identity_on_mesh(self, fitted_pipe):
+        """Same gate with chunks actually placed across the 8 devices."""
+        ref = fitted_pipe.compress(target_nrmse=1e-3).artifact.to_bytes()
+        try:
+            fitted_pipe.set_guarantee_engine(
+                mesh_fit.ShardedGuaranteeEngine(mesh=mesh_fit.host_mesh())
+            )
+            got = fitted_pipe.compress(target_nrmse=1e-3).artifact.to_bytes()
+            assert got == ref
+        finally:
+            fitted_pipe.set_guarantee_engine(gae.default_engine())
+
+    def test_chunk_plan_covers_exactly(self):
+        for s, nb, n in [(4, 32, 3), (4, 32, 5), (2, 7, 8), (1, 1, 8)]:
+            chunks = mesh_fit._chunk_plan(s, nb, n)
+            cover = np.zeros((s, nb), np.int32)
+            for s0, s1, r0, r1 in chunks:
+                cover[s0:s1, r0:r1] += 1
+            assert (cover == 1).all(), (s, nb, n)
+
+
+class TestMeshFitStream:
+    SCFG = dict(n_species=4, n_time=8, height=20, width=16, seed=5)
+    PCFG = dict(ae_steps=30, corr_steps=15, conv_channels=(8, 16))
+
+    def test_no_full_field_host_allocation(self, monkeypatch):
+        """Mesh ingest lands chunks straight in the sharded device store:
+        the host-buffer seam is never called, while the plain streaming
+        path allocates the full block array through it (proving the seam
+        is live, not dead code)."""
+        scfg = s3d.S3DConfig(**self.SCFG)
+        loader = s3d.S3DChunkLoader(scfg, chunk_frames=4)
+        allocs = []
+        orig = pipeline_mod._host_alloc
+
+        def spy(shape, dtype):
+            allocs.append(int(np.prod(shape)) * np.dtype(dtype).itemsize)
+            return orig(shape, dtype)
+
+        monkeypatch.setattr(pipeline_mod, "_host_alloc", spy)
+        cfg = PipelineConfig(**self.PCFG)
+        pipe = GBATCPipeline(cfg, n_species=4, mesh=mesh_fit.host_mesh())
+        pipe.fit_stream(loader)
+        assert allocs == [], "mesh fit_stream touched the host block buffer"
+        assert isinstance(pipe._blocks, jax.Array)
+        assert mesh_fit.DATA_AXIS in tuple(pipe._blocks.sharding.spec)
+        rep = pipe.compress(target_nrmse=1e-3)
+        assert rep.mean_nrmse <= 1e-3 * (1 + 1e-3)
+
+        plain = GBATCPipeline(cfg, n_species=4)
+        plain.fit_stream(loader)
+        geom = cfg.geometry
+        full = 32 * 4 * geom.block_size * 4  # NB * S * (bt*ph*pw) * f32
+        assert allocs and max(allocs) == full
+
+    def test_p1_container_bitwise_vs_plain_stream(self, monkeypatch):
+        """On a 1-device mesh the whole streamed fit/compress — DP trainer
+        programs, sharded store, sharded engine — serializes to the exact
+        container the plain path produces. The plain side's trainers are
+        pinned to scan mode: the mesh program is the scan program, and on
+        CPU the default stream mode matches scan only to ~1e-4."""
+        orig_init = train_loop.MiniBatchTrainer.__init__
+
+        def scan_init(self, loss_fn, ocfg, *, mode=None, **kw):
+            orig_init(self, loss_fn, ocfg, mode="scan", **kw)
+
+        monkeypatch.setattr(train_loop.MiniBatchTrainer, "__init__",
+                            scan_init)
+        scfg = s3d.S3DConfig(**self.SCFG)
+        loader = s3d.S3DChunkLoader(scfg, chunk_frames=4)
+        cfg = PipelineConfig(**self.PCFG)
+
+        plain = GBATCPipeline(cfg, n_species=4)
+        plain.fit_stream(loader)
+        ref = plain.compress(target_nrmse=1e-3).artifact.to_bytes()
+
+        meshed = GBATCPipeline(cfg, n_species=4, mesh=mesh_fit.host_mesh(1))
+        meshed.fit_stream(loader)
+        got = meshed.compress(target_nrmse=1e-3).artifact.to_bytes()
+        assert got == ref
+
+
+class TestShardedBlockStore:
+    def test_fill_and_finish(self):
+        mesh = mesh_fit.host_mesh(1)
+        store = mesh_fit.ShardedBlockStore(8, (3,), mesh)
+        parts = [np.full((4, 3), i, np.float32) for i in range(2)]
+        store.append(parts[0])
+        with pytest.raises(ValueError, match="4 of 8"):
+            store.finish()
+        store.append(parts[1])
+        buf = store.finish()
+        assert np.array_equal(np.asarray(buf), np.concatenate(parts))
+        with pytest.raises(ValueError, match="overflows"):
+            store.append(np.zeros((1, 3), np.float32))
+        assert sum(store.per_device_bytes().values()) == buf.nbytes
+
+    @multi_device
+    def test_rejects_indivisible_rows(self):
+        with pytest.raises(ValueError, match="does not divide"):
+            mesh_fit.ShardedBlockStore(33, (3,), mesh_fit.host_mesh())
+
+    @multi_device
+    def test_sharded_fill_matches_concat(self):
+        mesh = mesh_fit.host_mesh()
+        store = mesh_fit.ShardedBlockStore(32, (5,), mesh)
+        rng = np.random.default_rng(0)
+        parts = [rng.standard_normal((8, 5)).astype(np.float32)
+                 for _ in range(4)]
+        for p in parts:
+            store.append(p)
+        buf = store.finish()
+        assert len(set(store.per_device_bytes())) == N_DEV
+        assert np.array_equal(np.asarray(buf), np.concatenate(parts))
+
+
+class TestPackLatentParts:
+    def test_parts_mode_bitwise_parity(self):
+        """Per-shard latent blocks pack to the byte-exact stream the full
+        array packs to, even when part boundaries straddle shard chains."""
+        rng = np.random.default_rng(0)
+        lat = rng.integers(-40, 40, size=(100, 36)).astype(np.int32)
+        ref = fmt.pack_latent_stream(lat, 7, parallel=False)
+        parts = [lat[0:33], lat[33:64], lat[64:100]]
+        got = fmt.pack_latent_stream(parts, 7, parallel=False)
+        assert got == ref
+        fmt.LatentShardDirectory(got)  # stream head stays parseable
+
+    def test_parts_validation(self):
+        lat = np.zeros((8, 4), np.int32)
+        with pytest.raises(ValueError):
+            fmt.pack_latent_stream([], 4)
+        with pytest.raises(ValueError):
+            fmt.pack_latent_stream([lat[:4], lat[4:, :2]], 4)
